@@ -1,0 +1,122 @@
+"""Per-kernel benchmark: interpret-mode correctness + structural roofline.
+
+This container has no TPU, so wall-clock kernel timing is meaningless for
+the target; instead each kernel reports
+  * max |err| vs its ref.py oracle on a production-proportioned tile,
+  * per-grid-step VMEM working set (must be ≪ 128 MiB),
+  * arithmetic intensity (FLOPs/HBM byte) and the v5e roofline verdict
+    (compute-bound iff intensity > peak_flops/HBM_bw ≈ 240),
+  * HBM-traffic advantage over the unfused XLA path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.peer_score import cosine_gram
+from repro.kernels.ref import cosine_gram_ref, flash_attention_ref, wkv_ref
+from repro.kernels.wkv_chunked import wkv_chunked
+from repro.utils.hw import TPU_V5E
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+RIDGE = TPU_V5E.peak_flops_bf16 / TPU_V5E.hbm_bandwidth  # ≈ 240 FLOP/B
+
+
+def bench_flash(bq=128, bkv=128, hd=128, seq=512):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, seq, 4, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (1, seq, 2, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (1, seq, 2, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_kv=bkv,
+                          interpret=True)
+    err = float(jnp.max(jnp.abs(out - flash_attention_ref(q, k, v))))
+    vmem = (bq * hd + 2 * bkv * hd) * 2 + (bq * hd + 2 * bq) * 4 + bq * hd * 2
+    # per kv-block step: 2·bq·bkv·hd (qk) + 2·bq·bkv·hd (pv) FLOPs over
+    # bkv·hd·2·2 bytes of fresh k/v reads (q/acc stay in VMEM)
+    flops = 4 * bq * bkv * hd
+    bytes_ = 2 * bkv * hd * 2
+    return {
+        "kernel": "flash_attention", "max_err": err,
+        "vmem_bytes_per_step": vmem,
+        "arith_intensity": flops / bytes_,
+        "compute_bound_on_v5e": flops / bytes_ > RIDGE,
+        "hbm_advantage": "no (B,H,S,S) materialization: "
+                         f"S={seq} saves {4 * seq * seq * 4 / 2**20:.0f} "
+                         "MiB/head vs naive",
+    }
+
+
+def bench_gram(m=100, p=1 << 16, bm=128, bp=512):
+    x = jax.random.normal(jax.random.PRNGKey(1), (min(m, 32), 4096))
+    g = cosine_gram(x, block_m=8, block_p=512, interpret=True)
+    err = float(jnp.max(jnp.abs(g - cosine_gram_ref(x))))
+    flops = 2 * bm * bm * bp
+    bytes_ = 2 * bm * bp * 2           # two (bm, bp) bf16 tiles
+    return {
+        "kernel": "peer_score(cosine_gram)", "max_err": err,
+        "vmem_bytes_per_step": 2 * bm * bp * 2 + bm * bm * 4,
+        "arith_intensity": flops / bytes_,
+        "compute_bound_on_v5e": flops / bytes_ > RIDGE,
+        "hbm_advantage": "one data pass; norms from Gram diagonal — the "
+                         "flatten+normalize XLA path reads the (M, P) "
+                         "header matrix twice",
+    }
+
+
+def bench_wkv(c=64, hd=64):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    shape = (1, 256, 2, hd)
+    r, k, v = (jax.random.normal(ks[i], shape) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], shape))
+    u = jax.random.normal(ks[4], (2, hd)) * 0.3
+    out, st = wkv_chunked(r, k, v, w, u, chunk=c, interpret=True)
+    ro, rs = wkv_ref(r, k, v, w, u)
+    err = float(
+        max(jnp.max(jnp.abs(out - ro)), jnp.max(jnp.abs(st - rs)))
+    )
+    # per chunk: state matmuls 2·(2·C·hd·hd) + intra-chunk ≈ 2·C²·hd FLOPs
+    # over 4·C·hd·4 bytes of fresh r/k/v/w reads (state stays in VMEM)
+    flops = 4 * c * hd * hd + 2 * c * c * hd
+    bytes_ = 4 * c * hd * 4
+    return {
+        "kernel": "wkv_chunked", "max_err": err,
+        "vmem_bytes_per_step": 4 * c * hd * 4 + hd * hd * 4
+        + c * c * hd * 4,
+        "arith_intensity": flops / bytes_,
+        "compute_bound_on_v5e": flops / bytes_ > RIDGE,
+        "hbm_advantage": f"state (hd², f32) stays in VMEM for {c} steps: "
+                         f"{c}× fewer state round-trips than the per-token "
+                         "scan (the rwkv6 train_4k baseline's 6.8e3 s "
+                         "memory term)",
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(RESULTS, "kernels.json"))
+    args = ap.parse_args(argv)
+    rows = [bench_flash(), bench_gram(), bench_wkv()]
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"{'kernel':26s}{'max_err':>10s}{'VMEM/step':>12s}"
+          f"{'FLOP/B':>8s}  bound    note")
+    for r in rows:
+        print(f"{r['kernel']:26s}{r['max_err']:10.1e}"
+              f"{r['vmem_bytes_per_step'] / 2**20:10.2f}Mi"
+              f"{r['arith_intensity']:8.0f}  "
+              f"{'compute' if r['compute_bound_on_v5e'] else 'memory':8s}"
+              f" {r['hbm_advantage'][:60]}")
+    assert all(r["max_err"] < 1e-2 for r in rows)
+    assert all(r["vmem_bytes_per_step"] < TPU_V5E.vmem_bytes for r in rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

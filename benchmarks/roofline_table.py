@@ -1,0 +1,85 @@
+"""§Roofline deliverable — formats the dry-run JSONL into the per-(arch ×
+shape × mesh) three-term table, with bottleneck + useful-FLOPs ratio and a
+one-line what-would-move-it note per row.
+
+Reads benchmarks/results/dryrun.jsonl (produced by
+``python -m repro.launch.dryrun --all --mesh both --out ...``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+NOTES = {
+    ("compute",): "raise arithmetic intensity (bigger per-chip tiles) or "
+                  "shrink redundant compute (remat policy)",
+    ("memory",): "cut HBM round-trips: fuse/chunk the dominant loop, keep "
+                 "state in VMEM, wider microbatch per chip",
+    ("collective",): "re-shard to kill the biggest all-gather, or overlap "
+                     "collectives with compute (async)",
+}
+
+
+def load(path):
+    with open(path) as f:
+        return [json.loads(l) for l in f]
+
+
+def fmt_row(r):
+    return (
+        f"{r['arch']:26s}{r['shape']:13s}{r['mesh']:11s}"
+        f"{r['t_compute_s']:10.2e}{r['t_memory_s']:10.2e}"
+        f"{r['t_collective_s']:10.2e}  {r['bottleneck']:10s}"
+        f"{r['useful_flops_ratio']:8.3f}"
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp",
+                    default=os.path.join(RESULTS, "dryrun.jsonl"))
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.inp):
+        print(f"no dry-run results at {args.inp} — run "
+              f"`python -m repro.launch.dryrun --all --mesh both --out "
+              f"{args.inp}` first")
+        return []
+
+    recs = load(args.inp)
+    rows = [r for r in recs if r["status"] == "ok"
+            and (args.mesh is None or r["mesh"] == args.mesh)]
+    skips = [r for r in recs if r["status"] == "skipped"
+             and (args.mesh is None or r["mesh"] == args.mesh)]
+
+    print(f"{'arch':26s}{'shape':13s}{'mesh':11s}{'t_compute':>10s}"
+          f"{'t_memory':>10s}{'t_coll':>10s}  {'bottleneck':10s}"
+          f"{'useful':>8s}")
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        print(fmt_row(r))
+    for r in skips:
+        print(f"{r['arch']:26s}{r['shape']:13s}{r['mesh']:11s}"
+              f"{'— skipped: ' + r['reason']}")
+
+    # aggregate verdicts
+    from collections import Counter
+
+    c = Counter(r["bottleneck"] for r in rows)
+    print(f"\nbottleneck census: {dict(c)}")
+    worst = sorted(rows, key=lambda r: -max(
+        r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]))[:3]
+    print("worst dominant terms:")
+    for r in worst:
+        t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        print(f"  {r['arch']} × {r['shape']} × {r['mesh']}: "
+              f"{r['bottleneck']} {t:.2e}s — "
+              f"{NOTES[(r['bottleneck'],)]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

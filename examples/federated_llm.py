@@ -1,0 +1,83 @@
+"""Federated LLM personalization — PFedDST on an assigned LLM backbone.
+
+The framework angle of the paper: clients hold heterogeneous TEXT domains
+(disjoint vocab slices + shared background); PFedDST federates the trunk
+(extractor) while each client keeps a personal lm_head+final_norm (header).
+The header-cosine score then finds same-domain peers.
+
+    PYTHONPATH=src python examples/federated_llm.py --arch qwen2-1.5b
+    PYTHONPATH=src python examples/federated_llm.py --arch rwkv6-7b
+
+Any of the 10 assigned architectures works (reduced variant on CPU).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import FLConfig
+from repro.core import init_population, make_phase_steps, pfeddst_round
+from repro.core.scoring import flatten_headers, header_distance_matrix
+from repro.data.synthetic import synth_tokens
+from repro.models import model as model_mod
+from repro.models.split import merge_params
+from repro.optim.sgd import sgd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--domains", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    fl = FLConfig(num_clients=args.clients, peers_per_round=2, batch_size=8,
+                  client_sample_ratio=1.0, lr=0.05, probe_size=4)
+    key = jax.random.PRNGKey(args.seed)
+
+    tokens, domains = synth_tokens(
+        key, args.clients, cfg.vocab_size, args.seq_len,
+        seqs_per_client=32, num_domains=args.domains,
+    )
+    train = {"tokens": tokens}
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"client domains: {domains.tolist()}")
+
+    opt = sgd(fl.lr, momentum=fl.momentum, weight_decay=fl.weight_decay)
+    state = init_population(cfg, key, args.clients, opt, opt)
+    steps = make_phase_steps(cfg, opt)
+    round_fn = jax.jit(
+        lambda s, k: pfeddst_round(cfg, fl, steps, s, train, k,
+                                   probe_size=fl.probe_size)
+    )
+    for r in range(args.rounds):
+        state, metrics = round_fn(state, jax.random.fold_in(key, r))
+        print(f"round {r}: loss_e={float(metrics['train_loss_e']):.3f} "
+              f"loss_h={float(metrics['train_loss_h']):.3f}")
+
+    # do headers cluster by domain? (the paper's Eq. 7 rationale)
+    s_d = header_distance_matrix(flatten_headers(state.header))
+    same = domains[:, None] == domains[None, :]
+    off = ~jnp.eye(args.clients, dtype=bool)
+    same_mean = float(jnp.sum(jnp.where(same & off, s_d, 0))
+                      / jnp.sum(same & off))
+    diff_mean = float(jnp.sum(jnp.where(~same, s_d, 0)) / jnp.sum(~same))
+    print(f"header cosine: same-domain={same_mean:.4f} "
+          f"cross-domain={diff_mean:.4f} "
+          f"(same > cross ⇒ the score finds task structure)")
+
+    params = jax.vmap(merge_params)(state.extractor, state.header)
+    loss0 = model_mod.eval_loss(
+        cfg, jax.tree_util.tree_map(lambda x: x[0], params),
+        {"tokens": tokens[0, :4]},
+    )
+    print(f"client-0 local eval loss: {float(loss0):.3f}")
+
+
+if __name__ == "__main__":
+    main()

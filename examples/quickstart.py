@@ -1,0 +1,61 @@
+"""Quickstart — the PFedDST public API in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a 6-client population on synthetic non-IID CIFAR, runs 3 PFedDST
+communication rounds (score → select → aggregate → two-phase train), and
+prints the selection masks + personalized accuracy.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import FLConfig
+from repro.core import init_population, make_phase_steps, pfeddst_round
+from repro.data.synthetic import client_datasets_cifar
+from repro.fl import evaluate_population
+from repro.models.split import merge_params
+from repro.optim.sgd import sgd
+
+
+def main():
+    # 1. model + FL config (paper §III-A hyper-parameters, smoke scale)
+    cfg = get_config("resnet18-cifar").reduced()
+    fl = FLConfig(num_clients=6, peers_per_round=2, batch_size=16,
+                  client_sample_ratio=0.5, probe_size=8)
+
+    # 2. non-IID data: each client sees 2 of 10 classes (pathological)
+    key = jax.random.PRNGKey(0)
+    data = client_datasets_cifar(
+        key, fl.num_clients, classes_per_client=2,
+        samples_per_class=40, image_size=16,
+    )
+    train = {"images": data["train_x"], "labels": data["train_y"]}
+
+    # 3. population state: per-client (extractor, header, optimizer, context)
+    opt = sgd(fl.lr, momentum=fl.momentum, weight_decay=fl.weight_decay)
+    state = init_population(cfg, key, fl.num_clients, opt, opt)
+    steps = make_phase_steps(cfg, opt)
+
+    # 4. communication rounds (Algorithm 1), jit'd end-to-end
+    round_fn = jax.jit(
+        lambda s, k: pfeddst_round(cfg, fl, steps, s, train, k,
+                                   probe_size=fl.probe_size)
+    )
+    for r in range(3):
+        state, metrics = round_fn(state, jax.random.fold_in(key, r))
+        sel = jnp.asarray(metrics["select_mask"]).astype(int)
+        print(f"round {r}: loss_e={float(metrics['train_loss_e']):.3f} "
+              f"selections per active client = {sel.sum(1).tolist()}")
+
+    # 5. personalized evaluation: client i's model on client i's test data
+    params = jax.vmap(merge_params)(state.extractor, state.header)
+    acc, per_client = evaluate_population(
+        cfg, params, data["test_x"], data["test_y"]
+    )
+    print(f"personalized accuracy: mean={float(acc):.3f} "
+          f"per-client={[round(float(a), 2) for a in per_client]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Checkpointing — pytree ↔ npz with a JSON treedef manifest.
+
+Path-keyed npz entries (no pickle). Restore optionally re-shards leaves onto
+a mesh via a pytree of NamedShardings. Atomic writes (tmp + rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.utils.pytree import tree_paths
+
+
+def _sanitize(path: str) -> str:
+    return path.replace("/", "__")
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: dict | None = None):
+    """Write <dir>/ckpt_<step>.npz (+ .json manifest). Returns the path.
+
+    bfloat16 leaves are stored as uint16 bit patterns (npz has no bf16);
+    the manifest records the true dtype per path for restore.
+    """
+    os.makedirs(directory, exist_ok=True)
+    pairs = tree_paths(tree)
+    arrays, dtypes = {}, {}
+    for p, x in pairs:
+        a = np.asarray(x)
+        dtypes[p] = str(a.dtype)
+        if a.dtype.name == "bfloat16":
+            a = a.view(np.uint16)
+        arrays[_sanitize(p)] = a
+    manifest = {
+        "step": int(step),
+        "paths": [p for p, _ in pairs],
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    base = os.path.join(directory, f"ckpt_{step:08d}")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz.tmp")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, base + ".npz")
+    with open(base + ".json", "w") as f:
+        json.dump(manifest, f)
+    return base + ".npz"
+
+
+def load_checkpoint(path: str, like=None, shardings=None):
+    """Load a checkpoint.
+
+    like: a pytree with the same structure (its treedef is reused) —
+    required to reconstruct nesting. shardings: optional matching pytree of
+    NamedShardings for sharded device_put.
+    Returns (tree, manifest).
+    """
+    with open(path.replace(".npz", ".json")) as f:
+        manifest = json.load(f)
+    data = np.load(path)
+    import ml_dtypes
+
+    by_path = {}
+    for p in manifest["paths"]:
+        a = data[_sanitize(p)]
+        if manifest.get("dtypes", {}).get(p) == "bfloat16":
+            a = a.view(ml_dtypes.bfloat16)
+        by_path[p] = a
+    if like is None:
+        return by_path, manifest
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    pairs = tree_paths(like)
+    assert len(pairs) == len(flat)
+    leaves = [by_path[p] for p, _ in pairs]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings
+        )
+    else:
+        tree = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+    return tree, manifest
+
+
+def latest_checkpoint(directory: str):
+    if not os.path.isdir(directory):
+        return None
+    ckpts = [
+        f for f in os.listdir(directory) if re.match(r"ckpt_\d+\.npz$", f)
+    ]
+    if not ckpts:
+        return None
+    return os.path.join(directory, sorted(ckpts)[-1])

@@ -1,0 +1,208 @@
+"""Model/run configuration dataclasses.
+
+One `ModelConfig` covers all six assigned architecture families:
+dense / moe / ssm (rwkv6) / hybrid (recurrentgemma) / audio (whisper enc-dec)
+/ vlm (internvl) — plus the paper's own CNN (resnet18_cifar).
+
+`reduced()` produces the CPU-smoke variant required per architecture
+(≤2 layers, d_model ≤ 512, ≤4 experts) of the *same family*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm | cnn
+    num_layers: int
+    d_model: int
+    num_heads: int
+    d_ff: int
+    vocab_size: int
+    num_kv_heads: int = 0          # 0 → MHA (= num_heads)
+    head_dim: int = 0              # 0 → d_model // num_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    act: str = "silu"
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    source: str = ""               # citation bracket from the assignment
+
+    # --- MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0              # per-expert FFN width (0 → d_ff)
+    moe_dispatch: str = "gather"   # "gather" (prod) | "einsum" (GShard ref)
+
+    # --- MLA (deepseek) ------------------------------------------------------
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- SSM (rwkv6) ---------------------------------------------------------
+    ssm_head_dim: int = 64
+
+    # --- hybrid (recurrentgemma) ----------------------------------------------
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    window_size: int = 0                  # local attention window
+    lru_width: int = 0                    # 0 → d_model
+
+    # --- encoder-decoder (whisper) ---------------------------------------------
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500        # stub frame-embedding sequence length
+
+    # --- modality frontend stub (audio/vlm) -------------------------------------
+    frontend: str = "none"         # none | audio_stub | vision_stub
+    num_prefix_tokens: int = 0     # vision patch tokens prepended to text
+
+    # --- CNN (paper's own resnet) -------------------------------------------------
+    cnn_stages: Tuple[int, ...] = ()      # blocks per stage
+    cnn_width: int = 64
+    image_size: int = 32
+    image_channels: int = 3
+    num_classes: int = 0
+
+    # -----------------------------------------------------------------------
+    def __post_init__(self):
+        if self.num_kv_heads == 0 and self.num_heads:
+            object.__setattr__(self, "num_kv_heads", self.num_heads)
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.moe_d_ff == 0 and self.num_experts:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+
+    # -----------------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Embed/lm_head array vocab dim, padded to a 256-multiple so the
+        vocab dim always divides the TP axis (16/32-way). Padded positions
+        are ordinary never-observed classes (MaxText-style); cfg.vocab_size
+        stays the assignment's exact value for token sampling and analytic
+        param counts."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve long_500k (sub-quadratic decode state)?"""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def n_rep(self) -> int:
+        """GQA repetition factor."""
+        return max(1, self.num_heads // max(1, self.num_kv_heads))
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for roofline MODEL_FLOPS = 6·N·D)."""
+        from repro.models.model import count_params  # lazy: avoids cycle
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_params
+        return count_params(self, active_only=True)
+
+    # -----------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Same-family CPU smoke variant: ≤2 layers, d_model ≤ 512, ≤4 experts."""
+        d_model = min(self.d_model, 256)
+        heads = min(self.num_heads, 4)
+        kv = min(self.num_kv_heads, heads)
+        head_dim = max(8, d_model // heads) if heads else 0
+        changes = dict(
+            name=self.name + "-smoke",
+            num_layers=min(self.num_layers, 2),
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 32),
+            num_prefix_tokens=min(self.num_prefix_tokens, 8),
+            window_size=min(self.window_size, 16) if self.window_size else 0,
+            lru_width=0,
+        )
+        if self.num_experts:
+            changes.update(
+                num_experts=min(self.num_experts, 4),
+                num_experts_per_tok=min(self.num_experts_per_tok, 2),
+                num_shared_experts=min(self.num_shared_experts, 1),
+                moe_d_ff=min(self.moe_d_ff, 256),
+            )
+        if self.use_mla:
+            changes.update(
+                q_lora_rank=min(self.q_lora_rank, 64) or 0,
+                kv_lora_rank=min(self.kv_lora_rank, 64),
+                qk_nope_head_dim=32,
+                qk_rope_head_dim=16,
+                v_head_dim=32,
+            )
+        if self.block_pattern:
+            pattern = self.block_pattern[:3]
+            changes.update(block_pattern=pattern, num_layers=len(pattern))
+        if self.family == "cnn":
+            changes.update(cnn_stages=(1, 1), cnn_width=16)
+        return dataclasses.replace(self, **changes)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Federated-learning run config (the paper's Section III setup)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FLConfig:
+    num_clients: int = 100
+    num_rounds: int = 500
+    peers_per_round: int = 10          # |M_i|
+    client_sample_ratio: float = 0.1
+    batch_size: int = 128
+    epochs_extractor: int = 5          # K_e
+    epochs_header: int = 1             # K_h
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 0.005
+    # Eq. 8/9 score hyper-parameters
+    alpha: float = 1.0                 # loss-score scale
+    comm_cost: float = 1.0             # c (equal cost between clients, §III-A)
+    recency_lambda: float = 0.5        # λ
+    selection: str = "topk"            # "topk" | "threshold" | "random"
+    score_threshold: float = 0.0       # s*  (used when selection == "threshold")
+    probe_size: int = 32               # per-client probe batch for s_l (Eq. 6)
+    classes_per_client: int = 2        # pathological partition
+    seed: int = 0

@@ -1,0 +1,23 @@
+"""The paper's own model: ResNet-18 on CIFAR (PFedDST §III uses ResNet-18).
+
+GroupNorm replaces BatchNorm (FL-safe under aggregation — DESIGN.md §2).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="resnet18-cifar",
+    family="cnn",
+    num_layers=18,
+    d_model=512,             # final feature width
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=0,
+    cnn_stages=(2, 2, 2, 2),
+    cnn_width=64,
+    image_size=32,
+    image_channels=3,
+    num_classes=10,
+    source="paper §III (He et al. 2016 ResNet-18)",
+)

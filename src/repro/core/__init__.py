@@ -1,0 +1,34 @@
+"""PFedDST core — the paper's contribution as composable JAX modules.
+
+scoring      — Eq. 6 (loss disparity), Eq. 7 (header cosine), Eq. 8 (recency)
+selection    — Eq. 9 combination + top-k / threshold peer choice
+aggregation  — masked extractor averaging across the client axis
+partial_freeze — Eq. 3/4 two-phase (e-then-h) frozen training steps
+rounds       — the full Algorithm 1 round, vmapped over the population
+client_state — the per-client context arrays (loss l, recency t)
+"""
+from repro.core.scoring import (
+    header_distance_matrix,
+    loss_disparity_matrix,
+    recency_scores,
+)
+from repro.core.selection import combined_scores, select_peers, update_recency
+from repro.core.aggregation import aggregate_extractors, selection_to_weights
+from repro.core.partial_freeze import make_phase_steps
+from repro.core.client_state import PopulationState, init_population
+from repro.core.rounds import pfeddst_round
+
+__all__ = [
+    "header_distance_matrix",
+    "loss_disparity_matrix",
+    "recency_scores",
+    "combined_scores",
+    "select_peers",
+    "update_recency",
+    "aggregate_extractors",
+    "selection_to_weights",
+    "make_phase_steps",
+    "PopulationState",
+    "init_population",
+    "pfeddst_round",
+]

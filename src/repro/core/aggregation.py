@@ -1,0 +1,58 @@
+"""Extractor aggregation across the client axis (Algorithm 1 line 6).
+
+Client i averages its own extractor with those of its selected peers:
+    e_i ← Σ_{j ∈ M_i ∪ {i}} w_ij · e_j,   w row-stochastic.
+
+Population mode: one einsum per leaf — on the production mesh, with clients
+sharded along "data", this einsum IS the federated exchange collective
+(XLA lowers it to an all-gather/reduce pattern over the client axis; the
+roofline §collective term tracks it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selection_to_weights(select_mask, *, include_self: bool = True,
+                         data_fractions=None):
+    """bool (M,M) → row-stochastic float32 (M,M) aggregation weights.
+
+    data_fractions: optional (M,) n_j weights (Eq. 5 weighting); None =
+    simple average (the paper's 'e.g., simple average').
+    """
+    m = select_mask.shape[0]
+    w = select_mask.astype(jnp.float32)
+    if include_self:
+        w = jnp.maximum(w, jnp.eye(m, dtype=jnp.float32))
+    if data_fractions is not None:
+        w = w * data_fractions[None, :]
+    denom = jnp.sum(w, axis=1, keepdims=True)
+    return w / jnp.maximum(denom, 1e-12)
+
+
+def aggregate_extractors(stacked_extractor, weights):
+    """e_i ← Σ_j w_ij e_j per leaf. stacked_extractor: leading-M pytree."""
+
+    def agg(leaf):
+        wf = weights.astype(jnp.float32)
+        out = jnp.einsum(
+            "ij,j...->i...", wf, leaf.astype(jnp.float32)
+        )
+        return out.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(agg, stacked_extractor)
+
+
+def aggregate_one(extractor_i, peer_extractors, weights_row):
+    """Decentralized single-client path: aggregate my extractor with a
+    stacked tree of received peer extractors ((K, ...) leaves)."""
+
+    def agg(mine, peers):
+        w = weights_row.astype(jnp.float32)
+        total = w[0] * mine.astype(jnp.float32) + jnp.einsum(
+            "k,k...->...", w[1:], peers.astype(jnp.float32)
+        )
+        return total.astype(mine.dtype)
+
+    return jax.tree_util.tree_map(agg, extractor_i, peer_extractors)

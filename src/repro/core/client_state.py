@@ -1,0 +1,49 @@
+"""Population state — struct-of-stacked-arrays over the M clients.
+
+Everything is a pytree (vmap/pjit-able). `last_selected` and `loss_matrix`
+are the two context arrays Algorithm 1 maintains per client (the peer
+recency array t and the loss array l).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_mod
+from repro.models.split import split_params
+from repro.optim.base import Optimizer
+
+
+class PopulationState(NamedTuple):
+    extractor: Any       # leading-M pytree
+    header: Any          # leading-M pytree
+    opt_e: Any           # per-client phase-e optimizer state
+    opt_h: Any           # per-client phase-h optimizer state
+    loss_matrix: Any     # (M, M) f32 — loss array l (Eq. 6 cache)
+    last_selected: Any   # (M, M) i32 — peer recency array t (−1 = never)
+    round: Any           # () i32
+
+
+def init_population(
+    cfg, key, num_clients: int, opt_e: Optimizer, opt_h: Optimizer
+) -> PopulationState:
+    keys = jax.random.split(key, num_clients)
+
+    def one(k):
+        params = model_mod.init_params(cfg, k)
+        e, h = split_params(cfg, params)
+        return e, h
+
+    extractor, header = jax.vmap(one)(keys)
+    m = num_clients
+    return PopulationState(
+        extractor=extractor,
+        header=header,
+        opt_e=jax.vmap(opt_e.init)(extractor),
+        opt_h=jax.vmap(opt_h.init)(header),
+        loss_matrix=jnp.zeros((m, m), jnp.float32),
+        last_selected=jnp.full((m, m), -1, jnp.int32),
+        round=jnp.zeros((), jnp.int32),
+    )

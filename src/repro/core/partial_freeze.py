@@ -1,0 +1,78 @@
+"""Two-phase partial-freeze training (paper Eq. 3–4, Algorithm 1 lines 8–16).
+
+Phase e: header frozen, extractor trained   (Eq. 3) — K_e epochs
+Phase h: extractor frozen, header trained   (Eq. 4) — K_h epochs
+
+Freezing is *structural*: the frozen partition is a non-differentiated
+argument, so its backward pass is dead code XLA eliminates — frozen-phase
+steps are genuinely cheaper, not just masked. Each phase keeps its own
+optimizer state (the momentum of a frozen partition must not leak across
+phases).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+
+from repro.models import model as model_mod
+from repro.models.split import merge_params
+from repro.optim.base import Optimizer, apply_updates
+
+
+class PhaseSteps(NamedTuple):
+    phase_e: callable  # (extractor, header, opt_e, batch) -> (e, opt_e, metrics)
+    phase_h: callable  # (extractor, header, opt_h, batch) -> (h, opt_h, metrics)
+
+
+def make_phase_steps(
+    cfg,
+    opt_e: Optimizer,
+    opt_h: Optimizer | None = None,
+    *,
+    backend: str = "auto",
+    remat: bool = False,
+) -> PhaseSteps:
+    opt_h = opt_h or opt_e
+
+    def phase_e(extractor, header, opt_state, batch):
+        def loss(e):
+            return model_mod.loss_fn(
+                cfg, merge_params(e, header), batch,
+                backend=backend, remat=remat,
+            )
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(extractor)
+        updates, opt_state = opt_e.update(grads, opt_state, extractor)
+        return apply_updates(extractor, updates), opt_state, metrics
+
+    def phase_h(extractor, header, opt_state, batch):
+        def loss(h):
+            return model_mod.loss_fn(
+                cfg, merge_params(extractor, h), batch,
+                backend=backend, remat=remat,
+            )
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(header)
+        updates, opt_state = opt_h.update(grads, opt_state, header)
+        return apply_updates(header, updates), opt_state, metrics
+
+    return PhaseSteps(phase_e=phase_e, phase_h=phase_h)
+
+
+def make_full_step(cfg, opt: Optimizer, *, backend="auto", remat=False):
+    """Conventional (non-frozen) train step — FedAvg-family baselines and
+    the dry-run's standard train_step."""
+
+    def step(params, opt_state, batch):
+        def loss(p):
+            return model_mod.loss_fn(
+                cfg, p, batch, backend=backend, remat=remat
+            )
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, metrics
+
+    return step

@@ -1,0 +1,167 @@
+"""PFedDST Algorithm 1 — one full communication round over the population.
+
+Round structure (per active client i, all vmapped/einsum'd over M):
+  1. score every peer:      S_ij = s_p·(α·s_l − s_d + c)      (Eq. 6–9)
+  2. select peers M_i       (top-k or threshold)
+  3. aggregate extractors   e_i ← avg{e_j : j ∈ M_i ∪ {i}}
+  4. phase-e training       K_e epochs, header frozen          (Eq. 3)
+  5. broadcast e_i          (population mode: the state update itself)
+  6. phase-h training       K_h epochs, extractor frozen       (Eq. 4)
+  7. update context arrays  (loss array l, recency array t)
+
+Client sampling (§III-A, ratio 0.1): inactive clients keep their state; they
+remain selectable as peers (their parameters are still on the network).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core.aggregation import aggregate_extractors, selection_to_weights
+from repro.core.client_state import PopulationState
+from repro.core.partial_freeze import PhaseSteps
+from repro.core.scoring import (
+    flatten_headers,
+    header_distance_matrix,
+    loss_disparity_matrix,
+    recency_scores,
+)
+from repro.core.selection import combined_scores, select_peers, update_recency
+from repro.data.pipeline import sample_client_batches
+from repro.models.split import merge_params
+
+
+def _where_tree(mask_m, new, old):
+    """Per-client select: mask (M,) bool over leading axis of each leaf."""
+    def sel(n, o):
+        m = mask_m.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def _phase_loop(phase_fn, trained, frozen, opt, data, key, n_steps, bs):
+    """Run n_steps vmapped phase steps, sampling fresh client batches."""
+
+    def body(carry, k):
+        t, o = carry
+        batch = sample_client_batches(k, data, bs)
+        t, o, metrics = jax.vmap(phase_fn)(t, frozen, o, batch)
+        return (t, o), metrics["loss"]
+
+    (trained, opt), losses = jax.lax.scan(
+        body, (trained, opt), jax.random.split(key, n_steps)
+    )
+    return trained, opt, losses
+
+
+def pfeddst_round(
+    cfg: ModelConfig,
+    fl: FLConfig,
+    steps: PhaseSteps,
+    state: PopulationState,
+    train_data,
+    key,
+    *,
+    steps_per_epoch: int = 1,
+    probe_size: int = 64,
+    use_score_kernel: bool = False,
+    candidate_mask=None,
+):
+    """One communication round. train_data: dict of (M, N, ...) arrays.
+
+    Returns (new_state, metrics dict).
+    """
+    m = state.loss_matrix.shape[0]
+    k_probe, k_active, k_e, k_h, k_rand = jax.random.split(key, 5)
+
+    # ---- 1. scoring -------------------------------------------------------
+    probe = sample_client_batches(k_probe, train_data, probe_size)
+    params = jax.vmap(merge_params)(state.extractor, state.header)
+    s_l = loss_disparity_matrix(cfg, params, probe)              # Eq. 6
+    s_d = header_distance_matrix(
+        flatten_headers(state.header), use_kernel=use_score_kernel
+    )                                                            # Eq. 7
+    s_p = recency_scores(
+        state.last_selected, state.round, fl.recency_lambda
+    )                                                            # Eq. 8
+    scores = combined_scores(
+        s_l, s_d, s_p, alpha=fl.alpha, comm_cost=fl.comm_cost
+    )                                                            # Eq. 9
+
+    # ---- 2. selection -----------------------------------------------------
+    if fl.selection == "threshold":
+        mask = select_peers(
+            scores, threshold=fl.score_threshold, candidate_mask=candidate_mask
+        )
+    elif fl.selection == "random":
+        # ablation: identical round structure, uniformly random peers
+        rand = jnp.where(
+            jnp.eye(m, dtype=bool), -1.0, jax.random.uniform(k_rand, (m, m))
+        )
+        mask = select_peers(
+            rand, k=fl.peers_per_round, candidate_mask=candidate_mask
+        )
+    else:
+        mask = select_peers(
+            scores, k=fl.peers_per_round, candidate_mask=candidate_mask
+        )
+
+    # active-client sampling: inactive clients do not aggregate or train
+    n_active = max(1, int(round(m * fl.client_sample_ratio)))
+    active = jnp.zeros((m,), bool).at[
+        jax.random.permutation(k_active, m)[:n_active]
+    ].set(True)
+    mask = mask & active[:, None]
+
+    # ---- 3. aggregate extractors -----------------------------------------
+    weights = selection_to_weights(mask, include_self=True)
+    agg_e = aggregate_extractors(state.extractor, weights)
+    agg_e = _where_tree(active, agg_e, state.extractor)
+
+    # ---- 4. phase-e (header frozen) ---------------------------------------
+    n_e = fl.epochs_extractor * steps_per_epoch
+    new_e, opt_e, loss_e = _phase_loop(
+        steps.phase_e, agg_e, state.header, state.opt_e,
+        train_data, k_e, n_e, fl.batch_size,
+    )
+    new_e = _where_tree(active, new_e, state.extractor)
+    opt_e = _where_tree(active, opt_e, state.opt_e)
+
+    # ---- 5/6. phase-h (extractor frozen) ----------------------------------
+    n_h = fl.epochs_header * steps_per_epoch
+    phase_h_flipped = lambda h, e, o, b: steps.phase_h(e, h, o, b)
+    new_h, opt_h, loss_h = _phase_loop(
+        phase_h_flipped, state.header, new_e, state.opt_h,
+        train_data, k_h, n_h, fl.batch_size,
+    )
+    new_h = _where_tree(active, new_h, state.header)
+    opt_h = _where_tree(active, opt_h, state.opt_h)
+
+    # ---- 7. context arrays -------------------------------------------------
+    loss_matrix = jnp.where(active[:, None], s_l, state.loss_matrix)
+    last_selected = update_recency(state.last_selected, mask, state.round)
+
+    new_state = PopulationState(
+        extractor=new_e,
+        header=new_h,
+        opt_e=opt_e,
+        opt_h=opt_h,
+        loss_matrix=loss_matrix,
+        last_selected=last_selected,
+        round=state.round + 1,
+    )
+    metrics = {
+        "train_loss_e": jnp.sum(loss_e[-1] * active) / jnp.sum(active),
+        "train_loss_h": jnp.sum(loss_h[-1] * active) / jnp.sum(active),
+        "mean_selected_score": jnp.sum(jnp.where(mask, scores, 0.0))
+        / jnp.maximum(jnp.sum(mask), 1),
+        "s_l_mean": jnp.mean(s_l),
+        "s_d_offdiag_mean": (jnp.sum(s_d) - jnp.trace(s_d)) / (m * (m - 1)),
+        "active": active,
+        "select_mask": mask,
+    }
+    return new_state, metrics

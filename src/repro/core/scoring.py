@@ -1,0 +1,113 @@
+"""PFedDST scoring — the three peer-evaluation signals (paper §II-B).
+
+* loss disparity  s_l (Eq. 6): loss of client i's model on peer j's probe
+  data — high loss ⇒ peer j holds information i lacks (the decentralized
+  surrogate for the selection skew ρ of Eq. 5).
+* header distance s_d (Eq. 7): element-wise cosine similarity between header
+  weight vectors — high similarity ⇒ similar tasks/label distributions.
+* peer recency    s_p (Eq. 8): exponential-CDF of rounds since last
+  selection — pushes engagement toward stale peers.
+
+Population-mode entry points operate on client-stacked pytrees (leading M
+axis) and return (M, M) matrices: row i = client i scoring peer j. For LLM
+headers the cosine Gram matrix is the Pallas peer_score kernel's job
+(kernels/peer_score.py); the pure-jnp path here is its oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_mod
+from repro.utils.pytree import tree_flatten_vector
+
+
+# ---------------------------------------------------------------------------
+# Eq. 6 — loss disparity
+# ---------------------------------------------------------------------------
+
+def loss_disparity_matrix(cfg, stacked_params, probe_batches):
+    """L[i, j] = eval-loss of client i's model on client j's probe batch.
+
+    stacked_params: pytree with leading M axis; probe_batches: dict of
+    (M, B, ...) arrays. O(M²) evaluations — vmap over peers inner, clients
+    outer. Production note: with clients on the mesh data axis this is an
+    all-gather of probe batches + local eval (batches ≪ models).
+    """
+
+    def eval_on(params_i, batch_j):
+        return model_mod.eval_loss(cfg, params_i, batch_j)
+
+    def row(params_i):
+        return jax.vmap(lambda b: eval_on(params_i, b))(probe_batches)
+
+    return jax.vmap(row)(stacked_params)  # (M, M)
+
+
+def loss_disparity_row(cfg, params_i, probe_batches):
+    """One client's row (decentralized deployment path)."""
+    return jax.vmap(lambda b: model_mod.eval_loss(cfg, params_i, b))(
+        probe_batches
+    )
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7 — header cosine similarity
+# ---------------------------------------------------------------------------
+
+def flatten_headers(stacked_header):
+    """Client-stacked header pytree → (M, P) float32 matrix."""
+    return jax.vmap(tree_flatten_vector)(stacked_header)
+
+
+def header_distance_matrix(headers_flat, *, use_kernel: bool = False):
+    """S_d[i, j] = cos(h_i, h_j) ∈ [-1, 1]. headers_flat: (M, P).
+
+    use_kernel routes through the Pallas blocked-Gram kernel (TPU path for
+    d_model×vocab LLM headers; interpret-mode on CPU).
+    """
+    if use_kernel:
+        from repro.kernels.ops import cosine_gram
+
+        return cosine_gram(headers_flat)
+    x = headers_flat.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(jnp.square(x), axis=1, keepdims=True)) + 1e-12
+    xn = x / norms
+    return xn @ xn.T
+
+
+def header_gram_tree(stacked_header):
+    """Cosine Gram (Eq. 7) computed leaf-wise — no flattened (M, P) matrix.
+
+    cos over the concatenation of leaves = Σ_leaf <h_i, h_j> normalized by
+    the global norms, so the Gram accumulates per leaf and every partial
+    product keeps the leaf's sharding (the multi-pod path: headers are
+    TP/FSDP-sharded; flattening would force an all-gather of the full
+    d_model × vocab header before the Gram).
+    """
+    leaves = jax.tree_util.tree_leaves(stacked_header)
+    m = leaves[0].shape[0]
+    raw = jnp.zeros((m, m), jnp.float32)
+    for leaf in leaves:
+        x = leaf.reshape(m, -1).astype(jnp.float32)
+        raw = raw + jnp.einsum("ip,jp->ij", x, x)
+    norms = jnp.sqrt(jnp.maximum(jnp.diagonal(raw), 0.0)) + 1e-12
+    return jnp.clip(raw / (norms[:, None] * norms[None, :]), -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 8 — peer recency
+# ---------------------------------------------------------------------------
+
+def recency_scores(last_selected, t, lam: float):
+    """s_p[i, j] = 1 − exp(−λ·(t − t0[i,j])) — the exponential CDF.
+
+    last_selected: (M, M) int32 round at which i last selected j (−1 ⇒
+    never → maximal score). t: current round (scalar).
+    """
+    never = last_selected < 0
+    dt = jnp.maximum(t - last_selected, 0).astype(jnp.float32)
+    s = 1.0 - jnp.exp(-lam * dt)
+    return jnp.where(never, 1.0, s)

@@ -1,0 +1,54 @@
+"""Eq. 9 score combination + strategic peer selection (paper §II-B/C).
+
+    S = s_p · (α·s_l − s_d + c)
+
+s_p multiplies (not adds) so staleness can never dominate task-dissimilar
+peers; c is the per-link communication-cost constant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def combined_scores(s_l, s_d, s_p, *, alpha: float, comm_cost) -> jnp.ndarray:
+    """(M,M) overall scores; diagonal (self) masked to −inf.
+
+    comm_cost: scalar or (M, M) per-link cost score c.
+    """
+    s = s_p * (alpha * s_l - s_d + comm_cost)
+    m = s.shape[0]
+    return jnp.where(jnp.eye(m, dtype=bool), NEG, s)
+
+
+def select_peers(
+    scores,
+    *,
+    k: int = 0,
+    threshold: float | None = None,
+    candidate_mask=None,
+):
+    """→ bool (M, M) selection mask, row i = M_i.
+
+    k > 0        → top-k per row (the paper's experiments: k = 10);
+    threshold    → Algorithm 1 line 5: {S_ij > s*};
+    candidate_mask: optional bool (M, M) of reachable peers this round
+    (client-sampling / topology restriction).
+    """
+    if candidate_mask is not None:
+        scores = jnp.where(candidate_mask, scores, NEG)
+    if threshold is not None and not k:
+        return scores > threshold
+    m = scores.shape[-1]
+    k = min(k, m - 1)
+    _, idx = jax.lax.top_k(scores, k)  # (M, k)
+    mask = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
+    # drop peers that were only selected at −inf (fewer than k candidates)
+    return mask & (scores > NEG / 2)
+
+
+def update_recency(last_selected, select_mask, t):
+    """t0[i,j] ← t where i selected j this round."""
+    return jnp.where(select_mask, t, last_selected)

@@ -1,0 +1,41 @@
+"""Batching — jit-friendly random batch sampling, per client and stacked.
+
+No tf.data in this container; the pipeline is jax.random index sampling over
+in-memory arrays (the paper's datasets are CIFAR-sized). Device sharding of
+the batch happens in launch/ via NamedSharding on the leading axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_batch(key, n: int, batch_size: int):
+    """Random index batch (with replacement — streaming semantics)."""
+    return jax.random.randint(key, (batch_size,), 0, n)
+
+
+def take_batch(data, idx):
+    """data: dict of (N, ...) arrays → dict of (B, ...) arrays."""
+    return jax.tree_util.tree_map(lambda a: jnp.take(a, idx, axis=0), data)
+
+
+def sample_client_batches(key, stacked, batch_size: int):
+    """stacked: dict of (M, N, ...) arrays → dict of (M, B, ...) batches.
+
+    One independent batch per client (vmapped gather).
+    """
+    leaves = jax.tree_util.tree_leaves(stacked)
+    m, n = leaves[0].shape[0], leaves[0].shape[1]
+    keys = jax.random.split(key, m)
+    idx = jax.vmap(lambda k: sample_batch(k, n, batch_size))(keys)  # (M,B)
+    return jax.tree_util.tree_map(
+        lambda a: jax.vmap(jnp.take, in_axes=(0, 0, None))(a, idx, 0), stacked
+    )
+
+
+def epoch_batches(key, n: int, batch_size: int):
+    """Shuffled full-epoch batch indices: (n//bs, bs)."""
+    perm = jax.random.permutation(key, n)
+    n_b = n // batch_size
+    return perm[: n_b * batch_size].reshape(n_b, batch_size)

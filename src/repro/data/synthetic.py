@@ -1,0 +1,188 @@
+"""Synthetic datasets — the offline stand-ins for CIFAR-10/100 (DESIGN.md §2).
+
+`synth_cifar`: class-conditional Gaussian-mixture images. Each class has a
+smooth low-frequency prototype image; samples = prototype + white noise.
+Difficulty is controlled by noise_scale (prototype separation fixed).
+
+`synth_tokens`: heterogeneous LM streams for federated-LLM experiments. Each
+client draws from its own vocab *domain* (a contiguous vocab slice) with a
+shared background distribution — so client tasks overlap partially, giving
+the header-distance score (Eq. 7) real structure to find.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def class_prototypes(key, num_classes: int, image_size: int, channels: int,
+                     bands: int = 4):
+    """Smooth low-frequency prototype per class, unit-ish norm."""
+    k1, k2 = jax.random.split(key)
+    coeff = jax.random.normal(
+        k1, (num_classes, bands, bands, channels)
+    )
+    xs = np.linspace(0, np.pi, image_size)
+    basis = np.stack(
+        [np.cos(b * xs) for b in range(bands)], axis=0
+    )  # (bands, size)
+    proto = jnp.einsum(
+        "kabc,ah,bw->khwc", coeff, jnp.asarray(basis), jnp.asarray(basis)
+    )
+    proto = proto / (
+        jnp.sqrt(jnp.mean(jnp.square(proto), axis=(1, 2, 3), keepdims=True))
+        + 1e-6
+    )
+    return proto
+
+
+def synth_cifar(
+    key,
+    num_classes: int = 10,
+    samples_per_class: int = 500,
+    image_size: int = 32,
+    channels: int = 3,
+    noise_scale: float = 0.8,
+):
+    """→ (images (N,H,W,C) f32, labels (N,) i32), class-balanced, shuffled."""
+    kp, kn, ks = jax.random.split(key, 3)
+    protos = class_prototypes(kp, num_classes, image_size, channels)
+    n = num_classes * samples_per_class
+    labels = jnp.repeat(jnp.arange(num_classes), samples_per_class)
+    noise = jax.random.normal(kn, (n, image_size, image_size, channels))
+    images = protos[labels] + noise_scale * noise
+    perm = jax.random.permutation(ks, n)
+    return images[perm].astype(jnp.float32), labels[perm].astype(jnp.int32)
+
+
+def pathological_partition(
+    key,
+    labels,
+    num_clients: int,
+    classes_per_client: int,
+    num_classes: int,
+):
+    """The paper's partition: each client sees `classes_per_client` classes.
+
+    Class-ALIGNED shard method: each class's sample pool is cut into whole
+    single-class shards (num_clients·cpc shards total, distributed across
+    classes), and every client is dealt cpc shards — so a client holds
+    samples from at most cpc distinct classes, exactly the paper's
+    "sample 2 classes from the total of 10" protocol. (The classic
+    sort-and-cut shard trick lets shards straddle class boundaries, which
+    silently violates the class budget — caught by tests/test_data.py.)
+
+    Returns (M, n_local) int32 index matrix into the dataset.
+    """
+    labels = np.asarray(labels)
+    rng = np.random.default_rng(
+        np.asarray(jax.random.key_data(key))[0].item()
+    )
+    n_shards = num_clients * classes_per_client
+    base, extra = divmod(n_shards, num_classes)
+    shards_per_class = [
+        base + (1 if c < extra else 0) for c in range(num_classes)
+    ]
+    # equal shard sizes across the dataset (jnp stacking needs rectangles)
+    usable = [
+        len(np.where(labels == c)[0]) for c in range(num_classes)
+    ]
+    shard_size = min(
+        u // s for u, s in zip(usable, shards_per_class) if s > 0
+    )
+    shards = []
+    for c in range(num_classes):
+        if shards_per_class[c] == 0:
+            continue
+        idx = rng.permutation(np.where(labels == c)[0])
+        for s in range(shards_per_class[c]):
+            shards.append(idx[s * shard_size : (s + 1) * shard_size])
+    shards = np.stack(shards)                     # (n_shards, shard_size)
+    shard_perm = rng.permutation(n_shards)
+    per_client = shards[shard_perm].reshape(
+        num_clients, classes_per_client * shard_size
+    )
+    return jnp.asarray(per_client, jnp.int32)
+
+
+def client_datasets_cifar(
+    key,
+    num_clients: int,
+    num_classes: int = 10,
+    classes_per_client: int = 2,
+    samples_per_class: int = 500,
+    image_size: int = 32,
+    noise_scale: float = 0.8,
+    test_frac: float = 0.2,
+):
+    """Full FL data: per-client train/test with IDENTICAL class subsets
+    (paper §III-A: 'each client's training and testing data are distributed
+    according to the same class subset').
+
+    Returns dict of stacked arrays:
+      train_x (M, n_tr, H, W, C), train_y (M, n_tr),
+      test_x  (M, n_te, H, W, C), test_y  (M, n_te)
+    """
+    kd, kp = jax.random.split(key)
+    images, labels = synth_cifar(
+        kd, num_classes, samples_per_class, image_size, noise_scale=noise_scale
+    )
+    idx = pathological_partition(
+        kp, labels, num_clients, classes_per_client, num_classes
+    )
+    # stratified split per single-class shard → train and test of a client
+    # share the SAME class subset (paper §III-A)
+    m, n_local = idx.shape
+    shard_size = n_local // classes_per_client
+    idx_s = idx.reshape(m, classes_per_client, shard_size)
+    n_te_s = max(1, int(shard_size * test_frac))
+    te = idx_s[:, :, :n_te_s].reshape(m, -1)
+    tr = idx_s[:, :, n_te_s:].reshape(m, -1)
+    return {
+        "train_x": images[tr],
+        "train_y": labels[tr],
+        "test_x": images[te],
+        "test_y": labels[te],
+    }
+
+
+def synth_tokens(
+    key,
+    num_clients: int,
+    vocab_size: int,
+    seq_len: int,
+    seqs_per_client: int,
+    num_domains: int = 0,
+    domain_frac: float = 0.7,
+):
+    """Heterogeneous token streams. Client c belongs to domain c % D; a
+    domain is a contiguous vocab slice. Each token is drawn from the domain
+    slice w.p. domain_frac else from the full vocab (Zipf-ish background).
+
+    → tokens (M, n, S) int32, domains (M,) int32.
+    """
+    num_domains = num_domains or max(2, num_clients // 4)
+    dom_size = vocab_size // num_domains
+    keys = jax.random.split(key, num_clients)
+    domains = jnp.arange(num_clients) % num_domains
+
+    # Zipf background over full vocab
+    ranks = jnp.arange(1, vocab_size + 1, dtype=jnp.float32)
+    bg_logits = -1.1 * jnp.log(ranks)
+
+    def one_client(k, dom):
+        k1, k2, k3 = jax.random.split(k, 3)
+        in_dom = (
+            jax.random.uniform(k1, (seqs_per_client, seq_len)) < domain_frac
+        )
+        dom_tok = dom * dom_size + jax.random.randint(
+            k2, (seqs_per_client, seq_len), 0, dom_size
+        )
+        bg_tok = jax.random.categorical(
+            k3, bg_logits, shape=(seqs_per_client, seq_len)
+        )
+        return jnp.where(in_dom, dom_tok, bg_tok).astype(jnp.int32)
+
+    tokens = jax.vmap(one_client)(keys, domains)
+    return tokens, domains.astype(jnp.int32)

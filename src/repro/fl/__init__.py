@@ -1,0 +1,15 @@
+"""Federated-learning simulator + the paper's baselines.
+
+strategies — FedAvg / FedPer / FedBABU / DFedAvgM / Dis-PFL / DFedPGP /
+             PFedDST (+ random-selection ablation), one round fn each
+simulator  — population runner: round loop, personalized eval, history
+"""
+from repro.fl.simulator import run_experiment, evaluate_population
+from repro.fl.strategies import STRATEGIES, make_strategy
+
+__all__ = [
+    "STRATEGIES",
+    "make_strategy",
+    "run_experiment",
+    "evaluate_population",
+]

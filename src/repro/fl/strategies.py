@@ -1,0 +1,375 @@
+"""The paper's baselines + PFedDST, as uniform population-mode strategies.
+
+Every strategy exposes
+    init(cfg, fl, key)            -> state pytree (leading-M stacked)
+    round(state, data, key)       -> (state, metrics)
+    params_for_eval(state)        -> merged per-client params (leading M)
+
+and is jit-able end-to-end. `data` is the stacked client dataset dict
+(train_x/train_y). All local training uses the paper's §III-A recipe
+(SGD momentum 0.9, weight decay 0.005, lr 0.1) via repro.optim.sgd.
+
+Baselines (paper §III-B):
+  fedavg    [30] one global model, sampled clients train + average.
+  fedper    [15] personal header; extractor trained jointly, averaged
+            centrally across active clients.
+  fedbabu   [21] header FROZEN at init (never trained/averaged) during
+            federation; extractor trained + averaged. Personalized eval
+            fine-tunes a throwaway header copy (simulator does this).
+  dfedavgm  [23] decentralized: local SGD-with-momentum then undirected
+            random-gossip averaging with k neighbors (quantization omitted
+            — bandwidth, not accuracy, semantics).
+  dispfl    [24] decentralized personalized sparse training — simplified:
+            personal magnitude masks (50% sparsity) with RigL-style
+            random regrow; masked extractor gossip-averaged where masks
+            overlap; header personal. (Full Dis-PFL also evolves masks by
+            gradient saliency; noted in DESIGN.md §9.)
+  dfedpgp   [26] directed push gossip, partial personalization: each
+            client pushes its extractor to k random OUT-neighbors; header
+            personal. (Push-sum weight bookkeeping omitted — symmetric
+            sampling keeps the mixing doubly-stochastic in expectation.)
+  pfeddst        the paper's method (core.rounds.pfeddst_round).
+  pfeddst_random ablation: same partial-freeze round, random peer choice.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core.aggregation import aggregate_extractors, selection_to_weights
+from repro.core.client_state import PopulationState, init_population
+from repro.core.partial_freeze import make_full_step, make_phase_steps
+from repro.core.rounds import pfeddst_round
+from repro.data.pipeline import sample_client_batches
+from repro.models import model as model_mod
+from repro.models.split import merge_params, split_params
+from repro.optim.sgd import sgd
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _opt(fl: FLConfig):
+    return sgd(fl.lr, momentum=fl.momentum, weight_decay=fl.weight_decay)
+
+
+def _active_mask(key, m: int, ratio: float):
+    n = max(1, int(round(m * ratio)))
+    return jnp.zeros((m,), bool).at[jax.random.permutation(key, m)[:n]].set(
+        True
+    )
+
+
+def _where_tree(mask_m, new, old):
+    def sel(n, o):
+        return jnp.where(mask_m.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def _local_train(step, params, opt_state, data, key, n_steps, bs):
+    """n_steps of vmapped full-model SGD with fresh client batches."""
+
+    def body(carry, k):
+        p, o = carry
+        batch = sample_client_batches(k, data, bs)
+        p, o, metrics = jax.vmap(step)(p, o, batch)
+        return (p, o), metrics["loss"]
+
+    (params, opt_state), losses = jax.lax.scan(
+        body, (params, opt_state), jax.random.split(key, n_steps)
+    )
+    return params, opt_state, losses
+
+
+def _gossip_weights(key, m: int, k: int, directed: bool):
+    """Random k-neighbor selection mask (no self)."""
+    scores = jax.random.uniform(key, (m, m))
+    scores = jnp.where(jnp.eye(m, dtype=bool), -1.0, scores)
+    k = min(k, m - 1)
+    _, idx = jax.lax.top_k(scores, k)
+    mask = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
+    if not directed:
+        mask = mask | mask.T
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# strategy struct
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Strategy:
+    name: str
+    init: Callable        # (key) -> state
+    round: Callable       # (state, data, key) -> (state, metrics)
+    params_for_eval: Callable  # (state) -> leading-M params pytree
+    needs_head_finetune: bool = False
+
+
+# ---------------------------------------------------------------------------
+# centralized family (fedavg / fedper / fedbabu)
+# ---------------------------------------------------------------------------
+
+def _make_central(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
+    opt = _opt(fl)
+    step = make_full_step(cfg, opt)
+    phase = make_phase_steps(cfg, opt)      # fedbabu: extractor-only train
+    n_steps = fl.epochs_extractor * steps_per_epoch
+
+    def init(key):
+        keys = jax.random.split(key, fl.num_clients)
+
+        def one(k):
+            return model_mod.init_params(cfg, k)
+
+        params = jax.vmap(one)(keys)
+        if kind in ("fedavg", "fedper", "fedbabu"):
+            # single global init: broadcast client 0 (incl. fedper/babu
+            # headers — they diverge through local training)
+            params = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[:1], x.shape), params
+            )
+        if kind == "fedbabu":   # extractor-only optimizer state
+            e, _ = split_params(cfg, params)
+            return {"params": params, "opt": {"e": jax.vmap(opt.init)(e)},
+                    "round": jnp.zeros((), jnp.int32)}
+        return {"params": params, "opt": jax.vmap(opt.init)(params),
+                "round": jnp.zeros((), jnp.int32)}
+
+    def round_fn(state, data, key):
+        m = fl.num_clients
+        k_act, k_tr = jax.random.split(key)
+        active = _active_mask(k_act, m, fl.client_sample_ratio)
+        params = state["params"]
+
+        # fedbabu trains the extractor with the header frozen structurally;
+        # fedavg/fedper train the full model.
+        if kind == "fedbabu":
+            e, h = split_params(cfg, params)
+
+            def babu_step(e_i, h_i, o_i, b_i):
+                e2, o2, met = phase.phase_e(e_i, h_i, o_i, b_i)
+                return e2, o2, met
+
+            def body(carry, kk):
+                e_c, o_c = carry
+                batch = sample_client_batches(kk, data, fl.batch_size)
+                e_c, o_c, met = jax.vmap(babu_step)(e_c, h, o_c, batch)
+                return (e_c, o_c), met["loss"]
+
+            opt_e = state["opt"]["e"]
+            (new_e, opt_e), losses = jax.lax.scan(
+                body, (e, opt_e), jax.random.split(k_tr, n_steps)
+            )
+            new_e = _where_tree(active, new_e, e)
+            # central average of active extractors
+            w = active.astype(jnp.float32)
+            w = w / jnp.maximum(jnp.sum(w), 1.0)
+            avg_e = jax.tree_util.tree_map(
+                lambda x: jnp.einsum(
+                    "i,i...->...", w, x.astype(jnp.float32)
+                ).astype(x.dtype),
+                new_e,
+            )
+            bcast_e = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), avg_e
+            )
+            params = jax.vmap(merge_params)(bcast_e, h)
+            new_state = {"params": params, "opt": {"e": opt_e},
+                         "round": state["round"] + 1}
+            return new_state, {"train_loss": jnp.mean(losses[-1])}
+
+        new_params, opt_state, losses = _local_train(
+            step, params, state["opt"], data, k_tr, n_steps, fl.batch_size
+        )
+        new_params = _where_tree(active, new_params, params)
+        opt_state = _where_tree(active, opt_state, state["opt"])
+
+        w = active.astype(jnp.float32)
+        w = w / jnp.maximum(jnp.sum(w), 1.0)
+        if kind == "fedavg":
+            shared = new_params        # everything averaged
+        else:                          # fedper: extractor only
+            shared, headers = split_params(cfg, new_params)
+        avg = jax.tree_util.tree_map(
+            lambda x: jnp.einsum(
+                "i,i...->...", w, x.astype(jnp.float32)
+            ).astype(x.dtype),
+            shared,
+        )
+        bcast = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), avg
+        )
+        if kind == "fedavg":
+            params = bcast
+        else:
+            params = jax.vmap(merge_params)(bcast, headers)
+        new_state = {"params": params, "opt": opt_state,
+                     "round": state["round"] + 1}
+        return new_state, {"train_loss": jnp.mean(losses[-1])}
+
+    return Strategy(
+        name=kind, init=init, round=round_fn,
+        params_for_eval=lambda s: s["params"],
+        needs_head_finetune=(kind == "fedbabu"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# decentralized gossip family (dfedavgm / dfedpgp / dispfl)
+# ---------------------------------------------------------------------------
+
+def _make_gossip(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
+    opt = _opt(fl)
+    step = make_full_step(cfg, opt)
+    n_steps = fl.epochs_extractor * steps_per_epoch
+    sparsity = 0.5
+
+    def init(key):
+        keys = jax.random.split(key, fl.num_clients)
+        params = jax.vmap(lambda k: model_mod.init_params(cfg, k))(keys)
+        state = {"params": params, "opt": jax.vmap(opt.init)(params),
+                 "round": jnp.zeros((), jnp.int32)}
+        if kind == "dispfl":
+            km = jax.random.fold_in(key, 7)
+
+            def mask_of(leaf, k):
+                if leaf.ndim <= 1:
+                    return jnp.ones(leaf.shape, bool)
+                return jax.random.uniform(k, leaf.shape) > sparsity
+
+            leaves, treedef = jax.tree_util.tree_flatten(params)
+            mkeys = jax.random.split(km, len(leaves))
+            masks = [mask_of(l, k) for l, k in zip(leaves, mkeys)]
+            state["mask"] = jax.tree_util.tree_unflatten(treedef, masks)
+        return state
+
+    def round_fn(state, data, key):
+        m = fl.num_clients
+        k_act, k_tr, k_nbr, k_grow = jax.random.split(key, 4)
+        active = _active_mask(k_act, m, fl.client_sample_ratio)
+        params = state["params"]
+
+        if kind == "dispfl":
+            params = jax.tree_util.tree_map(
+                lambda p, mk: p * mk.astype(p.dtype), params, state["mask"]
+            )
+
+        new_params, opt_state, losses = _local_train(
+            step, params, state["opt"], data, k_tr, n_steps, fl.batch_size
+        )
+        new_params = _where_tree(active, new_params, params)
+        opt_state = _where_tree(active, opt_state, state["opt"])
+
+        nbr = _gossip_weights(
+            k_nbr, m, fl.peers_per_round, directed=(kind == "dfedpgp")
+        )
+        nbr = nbr & active[:, None]    # only active clients gossip
+        weights = selection_to_weights(nbr, include_self=True)
+
+        if kind == "dfedavgm":
+            mixed = aggregate_extractors(new_params, weights)  # full model
+            mixed = _where_tree(active, mixed, new_params)
+            new_state = {"params": mixed, "opt": opt_state,
+                         "round": state["round"] + 1}
+            return new_state, {"train_loss": jnp.mean(losses[-1])}
+
+        # partial personalization: header personal, extractor gossiped
+        e, h = split_params(cfg, new_params)
+        mixed_e = aggregate_extractors(e, weights)
+        mixed_e = _where_tree(active, mixed_e, e)
+        mixed = jax.vmap(merge_params)(mixed_e, h)
+
+        new_state = {"params": mixed, "opt": opt_state,
+                     "round": state["round"] + 1}
+        if kind == "dispfl":
+            # magnitude prune back to target sparsity + random regrow
+            def evolve(leaf, mk, kk):
+                if leaf.ndim <= 1:
+                    return mk
+                flat = jnp.abs(leaf).ravel()
+                keep = int(flat.size * (1 - sparsity))
+                thr = jnp.sort(flat)[-max(keep, 1)]
+                new_mk = jnp.abs(leaf) >= thr
+                regrow = jax.random.uniform(kk, leaf.shape) > 0.98
+                return new_mk | (regrow & ~new_mk)
+
+            leaves, treedef = jax.tree_util.tree_flatten(mixed)
+            mleaves = jax.tree_util.tree_leaves(state["mask"])
+            gkeys = jax.random.split(k_grow, len(leaves))
+            new_mask = jax.tree_util.tree_unflatten(
+                treedef,
+                [evolve(l, mk, k) for l, mk, k in
+                 zip(leaves, mleaves, gkeys)],
+            )
+            new_state["mask"] = new_mask
+            new_state["params"] = jax.tree_util.tree_map(
+                lambda p, mk: p * mk.astype(p.dtype), mixed, new_mask
+            )
+        return new_state, {"train_loss": jnp.mean(losses[-1])}
+
+    return Strategy(
+        name=kind, init=init, round=round_fn,
+        params_for_eval=lambda s: s["params"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# PFedDST (+ random-selection ablation)
+# ---------------------------------------------------------------------------
+
+def _make_pfeddst(cfg, fl, steps_per_epoch, random_select: bool) -> Strategy:
+    opt = _opt(fl)
+    steps = make_phase_steps(cfg, opt)
+    import dataclasses
+
+    name = "pfeddst_random" if random_select else "pfeddst"
+    fl_used = fl if not random_select else dataclasses.replace(
+        fl, selection="random"
+    )
+
+    def init(key):
+        return init_population(cfg, key, fl.num_clients, opt, opt)
+
+    def round_fn(state: PopulationState, data, key):
+        return pfeddst_round(
+            cfg, fl_used, steps, state, data, key,
+            steps_per_epoch=steps_per_epoch, probe_size=fl.probe_size,
+        )
+
+    def eval_params(state: PopulationState):
+        return jax.vmap(merge_params)(state.extractor, state.header)
+
+    return Strategy(
+        name=name, init=init, round=round_fn, params_for_eval=eval_params
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+STRATEGIES = (
+    "fedavg", "fedper", "fedbabu", "dfedavgm", "dispfl", "dfedpgp",
+    "pfeddst", "pfeddst_random",
+)
+
+
+def make_strategy(name: str, cfg: ModelConfig, fl: FLConfig,
+                  steps_per_epoch: int = 2) -> Strategy:
+    if name in ("fedavg", "fedper", "fedbabu"):
+        return _make_central(cfg, fl, steps_per_epoch, name)
+    if name in ("dfedavgm", "dfedpgp", "dispfl"):
+        return _make_gossip(cfg, fl, steps_per_epoch, name)
+    if name == "pfeddst":
+        return _make_pfeddst(cfg, fl, steps_per_epoch, random_select=False)
+    if name == "pfeddst_random":
+        return _make_pfeddst(cfg, fl, steps_per_epoch, random_select=True)
+    raise KeyError(f"unknown strategy {name!r}; available: {STRATEGIES}")

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  flash_attention — blocked online-softmax attention (prefill hot spot)
+  peer_score      — blocked cosine Gram over client headers (paper Eq. 7)
+  wkv_chunked     — RWKV6 WKV recurrence as chunked block-parallel scan
+
+Each <name>.py carries the pl.pallas_call + BlockSpec tiling; ops.py the
+jit'd wrappers; ref.py the pure-jnp oracles tests assert against.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

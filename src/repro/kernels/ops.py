@@ -1,0 +1,77 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True — the kernel
+body runs in Python per grid step, which is slow but bit-faithful to the TPU
+lowering; tests/benches keep shapes small. On TPU the same calls compile to
+Mosaic. `interpret=None` (default) auto-detects.
+
+These are the hooks the model/core layers call:
+  * models/attention.py  backend="flash"  → flash_attention
+  * core/scoring.py      use_kernel=True  → cosine_gram
+  * models/rwkv.py       wkv_fn=wkv       → wkv_chunked
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import peer_score as _ps
+from repro.kernels import wkv_chunked as _wkv
+
+
+def _interpret(flag):
+    if flag is None:
+        return jax.default_backend() != "tpu"
+    return flag
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "q_offset", "block_q", "block_kv", "interpret"
+    ),
+)
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = _fa.DEFAULT_BLOCK_Q,
+    block_kv: int = _fa.DEFAULT_BLOCK_KV,
+    interpret: bool | None = None,
+):
+    return _fa.flash_attention(
+        q, k, v,
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_kv=block_kv,
+        interpret=_interpret(interpret),
+    )
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_p", "interpret"))
+def cosine_gram(
+    x,
+    *,
+    block_m: int = _ps.DEFAULT_BLOCK_M,
+    block_p: int = _ps.DEFAULT_BLOCK_P,
+    interpret: bool | None = None,
+):
+    return _ps.cosine_gram(
+        x, block_m=block_m, block_p=block_p, interpret=_interpret(interpret)
+    )
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(
+    r, k, v, w, u,
+    state=None,
+    *,
+    chunk: int = _wkv.DEFAULT_CHUNK,
+    interpret: bool | None = None,
+):
+    return _wkv.wkv_chunked(
+        r, k, v, w, u, state, chunk=chunk, interpret=_interpret(interpret)
+    )

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *definitions of correctness*: each kernel's test sweeps
+shapes/dtypes and asserts allclose against the function here. They are also
+the small-shape fallback paths (smoke tests, CPU benchmarks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle — plain masked softmax attention (GQA-aware)
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0):
+    """q: (B,Sq,H,hd); k/v: (B,Skv,K,hd) with H % K == 0 → (B,Sq,H,hd).
+
+    Softmax in float32; output in q.dtype. window > 0 → sliding causal
+    window (col > row - window).
+    """
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    qg = q.reshape(b, sq, kh, h // kh, hd)
+    scale = 1.0 / np.sqrt(hd)
+    scores = (
+        jnp.einsum("bqkrh,bskh->bkrqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    )
+    rows = jnp.arange(sq)[:, None] + q_offset
+    cols = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= cols <= rows
+    if window:
+        ok &= cols > rows - window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqs,bskv->bqkrv", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# peer-score oracle — cosine Gram matrix (paper Eq. 7 over the population)
+# ---------------------------------------------------------------------------
+
+def cosine_gram_ref(x):
+    """x: (M, P) → (M, M) float32 cosine-similarity Gram, clipped to [-1,1]."""
+    x = x.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(jnp.square(x), axis=1, keepdims=True)) + 1e-12
+    xn = x / norms
+    return jnp.clip(xn @ xn.T, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# WKV oracle — per-step recurrence (RWKV6 data-dependent decay)
+# ---------------------------------------------------------------------------
+
+def wkv_ref(r, k, v, w, u, state=None):
+    """Sequential WKV scan (the rwkv6 time-mix recurrence).
+
+    r,k,v,w: (B,S,H,hd); w per-step decay in (0,1); u: (H,hd) bonus.
+    → (out (B,S,H,hd) in r.dtype, final state (B,H,hd,hd) f32).
+    """
+    B, S, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S_c, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", r_t, S_c + u[None, :, :, None] * kv)
+        S_n = w_t[..., :, None] * S_c + kv
+        return S_n, out
+
+    seq = jax.tree_util.tree_map(
+        lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0), (r, k, v, w)
+    )
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), seq)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state

@@ -1,0 +1,154 @@
+"""Pallas TPU chunked WKV — RWKV6 (Finch) recurrence as block-parallel scan.
+
+The per-token recurrence (kernels.ref.wkv_ref)
+
+    S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ ;   o_t = r_tᵀ(S_{t-1} + diag(u)·k_t v_tᵀ)
+
+is O(S) sequential — hopeless on the MXU. TPU adaptation: split the sequence
+into chunks of C tokens; within a chunk everything is closed-form in the
+log-decay cumsum  cum_t = Σ_{s≤t} log w_s  (cum ≤ 0, per channel):
+
+  intra-chunk   o_t += Σ_{s<t} (Σ_i r_t[i]k_s[i]·e^{cum_{t-1,i}−cum_{s,i}}) v_s
+                      + (r_t·(u⊙k_t)) v_t
+  cross-chunk   o_t += (r_t ⊙ e^{cum_{t-1}}) S₀
+  state update  S_C  = diag(e^{cum_C}) S₀ + Σ_s (k_s ⊙ e^{cum_C − cum_s}) v_sᵀ
+
+All exponents are ≤ 0 for the needed (t−1 ≥ s) terms, so this formulation is
+*overflow-free* — unlike the factored  (r e^{cum}) @ (k e^{−cum})ᵀ  matmul
+form, whose e^{−cum} term explodes for strong decay (the standard GPU
+chunked-GLA trick needs sub-block renormalization for exactly this reason;
+the decay-inside-einsum form trades one fused matmul for stability and still
+keeps the S₀-propagation and state-update terms on the MXU).
+
+Grid: (B, H, num_chunks) — chunk axis innermost/sequential, S carried in a
+(hd, hd) f32 VMEM scratch. Per-chunk working set (C=64, hd=64):
+r/k/v/w tiles 4·C·hd·4B = 64 KiB, the (C,C,hd) intra-chunk decay tensor 1 MiB
+f32, S 16 KiB — ≪ VMEM.
+
+Validated against kernels.ref.wkv_ref with interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+    o_ref, sfin_ref,
+    s_scr,
+    *,
+    num_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)    # (C, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)    # decay in (0,1)
+    u = u_ref[0].astype(jnp.float32)             # (hd,)
+    s0 = s_scr[...]                              # (hd, hd) [i=key, j=value]
+
+    c, hd = r.shape
+    lw = jnp.log(jnp.maximum(w, 1e-38))          # ≤ 0
+    cum = jnp.cumsum(lw, axis=0)                 # inclusive (C, hd)
+    cum_prev = cum - lw                          # exclusive prefix
+
+    # ---- cross-chunk: o_t += (r_t ⊙ e^{cum_prev_t}) @ S0 -------------------
+    r_dec = r * jnp.exp(cum_prev)                # (C, hd)
+    o = jax.lax.dot_general(
+        r_dec, s0, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (C, hd_v)
+
+    # ---- intra-chunk: decay-aware score matrix ----------------------------
+    # scores[t, s] = Σ_i r[t,i]·k[s,i]·e^{cum_prev[t,i] − cum[s,i]}  (s < t)
+    expo = cum_prev[:, None, :] - cum[None, :, :]          # (C, C, hd)
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+        > jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    )                                                      # strictly lower
+    expo = jnp.where(tri[:, :, None], expo, -jnp.inf)
+    scores = jnp.sum(
+        r[:, None, :] * k[None, :, :] * jnp.exp(expo), axis=-1
+    )                                                      # (C, C)
+    diag_bonus = jnp.sum(r * u[None, :] * k, axis=-1)      # (C,)
+    o += jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o += diag_bonus[:, None] * v
+
+    # ---- state update: S_C = diag(e^{cum_C}) S0 + Σ_s (k_s⊙e^{cum_C−cum_s}) v_sᵀ
+    k_dec = k * jnp.exp(cum[-1][None, :] - cum)            # (C, hd), exps ≤ 0
+    s_new = jnp.exp(cum[-1])[:, None] * s0 + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    s_scr[...] = s_new
+
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _final():
+        sfin_ref[0, 0] = s_new
+
+
+def wkv_chunked(
+    r, k, v, w, u,
+    state=None,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) f32 or None.
+
+    → (out (B,S,H,hd) in r.dtype, final state (B,H,hd,hd) f32).
+    """
+    b, s, h, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    chunk = min(chunk, max(s, 8))
+    ps = (-s) % chunk
+    if ps:
+        pad = ((0, 0), (0, ps), (0, 0), (0, 0))
+        r = jnp.pad(r, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        w = jnp.pad(w, pad, constant_values=1.0)  # decay 1 ⇒ state unchanged
+    nc = (s + ps) // chunk
+
+    kernel = functools.partial(_wkv_kernel, num_chunks=nc)
+    out, sfin = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, hd), lambda b_, h_, c_: (h_, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s + ps, h, hd), r.dtype),
+            jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return out[:, :s], sfin

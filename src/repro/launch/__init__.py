@@ -1,0 +1,6 @@
+"""Launch layer — production mesh, dry-run, roofline, train/serve drivers.
+
+NOTE: importing this package never touches jax device state; dryrun.py must
+be executed as a script (python -m repro.launch.dryrun) so its XLA_FLAGS
+lines run before jax initializes.
+"""

@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run — prove the distribution config is coherent.
+
+For every (architecture × input shape) and each production mesh
+(single-pod 16×16 = 256 chips, multi-pod 2×16×16 = 512 chips):
+lower + compile the step function with ShapeDtypeStruct inputs (no
+allocation), print memory/cost analysis, and append a JSON record with the
+roofline terms (launch/roofline.py) to the results file.
+
+The 512 placeholder host devices exist ONLY here (the two lines above run
+before any jax import — device count locks on first init).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --all --out benchmarks/results/dryrun.jsonl
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.configs.base import FLConfig
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import report_from_compiled
+from repro.launch.specs import (
+    axes_for,
+    batch_specs,
+    batch_structs,
+    cache_specs,
+    cache_structs,
+    opt_specs,
+    param_specs,
+    param_structs,
+)
+from repro.models.split import split_params
+from repro.optim.sgd import sgd
+from repro.utils.sharding import MeshAxes, named, set_axis_ctx, clear_axis_ctx
+from repro.utils.pytree import tree_map_with_path_str
+
+FED_CLIENTS = 2          # one PFedDST client cohort per pod
+PROBE_BATCH = 8          # per-client probe batch for the s_l score
+
+
+def _stack_sds(tree, m):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((m,) + x.shape, x.dtype), tree
+    )
+
+
+def _add_pod(spec_tree):
+    from repro.utils.sharding import tree_add_leading
+
+    return tree_add_leading(spec_tree, "pod")
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "long_500k needs sub-quadratic attention (DESIGN.md §6)"
+    return None
+
+
+def build(arch: str, shape_name: str, multi_pod: bool, mesh):
+    """→ (jitted_fn, args_sds) for one combo, ready to .lower()."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    opt = sgd(0.1, momentum=0.9, weight_decay=0.005)
+
+    if shape.kind == "train":
+        # within-client mesh view: pod carries clients in multi-pod
+        axes = MeshAxes.from_mesh(mesh, pod_merge="data") if not multi_pod \
+            else MeshAxes(data=16, model=16)
+        params_sds = param_structs(cfg)
+        e_sds, h_sds = split_params(cfg, params_sds)
+        e_spec = param_specs(cfg, e_sds, axes)
+        h_spec = param_specs(cfg, h_sds, axes)
+        oe_sds = jax.eval_shape(opt.init, e_sds)
+        oh_sds = jax.eval_shape(opt.init, h_sds)
+        oe_spec = opt_specs(cfg, oe_sds, axes)
+        oh_spec = opt_specs(cfg, oh_sds, axes)
+
+        if not multi_pod:
+            batch_sds = batch_structs(cfg, shape.global_batch, shape.seq_len)
+            b_spec = batch_specs(cfg, batch_sds, axes)
+            fn = steps_mod.make_train_pair_step(cfg, opt, opt, remat=True)
+            in_specs = (e_spec, h_spec, oe_spec, oh_spec, b_spec)
+            out_specs = (e_spec, h_spec, oe_spec, oh_spec, P())
+            args = (e_sds, h_sds, oe_sds, oh_sds, batch_sds)
+        else:
+            m = FED_CLIENTS
+            per_client = max(shape.global_batch // m, 1)
+            train_sds = _stack_sds(
+                batch_structs(cfg, per_client, shape.seq_len), m
+            )
+            probe_sds = _stack_sds(
+                batch_structs(cfg, PROBE_BATCH, shape.seq_len), m
+            )
+            cb_spec = tree_map_with_path_str(
+                lambda p, x: P("pod", "data", *([None] * (x.ndim - 2))),
+                train_sds,
+            )
+            pb_spec = tree_map_with_path_str(
+                lambda p, x: P("pod", *([None] * (x.ndim - 1))), probe_sds
+            )
+            fl = FLConfig(num_clients=m, peers_per_round=1)
+            fn = steps_mod.make_fed_round_step(cfg, fl, opt, opt, remat=True)
+            in_specs = (
+                _add_pod(e_spec), _add_pod(h_spec),
+                _add_pod(oe_spec), _add_pod(oh_spec),
+                P(), P(), pb_spec, cb_spec,
+            )
+            out_specs = (
+                _add_pod(e_spec), _add_pod(h_spec),
+                _add_pod(oe_spec), _add_pod(oh_spec),
+                P(), P(), P(),
+            )
+            args = (
+                _stack_sds(e_sds, m), _stack_sds(h_sds, m),
+                _stack_sds(oe_sds, m), _stack_sds(oh_sds, m),
+                jax.ShapeDtypeStruct((m, m), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+                probe_sds, train_sds,
+            )
+        jf = jax.jit(
+            fn,
+            in_shardings=named(mesh, in_specs),
+            out_shardings=named(mesh, out_specs),
+            donate_argnums=(0, 1, 2, 3),   # params/opt update in place
+        )
+        return jf, args, cfg, shape
+
+    axes = axes_for(mesh, shape)
+    params_sds = param_structs(cfg)
+    p_spec = param_specs(cfg, params_sds, axes)
+
+    if shape.kind == "prefill":
+        batch_sds = batch_structs(cfg, shape.global_batch, shape.seq_len)
+        b_spec = batch_specs(cfg, batch_sds, axes)
+        fn = steps_mod.make_prefill_step(cfg, shape.seq_len)
+        jf = jax.jit(fn, in_shardings=named(mesh, (p_spec, b_spec)))
+        return jf, (params_sds, batch_sds), cfg, shape
+
+    # decode
+    cache_sds = cache_structs(cfg, shape.global_batch, shape.seq_len)
+    c_spec = cache_specs(cfg, cache_sds, axes, shape.seq_len)
+    tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_spec = P(
+        axes.data_name if shape.global_batch % axes.data == 0 else None, None
+    )
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = steps_mod.make_serve_step(cfg)
+    logits_spec = P(
+        axes.data_name if shape.global_batch % axes.data == 0 else None,
+        None,
+        axes.model_name if cfg.vocab_size % axes.model == 0 else None,
+    )
+    jf = jax.jit(
+        fn,
+        in_shardings=named(mesh, (p_spec, c_spec, tok_spec, P())),
+        out_shardings=named(mesh, (logits_spec, c_spec)),
+        donate_argnums=(1,),               # cache updates in place
+    )
+    return jf, (params_sds, cache_sds, tok_sds, pos_sds), cfg, shape
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool, verbose=True):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = 512 if multi_pod else 256
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if reason:
+        return {**base, "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_axis_ctx(data="data", model="model")
+    try:
+        t0 = time.time()
+        jf, args, cfg, shape = build(arch, shape_name, multi_pod, mesh)
+        with mesh:
+            lowered = jf.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        if verbose:
+            print(f"--- {arch} × {shape_name} × {mesh_name} ---")
+            print(mem)
+            cost = compiled.cost_analysis()
+            print({k: v for k, v in (cost or {}).items()
+                   if k in ("flops", "bytes accessed")})
+        rep = report_from_compiled(
+            arch, shape_name, mesh_name, chips, compiled, cfg, shape
+        )
+        rec = {**base, "status": "ok", "t_lower_s": round(t_lower, 1),
+               "t_compile_s": round(t_compile, 1), **rep.to_dict()}
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            if hasattr(mem, attr):
+                rec[attr] = int(getattr(mem, attr))
+        return rec
+    except Exception as e:  # a failure here is a bug in the system
+        traceback.print_exc()
+        return {**base, "status": "error", "error": f"{type(e).__name__}: {e}"}
+    finally:
+        clear_axis_ctx()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh
+    ]
+
+    records = []
+    for multi in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_combo(arch, shape_name, multi,
+                                verbose=not args.quiet)
+                records.append(rec)
+                status = rec["status"]
+                extra = rec.get("reason") or rec.get("error") or (
+                    f"bottleneck={rec.get('bottleneck')} "
+                    f"t=({rec.get('t_compute_s', 0):.2e},"
+                    f"{rec.get('t_memory_s', 0):.2e},"
+                    f"{rec.get('t_collective_s', 0):.2e})s"
+                )
+                print(f"[{status:7s}] {arch:25s} {shape_name:12s} "
+                      f"{rec['mesh']:10s} {extra}", flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,32 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis carries
+the federated client population (one PFedDST client cohort per pod), so
+cross-pod collectives = the paper's peer-exchange traffic.
+
+Functions, not module constants — importing this module must never touch
+jax device state (device count locks on first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (CPU smoke / examples)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_num_devices(mesh) -> int:
+    import numpy as np
+
+    return int(np.prod(mesh.devices.shape))

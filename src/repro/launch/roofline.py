@@ -1,0 +1,404 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants from
+utils/hw.py):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / (links × link_bw)
+
+Why a custom HLO analyzer instead of compiled.cost_analysis():
+XLA's HloCostAnalysis counts a `while` body ONCE — our layer stacks are
+lax.scan loops, so cost_analysis under-counts a 28-layer model ~28×
+(verified empirically; see EXPERIMENTS.md §Roofline methodology). The
+analyzer below walks the optimized HLO text, resolves operand shapes, and
+recursively scales loop bodies by their trip count (every scan-derived
+while's condition computation carries the bound as its single s32
+constant). cost_analysis() numbers are kept in the reports as the
+uncorrected cross-check.
+
+Accounting rules:
+  flops       dot: 2·|out|·Πcontract   (batch dims already in |out|)
+              convolution: 2·|out|·(Πkernel_spatial·Cin)
+  bytes       Σ (operands + output) of real instructions in non-fused
+              computations; fusion call-sites count their operands+output,
+              fused interiors are free (≈ HBM traffic after fusion).
+  collective  per op: max tensor bytes on the line (ring transfer ≈ full
+              tensor per device), ×2 for all-reduce (RS+AG phases);
+              scaled by enclosing loop trips like everything else.
+
+`links`: v5e chips have 4 ICI links; a (16,16) torus axis gives 2 usable
+per direction — we use 2 links × 50 GB/s for collective throughput.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.utils.hw import TPU_V5E, ChipSpec
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)"
+)
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\])[^,]*)")
+_TRIP_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes appearing in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems_dims(type_str: str):
+    """(elem_count, dims list) of the FIRST array shape in the string."""
+    m = _SHAPE_RE.search(type_str)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return 0, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return int(np.prod(dims)) if dims else 1, dims
+
+
+@dataclass
+class _Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=lambda: {k: 0.0 for k in _COLL_KINDS})
+    coll_count: float = 0.0
+
+    def add(self, other: "_Cost", times: float = 1.0):
+        self.flops += times * other.flops
+        self.bytes += times * other.bytes
+        for k in _COLL_KINDS:
+            self.coll[k] += times * other.coll[k]
+        self.coll_count += times * other.coll_count
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[str]] = {}
+        self.params: dict[str, dict[str, str]] = {}
+        self.entry = None
+        self.fused: set[str] = set()
+        self._parse(hlo_text)
+        self._memo: dict[str, _Cost] = {}
+
+    # -- parsing -----------------------------------------------------------
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            if cur is None or not line.startswith((" ", "\t", "}")):
+                m = _COMP_HDR_RE.match(line)
+                if m and line.rstrip().endswith("{"):
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    self.params[cur] = {
+                        name: typ
+                        for name, typ in _PARAM_RE.findall(m.group(2))
+                    }
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if cur is not None:
+                if line.startswith("}"):
+                    cur = None
+                else:
+                    self.comps[cur].append(line)
+        # which computations are fusion interiors
+        for lines in self.comps.values():
+            for line in lines:
+                for m in re.finditer(r"calls=%([\w.\-]+)", line):
+                    self.fused.add(m.group(1))
+
+    def _symtab(self, comp: str) -> dict[str, str]:
+        tab = dict(self.params.get(comp, {}))
+        for line in self.comps.get(comp, []):
+            m = _INSTR_RE.match(line)
+            if m:
+                tab[m.group(1)] = m.group(2)
+        return tab
+
+    def _operand_bytes(self, args: str, tab: dict) -> int:
+        total = 0
+        for arg in re.split(r",\s*(?![^()\[\]]*[\)\]])", args):
+            arg = arg.strip()
+            if not arg or arg.startswith("/*"):
+                continue
+            if "[" in arg and re.search(r"[a-z][a-z0-9]*\[", arg):
+                total += _shape_bytes(arg)
+            else:
+                name = arg.lstrip("%")
+                if name in tab:
+                    total += _shape_bytes(tab[name])
+        return total
+
+    def _trip_count(self, cond: str) -> int:
+        trips = []
+        for line in self.comps.get(cond, []):
+            trips += [int(x) for x in _TRIP_RE.findall(line)]
+        return max(trips) if trips else 1
+
+    # -- cost --------------------------------------------------------------
+    def cost(self, comp: str | None = None) -> _Cost:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = _Cost()  # cycle guard (HLO has none, but safe)
+        c = _Cost()
+        tab = self._symtab(comp)
+        in_fusion = comp in self.fused
+        for line in self.comps.get(comp, []):
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, rtype, op, rest = m.groups()
+            # close the operand parens region (attrs follow after ')')
+            depth, idx = 1, 0
+            for idx, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            args, attrs = rest[:idx], rest[idx + 1:]
+
+            if op == "dot":
+                out_elems, _ = _shape_elems_dims(rtype)
+                lhs = args.split(",")[0].strip()
+                lhs_type = lhs if "[" in lhs else tab.get(lhs.lstrip("%"), "")
+                _, lhs_dims = _shape_elems_dims(lhs_type)
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
+                contract = 1
+                if cm and lhs_dims:
+                    for d in cm.group(1).split(","):
+                        if d and int(d) < len(lhs_dims):
+                            contract *= lhs_dims[int(d)]
+                c.flops += 2.0 * out_elems * contract
+                if not in_fusion:
+                    c.bytes += _shape_bytes(rtype) + self._operand_bytes(
+                        args, tab
+                    )
+                continue
+
+            if op == "convolution":
+                out_elems, _ = _shape_elems_dims(rtype)
+                parts = [a.strip() for a in args.split(",")]
+                rhs = parts[1] if len(parts) > 1 else ""
+                rhs_type = rhs if "[" in rhs else tab.get(rhs.lstrip("%"), "")
+                rhs_elems, rhs_dims = _shape_elems_dims(rhs_type)
+                cout = rhs_dims[-1] if rhs_dims else 1
+                c.flops += 2.0 * out_elems * (rhs_elems / max(cout, 1))
+                if not in_fusion:
+                    c.bytes += _shape_bytes(rtype) + self._operand_bytes(
+                        args, tab
+                    )
+                continue
+
+            if op == "while":
+                bm = re.search(r"body=%([\w.\-]+)", attrs)
+                cm = re.search(r"condition=%([\w.\-]+)", attrs)
+                if bm and cm:
+                    trip = self._trip_count(cm.group(1))
+                    sub = _Cost()
+                    sub.add(self.cost(bm.group(1)))
+                    sub.add(self.cost(cm.group(1)))
+                    c.add(sub, times=trip)
+                continue
+
+            if op == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{|true_computation=|"
+                    r"false_computation=)%?([\w.\-]+)", attrs)
+                if branches:
+                    worst = max(
+                        (self.cost(b) for b in branches),
+                        key=lambda x: x.flops + x.bytes,
+                    )
+                    c.add(worst)
+                continue
+
+            if op == "fusion" or op in ("call", "async-start"):
+                fm = re.search(r"(?:calls|to_apply)=%([\w.\-]+)", attrs)
+                if fm:
+                    c.add(self.cost(fm.group(1)))
+                if op == "fusion" and not in_fusion:
+                    c.bytes += _shape_bytes(rtype) + self._operand_bytes(
+                        args, tab
+                    )
+                continue
+
+            coll = next((k for k in _COLL_KINDS if op.startswith(k)), None)
+            if coll:
+                if op.endswith("-done"):
+                    continue
+                b = max(
+                    _shape_bytes(rtype),
+                    self._operand_bytes(args, tab),
+                )
+                c.coll[coll] += 2 * b if coll == "all-reduce" else b
+                c.coll_count += 1
+                if not in_fusion:
+                    c.bytes += _shape_bytes(rtype) + self._operand_bytes(
+                        args, tab
+                    )
+                continue
+
+            # slice-granular ops: XLA updates/reads these in place on TPU —
+            # count the moved slice, not the full buffer
+            if op == "dynamic-update-slice":
+                parts = [a.strip() for a in re.split(
+                    r",\s*(?![^()\[\]]*[\)\]])", args)]
+                upd = parts[1] if len(parts) > 1 else ""
+                upd_type = upd if "[" in upd else tab.get(upd.lstrip("%"), "")
+                if not in_fusion:
+                    c.bytes += 2 * _shape_bytes(upd_type)
+                continue
+            if op in ("dynamic-slice", "gather", "scatter"):
+                if not in_fusion:
+                    c.bytes += 2 * _shape_bytes(rtype)
+                continue
+
+            # generic real op (copy, reduce, …)
+            if op in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "after-all", "partition-id"):
+                continue
+            tm = re.search(r"to_apply=%([\w.\-]+)", attrs)
+            if tm:
+                c.add(self.cost(tm.group(1)))
+            if not in_fusion:
+                c.bytes += _shape_bytes(rtype) + self._operand_bytes(args, tab)
+        self._memo[comp] = c
+        return c
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    a = HloAnalyzer(hlo_text)
+    c = a.cost()
+    total_coll = sum(c.coll.values())
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "coll": {**{k: v for k, v in c.coll.items()}, "total": total_coll,
+                 "count": c.coll_count},
+    }
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per device (trip-corrected)
+    hlo_bytes: float          # per device
+    coll_bytes: float         # per device
+    coll_detail: dict = field(default_factory=dict)
+    model_flops: float = 0.0  # analytic 6·N·D (global)
+    xla_flops: float = 0.0    # uncorrected cost_analysis cross-check
+    xla_bytes: float = 0.0
+    chip: ChipSpec = TPU_V5E
+    ici_links: int = 2
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.chip.peak_flops_bf16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.chip.hbm_bandwidth
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.ici_links * self.chip.ici_link_bandwidth)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO FLOPs) — remat/redundancy waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "coll_detail": self.coll_detail,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "xla_flops_per_dev": self.xla_flops,
+            "xla_bytes_per_dev": self.xla_bytes,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE).
+
+    D = tokens processed by the step: B·S for train/prefill, B for decode.
+    Train counts fwd+bwd (6·N·D); prefill/decode are forward-only (2·N·D).
+    """
+    n = cfg.active_param_count() if cfg.num_experts else cfg.param_count()
+    if shape.kind == "train":
+        # the PFedDST pair step runs phase-e + phase-h = 2 fwd + 2 bwd
+        return 2 * 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def report_from_compiled(arch, shape_name, mesh_name, chips, compiled, cfg,
+                         shape) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    cost = cost or {}
+    hlo = analyze_hlo(compiled.as_text())
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo["flops"], hlo_bytes=hlo["bytes"],
+        coll_bytes=float(hlo["coll"]["total"]), coll_detail=hlo["coll"],
+        model_flops=model_flops_for(cfg, shape),
+        xla_flops=float(cost.get("flops", 0.0)),
+        xla_bytes=float(cost.get("bytes accessed", 0.0)),
+    )

@@ -1,0 +1,208 @@
+"""Dry-run input specs + sharding assembly per (arch × input-shape × mesh).
+
+Everything here is ShapeDtypeStruct-based: params, optimizer states, batches
+and KV caches are described, never allocated (the full configs are up to
+671 B parameters).
+
+Layouts (baseline policy — hillclimbed in EXPERIMENTS.md §Perf):
+  params       rule engine in utils/sharding.py (TP on "model", FSDP on
+               "data"); the stacked-layer leading dim is never sharded.
+  opt state    mirrors the param layout (momentum has the param's shape).
+  batch        tokens/labels (B, S): batch over the data meta-axis.
+  KV caches    batch over "data"; the *sequence* dim over "model"
+               (flash-decode style) — KV-head counts (1–8) don't divide the
+               16-way model axis on any assigned arch, sequence does.
+  rwkv state   heads over "model" (S (L,B,H,hd,hd) has no seq dim).
+  MLA cache    latent is head-free: batch over "data", seq over "model".
+
+Multi-pod: the "pod" axis merges into the data meta-axis (serving
+scale-out), or into "model" for long_500k where global_batch=1 leaves
+nothing else to shard (MeshAxes.from_mesh(pod_merge=...)). The federated
+train step instead keeps clients on "pod" (see steps.fed_round_step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import model as model_mod
+from repro.utils.pytree import tree_map_with_path_str
+from repro.utils.sharding import MeshAxes, ShardingRules, _div, _flat
+
+
+# ---------------------------------------------------------------------------
+# axes selection per shape
+# ---------------------------------------------------------------------------
+
+def axes_for(mesh, shape: InputShape) -> MeshAxes:
+    """Multi-pod merge policy: pod→data except long_500k (pod→model)."""
+    pod_merge = "model" if shape.name == "long_500k" else "data"
+    return MeshAxes.from_mesh(mesh, pod_merge=pod_merge)
+
+
+# ---------------------------------------------------------------------------
+# params + optimizer state
+# ---------------------------------------------------------------------------
+
+def param_structs(cfg: ModelConfig):
+    """Param pytree as ShapeDtypeStructs (no allocation)."""
+    return jax.eval_shape(
+        lambda k: model_mod.init_params(cfg, k), jax.random.PRNGKey(0)
+    )
+
+
+def param_specs(cfg: ModelConfig, params_sds, axes: MeshAxes):
+    rules = ShardingRules(axes=axes)
+    return rules.tree_param_specs(params_sds)
+
+
+def opt_structs(opt, params_sds):
+    return jax.eval_shape(opt.init, params_sds)
+
+
+def opt_specs(cfg: ModelConfig, opt_sds, axes: MeshAxes):
+    """Momentum mirrors param sharding; scalars replicate."""
+    rules = ShardingRules(axes=axes)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        # strip the optimizer-state prefix (mu/, nu/, …) → param path
+        parts = path.split("/")
+        ppath = "/".join(parts[1:]) if len(parts) > 1 else path
+        return rules.param_spec(ppath, leaf.shape)
+
+    return tree_map_with_path_str(spec, opt_sds)
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def batch_structs(cfg: ModelConfig, batch: int, seq: int):
+    """Model-input batch dict as SDS (tokens + modality stubs)."""
+    out = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+def batch_specs(cfg: ModelConfig, batch_sds, axes: MeshAxes):
+    d = axes.data_name if _div(
+        jax.tree_util.tree_leaves(batch_sds)[0].shape[0], axes.data
+    ) else None
+
+    def spec(path, leaf):
+        return P(*([d] + [None] * (leaf.ndim - 1)))
+
+    return tree_map_with_path_str(spec, batch_sds)
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+def cache_structs(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: model_mod.init_cache(cfg, batch, max_seq)
+    )
+
+
+def cache_specs(cfg: ModelConfig, cache_sds, axes: MeshAxes, max_seq: int):
+    """Heuristic per-leaf cache layout with divisibility fallbacks."""
+    d, m = axes.data_name, axes.model_name
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        p = path.lower()
+        # hybrid per-layer state lists have int path components; rwkv/dense
+        # stacks have a leading L dim on 4/5-dim leaves.
+        def dax(n):
+            return d if _div(n, axes.data) else None
+
+        def max_(n):
+            return m if _div(n, axes.model) else None
+
+        # rwkv WKV state (L, B, H, hd, hd): heads on model
+        if p.endswith("/s") or "/s/" in p or p == "s":
+            if nd == 5:
+                return P(None, dax(shape[1]), max_(shape[2]), None, None)
+            if nd == 4:  # (B, H, hd, hd) unstacked
+                return P(dax(shape[0]), max_(shape[1]), None, None)
+        # prev_x (L, B, D) or (B, D): model on D
+        if "prev_x" in p:
+            if nd == 3:
+                return P(None, dax(shape[1]), max_(shape[2]))
+            if nd == 2:
+                return P(dax(shape[0]), max_(shape[1]))
+        # MLA latent (L, B, S, R): seq on model
+        if "c_kv" in p or "k_rope" in p:
+            return P(None, dax(shape[1]), max_(shape[2]), None)
+        # LRU state (B, W) / conv tail etc: model on width
+        if "lru" in p or "hidden" in p:
+            if nd == 2:
+                return P(dax(shape[0]), max_(shape[1]))
+        # dense/enc-dec KV (L, B, S, K, hd) or hybrid ring (B, W, K, hd):
+        if nd == 5:
+            return P(None, dax(shape[1]), max_(shape[2]), None, None)
+        if nd == 4:
+            return P(dax(shape[0]), max_(shape[1]), None, None)
+        if nd == 3:
+            return P(dax(shape[0]), max_(shape[1]), None)
+        if nd == 2:
+            return P(dax(shape[0]), max_(shape[1]))
+        return P(*([None] * nd))
+
+    return tree_map_with_path_str(spec, cache_sds)
+
+
+# ---------------------------------------------------------------------------
+# the assignment's input_specs() entry point
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape_name: str, opt=None):
+    """ShapeDtypeStruct stand-ins for every input of the step function of
+    `shape_name` for architecture `cfg` (the dry-run contract).
+
+    → dict with keys depending on shape kind:
+      train:   params, opt_e, opt_h, batch
+      prefill: params, batch
+      decode:  params, cache, tokens, pos
+    """
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        from repro.optim.sgd import sgd
+
+        opt = opt or sgd(0.1, momentum=0.9, weight_decay=0.005)
+        params = param_structs(cfg)
+        from repro.models.split import split_params
+
+        e_sds, h_sds = split_params(cfg, params)
+        return {
+            "extractor": e_sds,
+            "header": h_sds,
+            "opt_e": jax.eval_shape(opt.init, e_sds),
+            "opt_h": jax.eval_shape(opt.init, h_sds),
+            "batch": batch_structs(cfg, shape.global_batch, shape.seq_len),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": param_structs(cfg),
+            "batch": batch_structs(cfg, shape.global_batch, shape.seq_len),
+        }
+    # decode
+    return {
+        "params": param_structs(cfg),
+        "cache": cache_structs(cfg, shape.global_batch, shape.seq_len),
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

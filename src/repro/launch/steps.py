@@ -1,0 +1,135 @@
+"""Step functions lowered by the dry-run and executed by train.py/serve.py.
+
+  train shapes   → train_pair_step: one phase-e + one phase-h microstep
+                   (the paper's alternating partial-freeze cycle, Eq. 3→4).
+                   Multi-pod → fed_round_step: the FULL PFedDST round
+                   (score → select → aggregate → phase-e → phase-h) with the
+                   client population on the "pod" axis.
+  prefill shapes → prefill_step (logits + KV-cache fill where the family
+                   has a cache; recurrent archs lower logits-only forward).
+  decode shapes  → serve_step: ONE new token against a seq_len KV cache.
+
+Backends: big lowerings use the "chunked" XLA online-softmax path — the
+compile-time equivalent of the Pallas flash kernel (same block-banded FLOP
+structure); the kernel itself is the TPU-runtime path and cannot be lowered
+for the host platform.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core.aggregation import aggregate_extractors, selection_to_weights
+from repro.core.partial_freeze import make_phase_steps
+from repro.core.scoring import (
+    header_gram_tree,
+    loss_disparity_matrix,
+    recency_scores,
+)
+from repro.core.selection import combined_scores, select_peers, update_recency
+from repro.models import model as model_mod
+from repro.models.split import merge_params
+
+
+# ---------------------------------------------------------------------------
+# local training step (single-pod train shapes)
+# ---------------------------------------------------------------------------
+
+def make_train_pair_step(cfg: ModelConfig, opt_e, opt_h, *, backend="chunked",
+                         remat=True):
+    steps = make_phase_steps(cfg, opt_e, opt_h, backend=backend, remat=remat)
+
+    def train_step(extractor, header, opt_e_state, opt_h_state, batch):
+        e, oe, m_e = steps.phase_e(extractor, header, opt_e_state, batch)
+        h, oh, m_h = steps.phase_h(e, header, opt_h_state, batch)
+        return e, h, oe, oh, {"loss_e": m_e["loss"], "loss_h": m_h["loss"]}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# the full PFedDST round (multi-pod train shapes) — clients on "pod"
+# ---------------------------------------------------------------------------
+
+def make_fed_round_step(cfg: ModelConfig, fl: FLConfig, opt_e, opt_h, *,
+                        backend="chunked", remat=True):
+    """One communication round, population mode, M = pod-count clients.
+
+    Inputs (leading M axis on pytrees):
+      extractor/header/opt states, last_selected (M,M) i32, round scalar,
+      probe_batch (M, Bp, S), train_batch (M, Bt, S).
+    """
+    steps = make_phase_steps(cfg, opt_e, opt_h, backend=backend, remat=remat)
+
+    def fed_round_step(
+        extractor, header, opt_e_state, opt_h_state,
+        last_selected, rnd, probe_batch, train_batch,
+    ):
+        # ---- 1. scoring (Eq. 6/7/8 → 9) -----------------------------------
+        params = jax.vmap(merge_params)(extractor, header)
+        s_l = loss_disparity_matrix(cfg, params, probe_batch)
+        s_d = header_gram_tree(header)
+        s_p = recency_scores(last_selected, rnd, fl.recency_lambda)
+        scores = combined_scores(
+            s_l, s_d, s_p, alpha=fl.alpha, comm_cost=fl.comm_cost
+        )
+        m = s_d.shape[0]
+        # ---- 2/3. select + aggregate (the cross-pod collective) ----------
+        mask = select_peers(scores, k=min(fl.peers_per_round, m - 1))
+        weights = selection_to_weights(mask, include_self=True)
+        agg_e = aggregate_extractors(extractor, weights)
+        # ---- 4/5. one phase-e + one phase-h microstep ---------------------
+        new_e, oe, m_e = jax.vmap(steps.phase_e)(
+            agg_e, header, opt_e_state, train_batch
+        )
+        new_h, oh, m_h = jax.vmap(
+            lambda h, e, o, b: steps.phase_h(e, h, o, b)
+        )(header, new_e, opt_h_state, train_batch)
+        # ---- 7. context arrays --------------------------------------------
+        new_last = update_recency(last_selected, mask, rnd)
+        metrics = {
+            "loss_e": jnp.mean(m_e["loss"]),
+            "loss_h": jnp.mean(m_h["loss"]),
+            "mean_score": jnp.sum(jnp.where(mask, scores, 0.0))
+            / jnp.maximum(jnp.sum(mask), 1),
+        }
+        return new_e, new_h, oe, oh, new_last, rnd + 1, metrics
+
+    return fed_round_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, seq_len: int, *, backend="chunked"):
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+
+        def prefill_step(params, batch):
+            if cfg.family == "vlm":
+                # prefix embeds fold into the forward; cache fill for the
+                # text positions only is exercised by decode_32k
+                logits, _ = model_mod.forward(
+                    cfg, params, batch, backend=backend
+                )
+                return logits
+            logits, cache = model_mod.prefill(
+                cfg, params, batch, max_seq=seq_len, backend=backend
+            )
+            return logits, cache
+
+        return prefill_step
+
+    def prefill_step(params, batch):  # recurrent archs: logits-only forward
+        logits, _ = model_mod.forward(cfg, params, batch, backend=backend)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return model_mod.decode_step(cfg, params, cache, tokens, pos)
+
+    return serve_step

@@ -1,0 +1,418 @@
+"""Attention: GQA/MHA/MLA, full + chunked(online-softmax) + decode paths.
+
+Backends:
+* ``naive``   — materializes (.., Sq, Skv) scores; smoke/small shapes only.
+* ``chunked`` — pure-jax online-softmax over KV blocks (lax.scan); the
+  XLA-path used for 32k prefill lowering (no S×S materialization). The
+  Pallas flash kernel (kernels/flash_attention.py) is the TPU hot-path and
+  is validated against the same oracle.
+* decode      — single-token query against a (ring-buffered) KV cache.
+
+All softmax math in float32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+CHUNK_Q = 1024
+CHUNK_KV = 1024
+
+
+# ---------------------------------------------------------------------------
+# init (single layer — stacked by the caller via vmap)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, *, depth_scale: float = 1.0):
+    H, K, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, cfg.dtype),
+        "wk": dense_init(ks[1], D, K * hd, cfg.dtype),
+        "wv": dense_init(ks[2], D, K * hd, cfg.dtype),
+        "wo": dense_init(ks[3], H * hd, D, cfg.dtype, scale=depth_scale),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((K * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((K * hd,), cfg.dtype)
+    return p
+
+
+def init_mla(key, cfg, *, depth_scale: float = 1.0):
+    D, H = cfg.d_model, cfg.num_heads
+    nope, rope_d, v_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], D, cfg.q_lora_rank, cfg.dtype),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), cfg.dtype),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, H * (nope + rope_d), cfg.dtype),
+        "wkv_a": dense_init(ks[2], D, cfg.kv_lora_rank + rope_d, cfg.dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), cfg.dtype),
+        "wkv_b": dense_init(ks[3], cfg.kv_lora_rank, H * (nope + v_d), cfg.dtype),
+        "wo": dense_init(ks[4], H * v_d, D, cfg.dtype, scale=depth_scale),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core attend — q: (B,Sq,H,hd) grouped to (B,Sq,K,R,hd); k/v: (B,Skv,K,hd)
+# ---------------------------------------------------------------------------
+
+def _group_q(q, num_kv: int):
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, hd)
+
+
+def attend(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    backend: str = "auto",
+):
+    """General attention. Returns (B, Sq, H, v_dim).
+
+    window > 0 → sliding-window causal attention (local attention).
+    q_offset   — absolute position of q[0] (for chunked prefill continuation).
+    """
+    b, sq, h, _ = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    if backend == "auto":
+        backend = "naive" if (sq * skv <= 4096 * 4096) else "chunked"
+    if backend == "flash":
+        # Pallas TPU kernel (interpret-mode on CPU). q_offset must be static.
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=int(q_offset)
+        )
+    qg = _group_q(q, kh)
+    if backend == "naive":
+        out = _attend_naive(qg, k, v, causal, window, q_offset)
+    else:
+        out = _attend_chunked(qg, k, v, causal, window, q_offset)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def _mask_bias(sq, skv, causal, window, q_offset):
+    rows = jnp.arange(sq)[:, None] + q_offset
+    cols = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= cols <= rows
+    if window:
+        ok &= cols > rows - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend_naive(qg, k, v, causal, window, q_offset):
+    scale = 1.0 / np.sqrt(qg.shape[-1])
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qg, k).astype(jnp.float32) * scale
+    scores += _mask_bias(qg.shape[1], k.shape[1], causal, window, q_offset)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkrqs,bskv->bqkrv", probs, v)
+
+
+def _attend_chunked(qg, k, v, causal, window, q_offset):
+    """Online-softmax over KV chunks with a *static* block-triangular
+    schedule: a python loop over q blocks, each scanning only the kv blocks
+    inside its causal/window band. FLOPs ≈ the true masked-attention FLOPs
+    (no 2× causal waste), no S×S materialization.
+
+    q_offset must be a python int here (prefill lowers with offset 0).
+    """
+    b, sq, kh, r, hd = qg.shape
+    skv, vd = k.shape[1], v.shape[-1]
+    cq = min(CHUNK_Q, sq)
+    ckv = min(CHUNK_KV, skv)
+    pq = (-sq) % cq
+    pkv = (-skv) % ckv
+    if pq:
+        qg = jnp.pad(qg, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    nq, nkv = (sq + pq) // cq, (skv + pkv) // ckv
+    scale = 1.0 / np.sqrt(hd)
+
+    kc = jnp.moveaxis(k.reshape(b, nkv, ckv, kh, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nkv, ckv, kh, vd), 1, 0)
+
+    def kv_step(q_i, row_pos):
+        # One f32 materialization of the (q, c) score block per step (the
+        # dot writes f32 directly via preferred_element_type), one p tensor
+        # in v.dtype (bf16 in production). The earlier form wrote scores in
+        # bf16 + an f32 copy + a separate masked-p f32 — 78 % of the
+        # prefill_32k memory term (EXPERIMENTS.md §Perf pair 2 iter 2).
+        def step(carry, inp):
+            m, l, acc = carry
+            k_j, v_j, col_pos = inp
+            s = jnp.einsum(
+                "bqkrh,bckh->bqkrc", q_i, k_j,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            ok = col_pos[None, :] < skv  # mask kv padding
+            if causal:
+                ok = ok & (col_pos[None, :] <= row_pos[:, None])
+            if window:
+                ok = ok & (col_pos[None, :] > row_pos[:, None] - window)
+            okb = ok[:, None, None, :][None]  # (1, q, 1, 1, c)
+            s = jnp.where(okb, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # clamp keeps exp(NEG−NEG)=1 from resurrecting fully-masked rows
+            m_safe = jnp.maximum(m_new, 0.5 * NEG_INF)[..., None]
+            p = jnp.exp(s - m_safe).astype(v_j.dtype)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p.astype(jnp.float32), axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkrc,bckv->bqkrv", p, v_j,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        return step
+
+    outs = []
+    all_cols = jnp.arange(nkv * ckv).reshape(nkv, ckv)
+    for qi in range(nq):  # static loop → per-block static kv ranges
+        q_i = qg[:, qi * cq : (qi + 1) * cq]
+        row_min = q_offset + qi * cq
+        row_max = row_min + cq - 1
+        lo = 0
+        hi = nkv
+        if causal:
+            hi = min(nkv, row_max // ckv + 1)
+        if window:
+            lo = max(0, (row_min - window + 1) // ckv)
+        row_pos = row_min + jnp.arange(cq)
+        m0 = jnp.full((b, cq, kh, r), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, cq, kh, r), jnp.float32)
+        a0 = jnp.zeros((b, cq, kh, r, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step(q_i, row_pos),
+            (m0, l0, a0),
+            (kc[lo:hi], vc[lo:hi], all_cols[lo:hi]),
+        )
+        l = jnp.maximum(l, 1e-30)
+        outs.append((acc / l[..., None]).astype(v.dtype))
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# full-sequence layer forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def qkv_proj(p, x, cfg):
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (
+        q.reshape(b, s, H, hd),
+        k.reshape(b, s, K, hd),
+        v.reshape(b, s, K, hd),
+    )
+
+
+def attention_layer(
+    p,
+    x,
+    positions,
+    cfg,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    cross_kv=None,
+    backend: str = "auto",
+):
+    """Self- (or cross-) attention for a full sequence. x: (B,S,D)."""
+    b, s, _ = x.shape
+    if cross_kv is None:
+        q, k, v = qkv_proj(p, x, cfg)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, H, hd)
+        k, v = cross_kv  # precomputed from encoder output
+        causal = False
+    out = attend(q, k, v, causal=causal, window=window, backend=backend)
+    out = out.reshape(b, s, -1)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+def cross_kv_from_encoder(p, enc_out, cfg):
+    """Project encoder output once into (k, v) for decoder cross-attention."""
+    b, s, _ = enc_out.shape
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(b, s, K, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(b, s, K, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(K, hd)
+        v = v + p["bv"].reshape(K, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype=None):
+    """(k, v) buffers. For window attention, max_seq should be the window."""
+    dtype = dtype or cfg.dtype
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, max_seq, K, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(p, x, cache, pos, cfg, *, window: int = 0):
+    """One-token decode. x: (B,1,D); pos: scalar int32 absolute position.
+
+    Ring-buffer writes when window > 0 (cache length == window).
+    Returns (out (B,1,D), new_cache).
+    """
+    b = x.shape[0]
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, 1, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, 1, K, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, 1, K, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(1, 1, H, hd)
+        k = k + p["bk"].reshape(1, 1, K, hd)
+        v = v + p["bv"].reshape(1, 1, K, hd)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+
+    cache_len = cache["k"].shape[1]
+    slot = (pos % cache_len) if window else jnp.minimum(pos, cache_len - 1)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)
+    )
+
+    qg = q.reshape(b, K, H // K, hd)
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bkrh,bskh->bkrs", qg, ck).astype(jnp.float32) * scale
+    idx = jnp.arange(cache_len)
+    if window:
+        valid = (idx <= slot) | (pos >= cache_len)  # full ring once wrapped
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkrs,bskv->bkrv", probs, cv).reshape(b, 1, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek) — full-seq and absorbed decode
+# ---------------------------------------------------------------------------
+
+def _mla_qkv_full(p, x, positions, cfg):
+    b, s, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d, v_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", q, p["wq_b"]).reshape(b, s, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = kv_a[..., : cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank :]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    kv = jnp.einsum("bsr,rh->bsh", c_kv, p["wkv_b"]).reshape(
+        b, s, H, nope + v_d
+    )
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, H, rope_d))], axis=-1
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return q, k, v, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_layer(p, x, positions, cfg, *, backend: str = "auto"):
+    q, k, v, _, _ = _mla_qkv_full(p, x, positions, cfg)
+    out = attend(q, k, v, causal=True, backend=backend)
+    b, s = x.shape[:2]
+    return jnp.einsum(
+        "bsh,hd->bsd", out.reshape(b, s, -1), p["wo"]
+    )
+
+
+def init_mla_cache(cfg, batch: int, max_seq: int, dtype=None):
+    """Compressed MLA cache: latent c_kv + shared rope key (the MLA win —
+    576 floats/token instead of H·(nope+v))."""
+    dtype = dtype or cfg.dtype
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cache, pos, cfg):
+    """Absorbed-weight MLA decode (TPU-native: scores in latent space)."""
+    b = x.shape[0]
+    H = cfg.num_heads
+    nope, rope_d, v_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    L = cfg.kv_lora_rank
+    posb = jnp.full((b, 1), pos, jnp.int32)
+
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", q, p["wq_b"]).reshape(b, 1, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)[:, 0]  # (b,H,rope)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv_new = rms_norm(kv_a[..., :L], p["kv_norm"], cfg.norm_eps)
+    k_rope_new = apply_rope(
+        kv_a[..., L:][:, :, None, :], posb, cfg.rope_theta
+    )[:, :, 0, :]
+
+    ckv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0)
+    )
+    krope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0)
+    )
+
+    wkv_b = p["wkv_b"].reshape(L, H, nope + v_d)
+    wk, wv = wkv_b[..., :nope], wkv_b[..., nope:]
+    # absorb: query into latent space
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope[:, 0], wk)  # (b,H,L)
+    scale = 1.0 / np.sqrt(nope + rope_d)
+    scores = (
+        jnp.einsum("bhl,bsl->bhs", q_lat.astype(jnp.float32), ckv.astype(jnp.float32))
+        + jnp.einsum(
+            "bhr,bsr->bhs",
+            q_rope.astype(jnp.float32),
+            krope.astype(jnp.float32),
+        )
+    ) * scale
+    valid = jnp.arange(ckv.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsl->bhl", probs.astype(ckv.dtype), ckv)
+    ctx = jnp.einsum("bhl,lhv->bhv", ctx_lat, wv)  # (b,H,v_d)
+    out = jnp.einsum("bh,hd->bd", ctx.reshape(b, H * v_d), p["wo"])[:, None, :]
+    return out, {"c_kv": ckv, "k_rope": krope}

@@ -1,0 +1,116 @@
+"""ResNet-18 (CIFAR variant) — the paper's own experimental model.
+
+GroupNorm replaces BatchNorm (FL-safe under parameter aggregation; BN running
+stats are pathological when averaged across non-IID clients — DESIGN.md §2).
+
+extractor = stem + stages + global-avg-pool; header = final fc — exactly the
+paper's "feature extraction layers" / "header" split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import group_norm
+
+GN_GROUPS = 8
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype):
+    fan_in = kh * kw * cin
+    std = np.sqrt(2.0 / fan_in)
+    return (jax.random.normal(key, (kh, kw, cin, cout)) * std).astype(dtype)
+
+
+def _gn_params(c, dtype):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def conv2d(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def init_basic_block(key, cin, cout, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(ks[0], 3, 3, cin, cout, dtype),
+        "gn1": _gn_params(cout, dtype),
+        "conv2": _conv_init(ks[1], 3, 3, cout, cout, dtype),
+        "gn2": _gn_params(cout, dtype),
+    }
+    if cin != cout:
+        p["proj"] = _conv_init(ks[2], 1, 1, cin, cout, dtype)
+    return p
+
+
+def basic_block(p, x, stride: int):
+    h = conv2d(x, p["conv1"], stride)
+    h = jax.nn.relu(group_norm(h, p["gn1"]["scale"], p["gn1"]["bias"], GN_GROUPS))
+    h = conv2d(h, p["conv2"], 1)
+    h = group_norm(h, p["gn2"]["scale"], p["gn2"]["bias"], GN_GROUPS)
+    if "proj" in p:
+        x = conv2d(x, p["proj"], stride)
+    elif stride != 1:
+        x = x[:, ::stride, ::stride]
+    return jax.nn.relu(x + h)
+
+
+def init_cnn(key, cfg):
+    dtype = cfg.dtype
+    widths = [cfg.cnn_width * (2**i) for i in range(len(cfg.cnn_stages))]
+    keys = iter(jax.random.split(key, 2 + sum(cfg.cnn_stages)))
+    params = {
+        "stem": {
+            "conv": _conv_init(
+                next(keys), 3, 3, cfg.image_channels, widths[0], dtype
+            ),
+            "gn": _gn_params(widths[0], dtype),
+        },
+        "stages": [],
+    }
+    cin = widths[0]
+    for si, (n_blocks, cout) in enumerate(zip(cfg.cnn_stages, widths)):
+        stage = []
+        for bi in range(n_blocks):
+            stage.append(init_basic_block(next(keys), cin, cout, dtype))
+            cin = cout
+        params["stages"].append(stage)
+    params["head"] = {
+        "w": (jax.random.normal(next(keys), (cin, cfg.num_classes)) * 0.01).astype(
+            dtype
+        ),
+        "b": jnp.zeros((cfg.num_classes,), dtype),
+    }
+    return params
+
+
+def cnn_features(params, images, cfg):
+    """images: (B, H, W, C) → pooled features (B, D)."""
+    x = conv2d(images.astype(params["stem"]["conv"].dtype), params["stem"]["conv"], 1)
+    x = jax.nn.relu(
+        group_norm(
+            x, params["stem"]["gn"]["scale"], params["stem"]["gn"]["bias"],
+            GN_GROUPS,
+        )
+    )
+    for si, stage in enumerate(params["stages"]):
+        for bi, block in enumerate(stage):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            x = basic_block(block, x, stride)
+    return jnp.mean(x, axis=(1, 2))  # global average pool
+
+
+def cnn_forward(params, images, cfg):
+    feats = cnn_features(params, images, cfg)
+    logits = feats @ params["head"]["w"] + params["head"]["b"]
+    aux = {
+        "load_balance": jnp.zeros((), jnp.float32),
+        "router_z": jnp.zeros((), jnp.float32),
+    }
+    return logits, aux

@@ -1,0 +1,207 @@
+"""Whisper-style encoder-decoder backbone.
+
+The mel-spectrogram + conv frontend is a STUB per the assignment carve-out:
+``frames`` are precomputed (B, encoder_seq, d_model) embeddings. We implement
+the transformer backbone: bidirectional encoder, causal decoder with
+cross-attention, decoder KV-cache serving.
+
+Deviation (DESIGN.md §9): RMSNorm + RoPE instead of Whisper's LayerNorm +
+learned/sinusoidal positions — uniform with the rest of the zoo.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models.layers import (
+    apply_rope,
+    dense_init,
+    embed_lookup,
+    init_embed,
+    mlp,
+    rms_norm,
+)
+from repro.utils.sharding import constrain_act
+
+
+def _init_mlp(key, cfg, depth_scale):
+    ks = jax.random.split(key, 3)
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "wi": dense_init(ks[0], D, F, cfg.dtype),
+        "wg": dense_init(ks[1], D, F, cfg.dtype),
+        "wo": dense_init(ks[2], F, D, cfg.dtype, scale=depth_scale),
+    }
+
+
+def init_encoder_layer(key, cfg):
+    ka, kf = jax.random.split(key)
+    ds = 1.0 / np.sqrt(2 * cfg.encoder_layers)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "attn": attn_mod.init_attention(ka, cfg, depth_scale=ds),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "mlp": _init_mlp(kf, cfg, ds),
+    }
+
+
+def init_decoder_layer(key, cfg):
+    ka, kc, kf = jax.random.split(key, 3)
+    ds = 1.0 / np.sqrt(2 * cfg.num_layers)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "attn": attn_mod.init_attention(ka, cfg, depth_scale=ds),
+        "ln_cross": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "cross": attn_mod.init_attention(kc, cfg, depth_scale=ds),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "mlp": _init_mlp(kf, cfg, ds),
+    }
+
+
+def init_encdec(key, cfg):
+    ke, kd, kemb, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": init_embed(kemb, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "encoder": jax.vmap(lambda k: init_encoder_layer(k, cfg))(enc_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "layers": jax.vmap(lambda k: init_decoder_layer(k, cfg))(dec_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.padded_vocab, cfg.dtype),
+    }
+
+
+def encode(params, frames, cfg, *, backend="auto", remat=False):
+    """frames: (B, Se, D) stub embeddings → (B, Se, D)."""
+    x = frames.astype(cfg.dtype)
+    se = x.shape[1]
+    positions = jnp.arange(se)[None]
+
+    def body(x, layer):
+        h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        h = attn_mod.attention_layer(
+            layer["attn"], h, positions, cfg, causal=False, backend=backend
+        )
+        x = x + h
+        h = mlp(layer["mlp"], rms_norm(x, layer["ln2"], cfg.norm_eps), act=cfg.act)
+        return constrain_act(x + h, ("data", None, None)), None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_forward(params, tokens, frames, cfg, *, backend="auto", remat=False):
+    """Teacher-forced decode over full token sequence. Returns (logits, aux)."""
+    enc_out = encode(params, frames, cfg, backend=backend, remat=remat)
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens)
+    positions = jnp.arange(s)[None]
+
+    def body(x, layer):
+        h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        h = attn_mod.attention_layer(
+            layer["attn"], h, positions, cfg, causal=True, backend=backend
+        )
+        x = x + h
+        h = rms_norm(x, layer["ln_cross"], cfg.norm_eps)
+        ckv = attn_mod.cross_kv_from_encoder(layer["cross"], enc_out, cfg)
+        h = attn_mod.attention_layer(
+            layer["cross"], h, positions, cfg, cross_kv=ckv, backend=backend
+        )
+        x = x + h
+        h = mlp(layer["mlp"], rms_norm(x, layer["ln2"], cfg.norm_eps), act=cfg.act)
+        return constrain_act(x + h, ("data", None, None)), None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain_act(logits, ("data", None, "model"))
+    aux = {
+        "load_balance": jnp.zeros((), jnp.float32),
+        "router_z": jnp.zeros((), jnp.float32),
+    }
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_encdec_cache(params, frames, cfg, batch: int, max_seq: int):
+    """Decoder self-attn cache + precomputed per-layer cross k/v."""
+    enc_out = encode(params, frames, cfg)
+
+    def cross(layer):
+        k, v = attn_mod.cross_kv_from_encoder(layer["cross"], enc_out, cfg)
+        return {"k": k, "v": v}
+
+    cross_kv = jax.vmap(cross)(params["layers"])  # stacked (L, B, Se, K, hd)
+    one = attn_mod.init_kv_cache(cfg, batch, max_seq)
+    self_kv = jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one
+    )
+    return {"self": self_kv, "cross": cross_kv}
+
+
+def init_encdec_cache_shapes(cfg, batch: int, max_seq: int, dtype=None):
+    """Cache skeleton without running the encoder (dry-run input specs)."""
+    dtype = dtype or cfg.dtype
+    K, hd, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    se = cfg.encoder_seq
+    return {
+        "self": {
+            "k": jnp.zeros((L, batch, max_seq, K, hd), dtype),
+            "v": jnp.zeros((L, batch, max_seq, K, hd), dtype),
+        },
+        "cross": {
+            "k": jnp.zeros((L, batch, se, K, hd), dtype),
+            "v": jnp.zeros((L, batch, se, K, hd), dtype),
+        },
+    }
+
+
+def encdec_decode_step(params, cache, tokens, pos, cfg):
+    """One decoder token. tokens: (B,1)."""
+    x = embed_lookup(params["embed"], tokens)
+    b = x.shape[0]
+    K, hd, H = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+
+    def body(x, xs):
+        layer, self_l, cross_l = xs
+        h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        h, self_new = attn_mod.attention_decode(
+            layer["attn"], h, self_l, pos, cfg
+        )
+        x = x + h
+        # cross attention against the fixed encoder kv
+        h = rms_norm(x, layer["ln_cross"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", h, layer["cross"]["wq"]).reshape(
+            b, 1, H, hd
+        )
+        o = attn_mod.attend(
+            q, cross_l["k"], cross_l["v"], causal=False, backend="naive"
+        )
+        h = jnp.einsum(
+            "bsh,hd->bsd", o.reshape(b, 1, H * hd), layer["cross"]["wo"]
+        )
+        x = x + h
+        h = mlp(layer["mlp"], rms_norm(x, layer["ln2"], cfg.norm_eps), act=cfg.act)
+        return x + h, self_new
+
+    x, self_new = jax.lax.scan(
+        body, x, (params["layers"], cache["self"], cache["cross"])
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, {"self": self_new, "cross": cache["cross"]}

@@ -1,0 +1,187 @@
+"""RecurrentGemma-style hybrid stack: RG-LRU + local-attention, 1:2 pattern.
+
+Layers are heterogeneous (block_pattern drives rec vs attn), so the stack is
+a python list (unrolled HLO — fine at 2.6B scale) rather than lax.scan.
+
+Every layer = temporal block (rec | local-attn) + gated MLP, pre-norms.
+Decode state: LRU (h, conv-tail) for rec layers; a window-sized ring KV cache
+for attn layers — O(window), independent of context length ⇒ long_500k runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import rglru as rglru_mod
+from repro.models.layers import (
+    dense_init,
+    embed_lookup,
+    init_embed,
+    mlp,
+    rms_norm,
+)
+from repro.utils.sharding import constrain_act
+
+
+def init_hybrid_layer(key, cfg, kind: str):
+    D = cfg.d_model
+    kt, kf = jax.random.split(key)
+    ds = 1.0 / np.sqrt(2 * cfg.num_layers)
+    layer = {
+        "ln1": jnp.zeros((D,), cfg.dtype),
+        "ln2": jnp.zeros((D,), cfg.dtype),
+    }
+    if kind == "rec":
+        layer["temporal"] = rglru_mod.init_rglru_block(kt, cfg, depth_scale=ds)
+    else:
+        layer["temporal"] = attn_mod.init_attention(kt, cfg, depth_scale=ds)
+    ks = jax.random.split(kf, 3)
+    layer["mlp"] = {
+        "wi": dense_init(ks[0], D, cfg.d_ff, cfg.dtype),
+        "wg": dense_init(ks[1], D, cfg.d_ff, cfg.dtype),
+        "wo": dense_init(ks[2], cfg.d_ff, D, cfg.dtype, scale=ds),
+    }
+    return layer
+
+
+def init_hybrid(key, cfg):
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    layers = [
+        init_hybrid_layer(keys[i], cfg, kind)
+        for i, kind in enumerate(cfg.block_pattern)
+    ]
+    return {
+        "embed": init_embed(keys[-2], cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "lm_head": dense_init(keys[-1], cfg.d_model, cfg.padded_vocab, cfg.dtype),
+    }
+
+
+def _layer_full(layer, kind, x, cfg, backend):
+    h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        h, _ = rglru_mod.rglru_block(layer["temporal"], h)
+    else:
+        positions = jnp.arange(x.shape[1])[None]
+        h = attn_mod.attention_layer(
+            layer["temporal"], h, positions, cfg,
+            causal=True, window=cfg.window_size, backend=backend,
+        )
+    x = x + h
+    x = constrain_act(x, ("data", None, None))
+    h = mlp(layer["mlp"], rms_norm(x, layer["ln2"], cfg.norm_eps), act=cfg.act)
+    return x + h
+
+
+def hybrid_forward(params, tokens, cfg, *, backend="auto", remat=False):
+    x = embed_lookup(params["embed"], tokens)
+    x = constrain_act(x, ("data", None, None))
+    for layer, kind in zip(params["layers"], cfg.block_pattern):
+        f = _layer_full
+        if remat:
+            f = jax.checkpoint(
+                _layer_full,
+                policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(1, 3, 4),
+            )
+        x = f(layer, kind, x, cfg, backend)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain_act(logits, ("data", None, "model"))
+    aux = {
+        "load_balance": jnp.zeros((), jnp.float32),
+        "router_z": jnp.zeros((), jnp.float32),
+    }
+    return logits, aux
+
+
+def init_hybrid_state(cfg, batch: int, dtype=None):
+    """Per-layer decode state list: LRU state or window ring-cache."""
+    dtype = dtype or cfg.dtype
+    window = cfg.window_size
+    states = []
+    for kind in cfg.block_pattern:
+        if kind == "rec":
+            states.append(rglru_mod.init_rglru_state(cfg, batch, dtype))
+        else:
+            states.append(attn_mod.init_kv_cache(cfg, batch, window, dtype))
+    return states
+
+
+def _fill_ring(k, window):
+    """Last `window` entries of k (B,S,K,hd) laid out as the pos%W ring."""
+    b, s = k.shape[:2]
+    w = min(window, s)
+    sel = k[:, s - w:]
+    slots = (jnp.arange(s - w, s)) % window
+    ring = jnp.zeros((b, window) + k.shape[2:], k.dtype)
+    return ring.at[:, slots].set(sel)
+
+
+def hybrid_prefill(params, tokens, cfg, *, backend="auto"):
+    """Prompt prefill returning (logits, decode state): LRU states carried
+    exactly; local-attn layers keep only the last `window` KV in the same
+    pos%window ring layout hybrid_decode_step writes."""
+    x = embed_lookup(params["embed"], tokens)
+    x = constrain_act(x, ("data", None, None))
+    s = tokens.shape[1]
+    positions = jnp.arange(s)[None]
+    states = []
+    for layer, kind in zip(params["layers"], cfg.block_pattern):
+        h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        if kind == "rec":
+            h, st = rglru_mod.rglru_block(layer["temporal"], h)
+        else:
+            q, k, v = attn_mod.qkv_proj(layer["temporal"], h, cfg)
+            from repro.models.layers import apply_rope
+
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            o = attn_mod.attend(
+                q, k, v, causal=True, window=cfg.window_size,
+                backend=backend,
+            )
+            h = jnp.einsum(
+                "bsh,hd->bsd", o.reshape(x.shape[0], s, -1),
+                layer["temporal"]["wo"],
+            )
+            st = {
+                "k": _fill_ring(k.astype(cfg.dtype), cfg.window_size),
+                "v": _fill_ring(v.astype(cfg.dtype), cfg.window_size),
+            }
+        x = x + h
+        h = mlp(layer["mlp"], rms_norm(x, layer["ln2"], cfg.norm_eps),
+                act=cfg.act)
+        x = x + h
+        x = constrain_act(x, ("data", None, None))
+        states.append(st)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain_act(logits, ("data", None, "model"))
+    return logits, states
+
+
+def hybrid_decode_step(params, state, tokens, pos, cfg):
+    """One-token decode with O(window + lru) state. tokens: (B,1)."""
+    x = embed_lookup(params["embed"], tokens)
+    new_states = []
+    for (layer, st), kind in zip(
+        zip(params["layers"], state), cfg.block_pattern
+    ):
+        h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        if kind == "rec":
+            h, st_new = rglru_mod.rglru_block_step(layer["temporal"], h, st)
+        else:
+            h, st_new = attn_mod.attention_decode(
+                layer["temporal"], h, st, pos, cfg, window=cfg.window_size
+            )
+        x = x + h
+        h = mlp(layer["mlp"], rms_norm(x, layer["ln2"], cfg.norm_eps), act=cfg.act)
+        x = x + h
+        new_states.append(st_new)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, new_states

@@ -1,0 +1,168 @@
+"""Shared primitive layers (pure functions over param pytrees).
+
+Conventions:
+* hidden states are (B, S, D); heads axes are (B, S, H, head_dim);
+* norms compute in float32 and cast back;
+* init uses truncated-normal(0.02)-style scaling, scaled-init on output
+  projections (1/sqrt(2·L)) like the reference LLM stacks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale * (0.02 if d_in > 64 else d_in**-0.5)
+    return (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, d_in: int, d_out: int, dtype, scale=1.0):
+    std = scale * 0.02
+    return (jax.random.normal(key, (n, d_in, d_out)) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    """RMSNorm: f32 row statistics, (B,S,D) products in x.dtype.
+
+    §Perf pair 3 notes (EXPERIMENTS.md): two variants were measured against
+    the upcast-everything form on deepseek-v3 train_4k — this single-pass
+    form (neutral: XLA already fused the forward upcasts) and a custom_vjp
+    fused-backward (REGRESSED 4%: custom_vjp residuals are opaque to the
+    remat policy and get stored). Kept: the neutral single-pass form, which
+    is also the cheapest at Pallas/TPU fusion granularity.
+    """
+    var = jnp.mean(
+        jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True
+    )
+    mult = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    gain = (1.0 + scale.astype(jnp.float32)).astype(x.dtype)
+    return (x * mult) * gain
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def group_norm(x, scale, bias, num_groups: int, eps: float = 1e-5):
+    """GroupNorm over the channel (last) axis — used by the CNN and RWKV wkv."""
+    orig_shape = x.shape
+    c = orig_shape[-1]
+    xf = x.astype(jnp.float32).reshape(orig_shape[:-1] + (num_groups, c // num_groups))
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    xf = xf.reshape(orig_shape)
+    return (xf * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, n_layers: int, d_model: int, d_ff: int, dtype, act="silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": stacked_dense_init(k1, n_layers, d_model, d_ff, dtype),
+        "wg": stacked_dense_init(k2, n_layers, d_model, d_ff, dtype),
+        "wo": stacked_dense_init(
+            k3, n_layers, d_ff, d_model, dtype, scale=1.0 / np.sqrt(2 * n_layers)
+        ),
+    }
+
+
+def mlp(params, x, act="silu"):
+    """Gated MLP for one layer: params leaves are (d_model, d_ff) etc."""
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+    h = act_fn(act)(g) * h
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) or (S,) int32."""
+    hd = x.shape[-1]
+    inv_freq = jnp.asarray(rope_frequencies(hd, theta))
+    pos = positions.astype(jnp.float32)
+    angles = pos[..., None] * inv_freq  # (..., S, half)
+    if angles.ndim == 2:  # (S, half) → broadcast batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed_lookup(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean token cross-entropy in float32. labels: int32, mask: same shape.
+
+    The gold logit is extracted with an iota-compare masked reduction (not
+    take_along_axis): under GSPMD a gather over a vocab-sharded logits dim
+    forces an all-gather of the full (B, S, V) f32 logits, while the masked
+    reduce stays shard-local + one tiny all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1
+    )
+    gold = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1
+    )
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,140 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrent block: x → two linear branches; branch-a → GeLU gate; branch-b →
+width-4 temporal conv1d → RG-LRU; merged by elementwise product → linear out.
+
+RG-LRU (per channel, Griffin eq. 3-4):
+    r_t = σ(W_a x_t + b_a)          recurrence gate
+    i_t = σ(W_x x_t + b_x)          input gate
+    log a_t = −c · softplus(Λ) · r_t            (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Decode state is O(1): (h, conv tail) — this is why recurrentgemma runs the
+long_500k shape (local-attn layers use a fixed 2048-token ring cache).
+
+Deviation note (DESIGN.md §9): Griffin's gates use block-diagonal weights;
+we use full (W, W) linears — same math, denser compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+C_CONST = 8.0
+CONV_WIDTH = 4
+
+
+def init_rglru_block(key, cfg, *, depth_scale: float = 1.0):
+    D, W = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[0], (W,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / C_CONST))  # softplus^-1
+    return {
+        "proj_a": dense_init(ks[1], D, W, cfg.dtype),
+        "proj_b": dense_init(ks[2], D, W, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[3], (CONV_WIDTH, W)) * 0.1).astype(
+            cfg.dtype
+        ),
+        "conv_b": jnp.zeros((W,), cfg.dtype),
+        "gate_a": dense_init(ks[4], W, W, cfg.dtype),
+        "gate_a_b": jnp.zeros((W,), cfg.dtype),
+        "gate_x": dense_init(ks[5], W, W, cfg.dtype),
+        "gate_x_b": jnp.zeros((W,), cfg.dtype),
+        "lambda": lam.astype(jnp.float32),
+        "proj_out": dense_init(ks[6], W, D, cfg.dtype, scale=depth_scale),
+    }
+
+
+def _conv1d(p, x, tail=None):
+    """Causal depthwise width-4 conv. x: (B,S,W); tail: (B,3,W) carry."""
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], CONV_WIDTH - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * p["conv_w"][i]
+        for i in range(CONV_WIDTH)
+    )
+    return out + p["conv_b"], xp[:, -(CONV_WIDTH - 1) :]
+
+
+def rg_lru_scan(p, x, h0=None):
+    """The LRU recurrence over a full sequence. x: (B,S,W) → (B,S,W).
+
+    Uses an associative scan over (a, b) pairs: h_t = a_t h_{t-1} + b_t is
+    a linear recurrence ⇒ parallel-scan with (a, b)∘(a', b') =
+    (a·a', a'·b + b') — O(log S) depth on TPU instead of O(S).
+    """
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", xf, p["gate_a"].astype(jnp.float32))
+        + p["gate_a_b"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", xf, p["gate_x"].astype(jnp.float32))
+        + p["gate_x_b"].astype(jnp.float32)
+    )
+    log_a = -C_CONST * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(p, x1, h):
+    """One decode step. x1: (B,W); h: (B,W) f32 state."""
+    xf = x1.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        xf @ p["gate_a"].astype(jnp.float32) + p["gate_a_b"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        xf @ p["gate_x"].astype(jnp.float32) + p["gate_x_b"].astype(jnp.float32)
+    )
+    log_a = -C_CONST * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * xf)
+    return h_new.astype(x1.dtype), h_new
+
+
+def rglru_block(p, x, *, state=None):
+    """Full-sequence recurrent block. Returns (out, new_state)."""
+    ga = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["proj_a"]), approximate=True)
+    xb = jnp.einsum("bsd,dw->bsw", x, p["proj_b"])
+    tail = None if state is None else state["conv"]
+    h0 = None if state is None else state["h"]
+    xb, tail_new = _conv1d(p, xb, tail)
+    y, h_last = rg_lru_scan(p, xb, h0)
+    out = jnp.einsum("bsw,wd->bsd", y * ga, p["proj_out"])
+    return out, {"conv": tail_new, "h": h_last}
+
+
+def rglru_block_step(p, x1, state):
+    """One-token decode. x1: (B,1,D)."""
+    x1 = x1[:, 0]
+    ga = jax.nn.gelu(x1 @ p["proj_a"], approximate=True)
+    xb = x1 @ p["proj_b"]
+    conv = jnp.concatenate([state["conv"], xb[:, None]], axis=1)  # (B,4,W)
+    xc = sum(conv[:, i] * p["conv_w"][i] for i in range(CONV_WIDTH)) + p["conv_b"]
+    y, h_new = rg_lru_step(p, xc, state["h"])
+    out = (y * ga) @ p["proj_out"]
+    return out[:, None], {"conv": conv[:, 1:], "h": h_new}
+
+
+def init_rglru_state(cfg, batch: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    W = cfg.lru_width
+    return {
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, W), dtype),
+        "h": jnp.zeros((batch, W), jnp.float32),
+    }

@@ -1,0 +1,413 @@
+"""RWKV6 (Finch) blocks — attention-free, data-dependent decay.
+
+Time-mix: token-shift ddlerp (low-rank data-dependent interpolation of the
+previous token), per-channel data-dependent decay w_t ∈ (0,1), per-head WKV
+state S ∈ (head, hd, hd):
+
+    S_t[i,j]  = w_t[i] · S_{t-1}[i,j] + k_t[i] · v_t[j]
+    out_t[j]  = Σ_i r_t[i] · (S_{t-1}[i,j] + u[i]·k_t[i]·v_t[j])
+
+Channel-mix: squared-ReLU MLP with token-shift.
+
+Decode state is O(1) in context length: (prev_x, S) per layer — this is why
+rwkv6 runs the long_500k shape.
+
+Train/prefill use lax.scan over time (the Pallas chunked kernel in
+kernels/wkv_chunked.py is the TPU hot-path, validated against
+`wkv_ref` below).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, group_norm, rms_norm
+
+LORA_MIX = 32
+LORA_DECAY = 64
+N_MIX = 5  # w, k, v, r, g
+
+
+def init_time_mix(key, cfg, *, depth_scale: float = 1.0):
+    D = cfg.d_model
+    H, hd = cfg.num_heads, cfg.ssm_head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_base": (jax.random.uniform(ks[0], (N_MIX + 1, D)) * 0.5).astype(
+            cfg.dtype
+        ),  # [x, w, k, v, r, g]
+        "mix_w1": dense_init(ks[1], D, N_MIX * LORA_MIX, cfg.dtype),
+        "mix_w2": (
+            jax.random.normal(ks[2], (N_MIX, LORA_MIX, D)) * 0.02
+        ).astype(cfg.dtype),
+        "decay_base": (
+            -6.0 + 5.0 * jax.random.uniform(ks[3], (H, hd))
+        ).astype(cfg.dtype),
+        "decay_w1": dense_init(ks[4], D, LORA_DECAY, cfg.dtype),
+        "decay_w2": dense_init(ks[5], LORA_DECAY, D, cfg.dtype),
+        "bonus_u": (jax.random.normal(ks[6], (H, hd)) * 0.3).astype(cfg.dtype),
+        "wr": dense_init(ks[7], D, D, cfg.dtype),
+        "wk": dense_init(ks[8], D, D, cfg.dtype),
+        "wv": dense_init(ks[9], D, D, cfg.dtype),
+        "wg": dense_init(ks[10], D, D, cfg.dtype),
+        "wo": dense_init(ks[11], D, D, cfg.dtype, scale=depth_scale),
+        "gn_scale": jnp.ones((D,), cfg.dtype),
+        "gn_bias": jnp.zeros((D,), cfg.dtype),
+    }
+
+
+def init_channel_mix(key, cfg, *, depth_scale: float = 1.0):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (D,)) * 0.5).astype(cfg.dtype),
+        "mu_r": (jax.random.uniform(ks[0], (D,)) * 0.5).astype(cfg.dtype),
+        "wk": dense_init(ks[1], D, F, cfg.dtype),
+        "wv": dense_init(ks[2], F, D, cfg.dtype, scale=depth_scale),
+        "wr": dense_init(ks[0], D, D, cfg.dtype),
+    }
+
+
+def _shift(x):
+    """Previous-token shift (zeros at t=0). x: (B,S,D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _ddlerp(p, x, xprev):
+    """Data-dependent token-shift mixes → dict of mixed inputs."""
+    xx = xprev - x
+    base = p["mu_base"]
+    xxx = x + xx * base[0]
+    lora = jnp.tanh(jnp.einsum("bsd,dk->bsk", xxx, p["mix_w1"]))
+    lora = lora.reshape(*lora.shape[:-1], N_MIX, LORA_MIX)
+    dyn = jnp.einsum("bsnk,nkd->bsnd", lora, p["mix_w2"])
+    mixed = x[..., None, :] + xx[..., None, :] * (base[1:] + dyn)
+    return {n: mixed[..., i, :] for i, n in enumerate("wkvrg")}
+
+
+def _rkvwg(p, x, xprev, cfg):
+    m = _ddlerp(p, x, xprev)
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.ssm_head_dim
+    r = jnp.einsum("bsd,de->bse", m["r"], p["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", m["k"], p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", m["v"], p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", m["g"], p["wg"]))
+    decay_in = jnp.tanh(jnp.einsum("bsd,dk->bsk", m["w"], p["decay_w1"]))
+    dlora = jnp.einsum("bsk,kd->bsd", decay_in, p["decay_w2"])
+    logw = p["decay_base"].reshape(1, 1, D) + dlora
+    w = jnp.exp(-jnp.exp(logw.astype(jnp.float32)))  # (B,S,D) in (0,1)
+    return r, k, v, g, w.reshape(B, S, H, hd)
+
+
+def wkv_ref(r, k, v, w, u, state=None):
+    """Reference WKV recurrence via lax.scan over time.
+
+    r,k,v,w: (B,S,H,hd) — w is the per-step decay in (0,1), u: (H,hd).
+    Returns (out (B,S,H,hd), final_state (B,H,hd,hd)). float32 state.
+    """
+    B, S, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S_c, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hd,hd)
+        out = jnp.einsum(
+            "bhi,bhij->bhj", r_t, S_c + u[None, :, :, None] * kv
+        )
+        S_n = w_t[..., :, None] * S_c + kv
+        return S_n, out
+
+    seq = jax.tree_util.tree_map(
+        lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0), (r, k, v, w)
+    )
+    state, outs = jax.lax.scan(step, state, seq)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state
+
+
+def wkv_chunked_jax(r, k, v, w, u, state=None, chunk: int = 512,
+                    sub_chunk: int = 16):
+    """Chunked WKV on the XLA path — same closed form as the Pallas kernel
+    (kernels/wkv_chunked.py), expressed as a lax.scan over chunks.
+
+    Why: the per-token scan (wkv_ref) round-trips the (B,H,hd,hd) f32 state
+    through HBM every token — the rwkv6-7b × train_4k dry-run baseline's
+    6.8e3 s memory term. Chunking touches the state once per C tokens and
+    turns the inner work into matmuls + one (C,C,hd) decay einsum
+    (overflow-free: all exponents ≤ 0 on the kept band; the kernel
+    docstring explains why the factored matmul form is rejected).
+    EXPERIMENTS.md §Perf iterates the chunk size.
+    """
+    B, S, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        pc = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, pc)
+        k = jnp.pad(k, pc)
+        v = jnp.pad(v, pc)
+        w = jnp.pad(w, pc, constant_values=1.0)
+    nc = (S + pad) // c
+
+    def to_chunks(a):
+        return jnp.moveaxis(
+            a.astype(jnp.float32).reshape(B, nc, c, H, hd), 1, 0
+        )  # (nc, B, c, H, hd)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    sc = sub_chunk if (sub_chunk and c % sub_chunk == 0 and c > sub_chunk) \
+        else c
+    n = c // sc
+    tri_sc = (
+        jax.lax.broadcasted_iota(jnp.int32, (sc, sc), 0)
+        > jax.lax.broadcasted_iota(jnp.int32, (sc, sc), 1)
+    )
+    blk_lower = (
+        jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+        > jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    )
+
+    def chunk_step(S0, inp):
+        rr, kk, vv, ww = inp                      # (B, c, H, hd)
+        lw = jnp.log(jnp.maximum(ww, 1e-38))
+        cum = jnp.cumsum(lw, axis=1)              # inclusive (B,c,H,hd)
+        cum_prev = cum - lw
+        # ---- cross-chunk: (r ⊙ e^{cum_prev}) @ S0 -------------------------
+        r_dec = rr * jnp.exp(cum_prev)
+        o = jnp.einsum("bthi,bhij->bthj", r_dec, S0)
+        # ---- intra-chunk, two-level ---------------------------------------
+        # Sub-chunk blocks of size sc: diagonal blocks keep the exact
+        # (sc,sc,hd) decay einsum; off-diagonal block pairs factor the decay
+        # as  e^{cum_prev_t − A_i} · e^{A_i − B_j} · e^{B_j − cum_s}
+        # (A_i = chunk-cum at block-i start, B_j = at block-j end) — every
+        # factor is ≤ 1, so this is overflow-free AND a plain matmul. This
+        # removes the (C,C,hd) materialization that capped the C=128
+        # single-level version (EXPERIMENTS.md §Perf iteration 3).
+        shp = (rr.shape[0], n, sc) + rr.shape[2:]
+        r2, k2, v2 = (a.reshape(shp) for a in (rr, kk, vv))
+        cum2 = cum.reshape(shp)
+        cum_prev2 = cum_prev.reshape(shp)
+        A = cum_prev2[:, :, 0]                    # (B,n,H,hd) block-start
+        Bn = cum2[:, :, -1]                       # (B,n,H,hd) block-end
+        # diagonal blocks (exact)
+        expo_d = cum_prev2[:, :, :, None] - cum2[:, :, None, :]
+        expo_d = jnp.where(
+            tri_sc[None, None, :, :, None, None], expo_d, -jnp.inf
+        )
+        scores_d = jnp.einsum(
+            "bnthi,bnshi,bntshi->bntsh", r2, k2, jnp.exp(expo_d)
+        )
+        o_d = jnp.einsum("bntsh,bnshj->bnthj", scores_d, v2)
+        # off-diagonal block pairs (factored)
+        if n > 1:
+            r_hat = r2 * jnp.exp(cum_prev2 - A[:, :, None])
+            k_hat = k2 * jnp.exp(Bn[:, :, None] - cum2)
+            m_ij = jnp.exp(A[:, :, None] - Bn[:, None, :])   # (B,i,j,H,hd)
+            m_ij = jnp.where(
+                blk_lower[None, :, :, None, None], m_ij, 0.0
+            )
+            rm = jnp.einsum("bithc,bijhc->bijthc", r_hat, m_ij)
+            scores_o = jnp.einsum("bijthc,bjshc->bijtsh", rm, k_hat)
+            o_o = jnp.einsum("bijtsh,bjshd->bithd", scores_o, v2)
+            o_d = o_d + o_o
+        o = o + o_d.reshape(rr.shape)
+        # bonus diagonal
+        diag = jnp.einsum("bthi,hi,bthi->bth", rr, uf, kk)
+        o = o + diag[..., None] * vv
+        # ---- state update: all exponents ≤ 0 ------------------------------
+        k_dec = kk * jnp.exp(cum[:, -1:, :, :] - cum)
+        S_new = jnp.exp(cum[:, -1])[:, :, :, None] * S0 + jnp.einsum(
+            "bshi,bshj->bhij", k_dec, vv
+        )
+        return S_new, o
+
+    state, outs = jax.lax.scan(chunk_step, state.astype(jnp.float32),
+                               (rc, kc, vc, wc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S + pad, H, hd)[:, :S]
+    return out.astype(r.dtype), state
+
+
+def time_mix(p, x, cfg, *, state=None, wkv_fn=None):
+    """Full-sequence time-mix. state: None (fresh) or dict carry (decode/chunked).
+
+    Returns (out, new_state) where state = {"prev_x": (B,D), "S": (B,H,hd,hd)}.
+    """
+    B, S, D = x.shape
+    if state is None:
+        xprev = _shift(x)
+    else:
+        xprev = jnp.concatenate(
+            [state["prev_x"][:, None, :], x[:, :-1]], axis=1
+        )
+    r, k, v, g, w = _rkvwg(p, x, xprev, cfg)
+    s0 = None if state is None else state["S"]
+    wkv = wkv_fn or wkv_ref
+    out, s_new = wkv(r, k, v, w, p["bonus_u"].astype(jnp.float32), s0)
+    out = out.reshape(B, S, D)
+    out = group_norm(out, p["gn_scale"], p["gn_bias"], cfg.num_heads)
+    out = out * g
+    out = jnp.einsum("bsd,de->bse", out, p["wo"])
+    return out, {"prev_x": x[:, -1, :], "S": s_new}
+
+
+def channel_mix(p, x, *, state=None):
+    if state is None:
+        xprev = _shift(x)
+    else:
+        xprev = jnp.concatenate([state["prev_x"][:, None, :], x[:, :-1]], axis=1)
+    xx = xprev - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"])) * kv
+    return out, {"prev_x": x[:, -1, :]}
+
+
+# ---------------------------------------------------------------------------
+# full rwkv6 layer (time-mix + channel-mix with pre-norms)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_layer(key, cfg, *, depth_scale: float = 1.0):
+    k1, k2 = jax.random.split(key)
+    D = cfg.d_model
+    return {
+        "ln1": jnp.zeros((D,), cfg.dtype),
+        "time": init_time_mix(k1, cfg, depth_scale=depth_scale),
+        "ln2": jnp.zeros((D,), cfg.dtype),
+        "chan": init_channel_mix(k2, cfg, depth_scale=depth_scale),
+    }
+
+
+def rwkv_layer(p, x, cfg, *, state=None, wkv_fn=None):
+    ts = None if state is None else state["time"]
+    cs = None if state is None else state["chan"]
+    h, ts_new = time_mix(
+        p["time"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, state=ts,
+        wkv_fn=wkv_fn,
+    )
+    x = x + h
+    h, cs_new = channel_mix(p["chan"], rms_norm(x, p["ln2"], cfg.norm_eps), state=cs)
+    x = x + h
+    return x, {"time": ts_new, "chan": cs_new}
+
+
+# ---------------------------------------------------------------------------
+# full rwkv6 model (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, cfg):
+    from repro.models.layers import dense_init, init_embed
+
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    depth_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+    layers = jax.vmap(
+        lambda k: init_rwkv_layer(k, cfg, depth_scale=depth_scale)
+    )(layer_keys)
+    return {
+        "embed": init_embed(k_embed, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.padded_vocab, cfg.dtype),
+    }
+
+
+def rwkv_forward(params, tokens, cfg, *, remat=False, wkv_fn=None):
+    from repro.models.layers import embed_lookup
+    from repro.utils.sharding import constrain_act
+
+    x = embed_lookup(params["embed"], tokens)
+    x = constrain_act(x, ("data", None, None))
+
+    def body(x, layer):
+        x, _ = rwkv_layer(layer, x, cfg, wkv_fn=wkv_fn)
+        x = constrain_act(x, ("data", None, None))
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain_act(logits, ("data", None, "model"))
+    aux = {
+        "load_balance": jnp.zeros((), jnp.float32),
+        "router_z": jnp.zeros((), jnp.float32),
+    }
+    return logits, aux
+
+
+def rwkv_prefill(params, tokens, cfg, *, backend="chunked"):
+    """Prompt prefill that RETURNS the decode state: (logits, stacked state).
+
+    Uses the chunked WKV path (or the Pallas kernel via backend="flash") so
+    prefill is block-parallel, then hands the O(1) per-layer state to
+    rwkv_decode_step for token-by-token serving.
+    """
+    from repro.models.layers import embed_lookup
+
+    wkv_fn = wkv_chunked_jax
+    if backend == "flash":
+        from repro.kernels import ops as kernel_ops
+
+        wkv_fn = kernel_ops.wkv
+    elif backend == "naive":
+        wkv_fn = None
+    x = embed_lookup(params["embed"], tokens)
+    init_state = init_rwkv_model_state(cfg, tokens.shape[0])
+
+    def body(x, xs):
+        layer, st = xs
+        x, st_new = rwkv_layer(layer, x, cfg, state=st, wkv_fn=wkv_fn)
+        return x, st_new
+
+    x, states = jax.lax.scan(body, x, (params["layers"], init_state))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, states
+
+
+def init_rwkv_model_state(cfg, batch: int, dtype=None):
+    """Stacked (L, ...) decode state — O(1) in context length."""
+    one = init_rwkv_state(cfg, batch, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one
+    )
+
+
+def rwkv_decode_step(params, state, tokens, pos, cfg):
+    """One-token decode. tokens: (B,1). pos unused (state is positionless)."""
+    from repro.models.layers import embed_lookup
+
+    del pos
+    x = embed_lookup(params["embed"], tokens)
+
+    def body(x, xs):
+        layer, st = xs
+        x, st_new = rwkv_layer(layer, x, cfg, state=st)
+        return x, st_new
+
+    x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, new_state
+
+
+def init_rwkv_state(cfg, batch: int, dtype=None):
+    """O(1) decode state for one layer."""
+    dtype = dtype or cfg.dtype
+    D, H, hd = cfg.d_model, cfg.num_heads, cfg.ssm_head_dim
+    return {
+        "time": {
+            "prev_x": jnp.zeros((batch, D), dtype),
+            "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        },
+        "chan": {"prev_x": jnp.zeros((batch, D), dtype)},
+    }

@@ -1,0 +1,40 @@
+"""Extractor / header pytree split — the PFedDST partial-personalization cut.
+
+The paper (§II-A): header = final fully-connected layers (personalized, never
+aggregated); extractor = everything before it (aggregated from selected
+peers). Our param layouts keep the cut at the top level:
+
+  LM families: header = {final_norm, lm_head}        extractor = the rest
+  audio:       header = {final_norm, lm_head}        (enc+dec trunk shared)
+  cnn:         header = {head}                       extractor = stem+stages
+
+Both halves keep full pytree paths so merge is a plain dict union.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+HEADER_KEYS = {
+    "cnn": ("head",),
+    "default": ("final_norm", "lm_head"),
+}
+
+
+def header_keys(cfg: ModelConfig):
+    return HEADER_KEYS.get(cfg.family, HEADER_KEYS["default"])
+
+
+def split_params(cfg: ModelConfig, params):
+    """→ (extractor, header) — disjoint top-level key subsets."""
+    hk = set(header_keys(cfg))
+    extractor = {k: v for k, v in params.items() if k not in hk}
+    header = {k: v for k, v in params.items() if k in hk}
+    if not header:
+        raise ValueError(f"no header keys {hk} found in params")
+    return extractor, header
+
+
+def merge_params(extractor, header):
+    out = dict(extractor)
+    out.update(header)
+    return out

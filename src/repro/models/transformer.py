@@ -1,0 +1,268 @@
+"""Decoder-only transformer stack (dense / MoE / MLA) under lax.scan.
+
+All layers are homogeneous and stacked (leading L axis on every leaf) so the
+61–80-layer assigned archs lower to compact HLO under 512-way SPMD.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    dense_init,
+    embed_lookup,
+    init_embed,
+    mlp,
+    rms_norm,
+)
+from repro.utils.sharding import constrain_act
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg):
+    """One decoder layer (no leading L dim — stacked via vmap)."""
+    D = cfg.d_model
+    k_attn, k_ffn = jax.random.split(key)
+    depth_scale = 1.0 / np.sqrt(2 * cfg.num_layers)
+    layer = {
+        "ln1": jnp.zeros((D,), cfg.dtype),
+        "ln2": jnp.zeros((D,), cfg.dtype),
+    }
+    if cfg.use_mla:
+        layer["attn"] = attn_mod.init_mla(k_attn, cfg, depth_scale=depth_scale)
+    else:
+        layer["attn"] = attn_mod.init_attention(
+            k_attn, cfg, depth_scale=depth_scale
+        )
+    if cfg.num_experts:
+        layer["moe"] = moe_mod.init_moe(k_ffn, cfg, depth_scale=depth_scale)
+    else:
+        ks = jax.random.split(k_ffn, 3)
+        layer["mlp"] = {
+            "wi": dense_init(ks[0], D, cfg.d_ff, cfg.dtype),
+            "wg": dense_init(ks[1], D, cfg.d_ff, cfg.dtype),
+            "wo": dense_init(ks[2], cfg.d_ff, D, cfg.dtype, scale=depth_scale),
+        }
+    return layer
+
+
+def init_decoder(key, cfg):
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": init_embed(k_embed, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.padded_vocab, cfg.dtype),
+    }
+    if cfg.frontend == "vision_stub":
+        # projector from stub patch embeddings into the LM residual stream —
+        # the only trained "vision" parameter (carve-out: ViT itself stubbed)
+        params["vision_proj"] = dense_init(
+            jax.random.fold_in(k_embed, 1), cfg.d_model, cfg.d_model, cfg.dtype
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_body(cfg, backend):
+    def body(x, layer):
+        s = x.shape[1]
+        positions = jnp.arange(s)[None]
+        h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        if cfg.use_mla:
+            h = attn_mod.mla_layer(layer["attn"], h, positions, cfg,
+                                   backend=backend)
+        else:
+            h = attn_mod.attention_layer(
+                layer["attn"], h, positions, cfg, causal=True, backend=backend
+            )
+        x = x + h
+        x = constrain_act(x, ("data", None, None))
+        h = rms_norm(x, layer["ln2"], cfg.norm_eps)
+        if cfg.num_experts:
+            h, aux = moe_mod.moe_layer(layer["moe"], h, cfg)
+            aux = jax.tree_util.tree_map(
+                lambda a: a.astype(jnp.float32), aux
+            )
+        else:
+            h = mlp(layer["mlp"], h, act=cfg.act)
+            aux = {
+                "load_balance": jnp.zeros((), jnp.float32),
+                "router_z": jnp.zeros((), jnp.float32),
+            }
+        x = x + h
+        x = constrain_act(x, ("data", None, None))
+        return x, aux
+
+    return body
+
+
+def decoder_forward(
+    params,
+    tokens,
+    cfg,
+    *,
+    prefix_embeds=None,
+    backend: str = "auto",
+    remat: bool = False,
+):
+    """tokens: (B, S_text) int32; prefix_embeds: (B, S_pre, D) or None.
+
+    Returns (logits (B, S_total, V), aux dict of scalar reg losses).
+    """
+    x = embed_lookup(params["embed"], tokens)
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(x.dtype)
+        if "vision_proj" in params:
+            pe = jnp.einsum("bsd,de->bse", pe, params["vision_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    x = constrain_act(x, ("data", None, None))
+
+    body = _layer_body(cfg, backend)
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, auxs = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain_act(logits, ("data", None, "model"))
+    aux = jax.tree_util.tree_map(jnp.sum, auxs)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_decoder_cache(cfg, batch: int, max_seq: int, dtype=None):
+    """Stacked (L, ...) KV cache pytree consumed by lax.scan."""
+    dtype = dtype or cfg.dtype
+    if cfg.use_mla:
+        one = attn_mod.init_mla_cache(cfg, batch, max_seq, dtype)
+    else:
+        one = attn_mod.init_kv_cache(cfg, batch, max_seq, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one
+    )
+
+
+def decoder_decode_step(params, cache, tokens, pos, cfg):
+    """One-token decode. tokens: (B,1) int32; pos: scalar absolute position.
+
+    Returns (logits (B,1,V), new_cache).
+    """
+    x = embed_lookup(params["embed"], tokens)
+    x = constrain_act(x, ("data", None, None))
+
+    def body(x, xs):
+        layer, cache_l = xs
+        h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        if cfg.use_mla:
+            h, cache_new = attn_mod.mla_decode(
+                layer["attn"], h, cache_l, pos, cfg
+            )
+        else:
+            h, cache_new = attn_mod.attention_decode(
+                layer["attn"], h, cache_l, pos, cfg
+            )
+        x = x + h
+        h = rms_norm(x, layer["ln2"], cfg.norm_eps)
+        if cfg.num_experts:
+            h, _ = moe_mod.moe_layer(layer["moe"], h, cfg)
+        else:
+            h = mlp(layer["mlp"], h, act=cfg.act)
+        x = x + h
+        return x, cache_new
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill that also fills the KV cache (serving path)
+# ---------------------------------------------------------------------------
+
+def decoder_prefill(params, tokens, cfg, *, max_seq: int, backend="auto"):
+    """Full prefill returning (logits, cache filled up to S).
+
+    The residual stream is pinned to ('data', None, None) every layer —
+    without it GSPMD drops the batch sharding at the first FSDP-weight
+    contraction and every TP all-reduce carries the full global batch
+    (the starcoder2-7b × prefill_32k baseline's 422 s collective term;
+    EXPERIMENTS.md §Perf pair 2).
+    """
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens)
+    x = constrain_act(x, ("data", None, None))
+    positions = jnp.arange(s)[None]
+
+    def body(x, layer):
+        h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        if cfg.use_mla:
+            q, k, v, c_kv, k_rope = attn_mod._mla_qkv_full(
+                layer["attn"], h, positions, cfg
+            )
+            o = attn_mod.attend(q, k, v, causal=True, backend=backend)
+            o = jnp.einsum(
+                "bsh,hd->bsd", o.reshape(b, s, -1), layer["attn"]["wo"]
+            )
+            pad = max_seq - s
+            cache_l = {
+                "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+                "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+            }
+        else:
+            q, k, v = attn_mod.qkv_proj(layer["attn"], h, cfg)
+            from repro.models.layers import apply_rope
+
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            o = attn_mod.attend(q, k, v, causal=True, backend=backend)
+            o = jnp.einsum(
+                "bsh,hd->bsd", o.reshape(b, s, -1), layer["attn"]["wo"]
+            )
+            pad = max_seq - s
+            cache_l = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(
+                    cfg.dtype
+                ),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(
+                    cfg.dtype
+                ),
+            }
+        x = x + o
+        x = constrain_act(x, ("data", None, None))
+        h = rms_norm(x, layer["ln2"], cfg.norm_eps)
+        if cfg.num_experts:
+            h, _ = moe_mod.moe_layer(layer["moe"], h, cfg)
+        else:
+            h = mlp(layer["mlp"], h, act=cfg.act)
+        x = x + h
+        x = constrain_act(x, ("data", None, None))
+        cache_l = jax.tree_util.tree_map(
+            lambda a: constrain_act(a, ("data",) + (None,) * (a.ndim - 1)),
+            cache_l,
+        )
+        return x, cache_l
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain_act(logits, ("data", None, "model"))
+    return logits, cache

@@ -1,0 +1,14 @@
+from repro.optim.sgd import sgd
+from repro.optim.adam import adamw
+from repro.optim.base import apply_updates, Optimizer
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = [
+    "sgd",
+    "adamw",
+    "apply_updates",
+    "Optimizer",
+    "constant",
+    "cosine_decay",
+    "warmup_cosine",
+]

@@ -1,0 +1,48 @@
+"""AdamW (decoupled weight decay), float32 moments."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, resolve_lr
+
+
+def adamw(
+    lr=3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        step_lr = resolve_lr(lr, state["count"])
+        bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * jnp.square(gf)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -step_lr * step, m_new, v_new
+
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda t: t[i], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return pick(0), {"m": pick(1), "v": pick(2), "count": c}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,35 @@
+"""Minimal optimizer core (no optax in this container — built from scratch).
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, new_state)``;
+``apply_updates(params, updates)``. States are pytrees → vmap-able across
+the FL client axis (each client carries its own momentum).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params,
+        updates,
+    )
+
+
+def resolve_lr(lr, count):
+    """lr may be a float or a schedule fn(step) -> float."""
+    if callable(lr):
+        return lr(count)
+    return jnp.asarray(lr, jnp.float32)

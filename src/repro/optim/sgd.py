@@ -1,0 +1,41 @@
+"""SGD with momentum + decoupled weight decay — the paper's optimizer
+(§III-A: lr 0.1, momentum 0.9, decay 0.005)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, resolve_lr
+
+
+def sgd(lr=0.1, momentum: float = 0.9, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step_lr = resolve_lr(lr, state["count"])
+
+        def upd(g, m, p):
+            gf = g.astype(jnp.float32)
+            if weight_decay:
+                gf = gf + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + gf
+            d = gf + momentum * m_new if nesterov else m_new
+            return -step_lr * d, m_new
+
+        flat = jax.tree_util.tree_map(upd, grads, state["mu"], params)
+        updates = jax.tree_util.tree_map(
+            lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        mu = jax.tree_util.tree_map(
+            lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return updates, {"mu": mu, "count": state["count"] + 1}
+
+    return Optimizer(init=init, update=update)

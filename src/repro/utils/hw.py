@@ -1,0 +1,33 @@
+"""Target-hardware constants for roofline analysis.
+
+The runtime container is CPU-only; TPU v5e is the *target*. These constants
+feed launch/roofline.py — they are never used to gate correctness.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float  # FLOP/s per chip
+    hbm_bandwidth: float    # bytes/s per chip
+    hbm_bytes: int          # HBM capacity per chip
+    ici_link_bandwidth: float  # bytes/s per ICI link
+    vmem_bytes: int
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_link_bandwidth=50e9,
+    vmem_bytes=128 * 1024**2,
+)
+
+# MXU native tile — kernel block shapes should be multiples of these.
+MXU_TILE = 128
+VPU_LANES = 128
+SUBLANES = 8

@@ -1,0 +1,25 @@
+"""Key management helpers (no flax — tiny substitute)."""
+from __future__ import annotations
+
+import jax
+
+
+class KeySeq:
+    """Stateful (python-level) key sequence for init-time use only.
+
+    Never use inside jit — training code threads keys explicitly.
+    """
+
+    def __init__(self, seed_or_key):
+        if isinstance(seed_or_key, int):
+            self._key = jax.random.PRNGKey(seed_or_key)
+        else:
+            self._key = seed_or_key
+
+    def __next__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def take(self, n: int):
+        self._key, *subs = jax.random.split(self._key, n + 1)
+        return subs

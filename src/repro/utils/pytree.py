@@ -1,0 +1,126 @@
+"""Pytree utilities used across the framework.
+
+Everything here is pure-python / pure-jax and safe to call inside jit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements in a pytree of arrays."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_flatten_vector(tree) -> jnp.ndarray:
+    """Flatten a pytree of arrays into one 1-D vector (for cosine distances)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_where(mask_tree, a, b):
+    """Per-leaf select: mask_tree leaves are booleans (python or traced)."""
+    return jax.tree_util.tree_map(
+        lambda m, x, y: jnp.where(m, x, y), mask_tree, a, b
+    )
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def tree_paths(tree):
+    """List of (path_string, leaf) pairs, '/'-joined key path."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                keys.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                keys.append(str(p.name))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out
+
+
+def tree_map_with_path_str(fn, tree):
+    """tree_map where fn receives (path_string, leaf)."""
+
+    def _fn(path, leaf):
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                keys.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                keys.append(str(p.name))
+            else:
+                keys.append(str(p))
+        return fn("/".join(keys), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-5) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+        for x, y in zip(la, lb)
+    )
+
+
+def tree_any_nan(tree) -> jnp.ndarray:
+    """Traced scalar bool: any NaN/Inf anywhere in the tree."""
+    leaves = [
+        jnp.any(~jnp.isfinite(x))
+        for x in jax.tree_util.tree_leaves(tree)
+        if jnp.issubdtype(x.dtype, jnp.floating)
+    ]
+    if not leaves:
+        return jnp.asarray(False)
+    return jnp.any(jnp.stack(leaves))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )

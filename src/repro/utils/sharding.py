@@ -1,0 +1,242 @@
+"""Sharding rule engine.
+
+Maps parameter/activation pytree paths to PartitionSpecs for the production
+mesh. Baseline policy (hillclimbed later in EXPERIMENTS.md §Perf):
+
+* TP on the "model" axis over d_ff / flat-head / vocab / expert dims,
+* FSDP on the "data" axis over d_model dims of large 2D+ weights,
+* batch on the "data" axis (activations),
+* a leading client axis (FL population or per-pod client) on "pod".
+
+Every rule checks divisibility against the mesh axis size and falls back to
+replication — an assigned architecture must *lower*, never crash, under the
+baseline policy.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.pytree import tree_map_with_path_str
+
+
+def _div(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0
+
+
+def _flat(*names):
+    """Flatten possibly-tuple axis names into one PartitionSpec entry."""
+    out = []
+    for n in names:
+        if n is None:
+            continue
+        if isinstance(n, tuple):
+            out.extend(n)
+        else:
+            out.append(n)
+    if not out:
+        return None
+    return out[0] if len(out) == 1 else tuple(out)
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    """Axis names + sizes of the active mesh (data/model required).
+
+    Names may be tuples of mesh axes (meta-axes): on the multi-pod mesh the
+    "pod" axis merges into data (serving scale-out) or model (long-context
+    state sharding) — `from_mesh(pod_merge=...)` builds the right view.
+    """
+
+    data: int
+    model: int
+    data_name: str | tuple = "data"
+    model_name: str | tuple = "model"
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh, *, pod_merge: str = "data") -> "MeshAxes":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        data, model = sizes.get("data", 1), sizes.get("model", 1)
+        data_name, model_name = "data", "model"
+        pod = sizes.get("pod", 1)
+        if pod > 1 and pod_merge == "data":
+            data, data_name = data * pod, ("pod", "data")
+        elif pod > 1 and pod_merge == "model":
+            model, model_name = model * pod, ("pod", "model")
+        return cls(
+            data=data, model=model, data_name=data_name, model_name=model_name
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ShardingRules:
+    """Path-pattern → PartitionSpec policy with divisibility fallbacks."""
+
+    axes: MeshAxes
+    # FSDP (shard d_model over data axis) only pays off for big models; the
+    # dry-run enables it for everything — replication falls out where the
+    # dims don't divide.
+    fsdp: bool = True
+    # Extra leading axes (e.g. ("pod",) for a stacked client dim, or a scan
+    # layer dim which is always unsharded).
+    notes: dict = field(default_factory=dict)
+
+    # -- helpers ----------------------------------------------------------
+    def _m(self, n: int) -> Optional[str]:
+        return self.axes.model_name if _div(n, self.axes.model) else None
+
+    def _d(self, n: int) -> Optional[str]:
+        if not self.fsdp:
+            return None
+        return self.axes.data_name if _div(n, self.axes.data) else None
+
+    def _dm(self, n: int):
+        """Try combined (data, model) mega-axis, then model, then data."""
+        if self.fsdp and _div(n, self.axes.data * self.axes.model):
+            return _flat(self.axes.data_name, self.axes.model_name)
+        if _div(n, self.axes.model):
+            return self.axes.model_name
+        if self.fsdp and _div(n, self.axes.data):
+            return self.axes.data_name
+        return None
+
+    # -- main entry -------------------------------------------------------
+    def param_spec(self, path: str, shape) -> P:
+        """PartitionSpec for one parameter given its '/'-joined path."""
+        ndim = len(shape)
+        p = path.lower()
+        # Leading stacked-layer dim (lax.scan) is never sharded.
+        stacked = "layers/" in p or p.startswith("layers")
+        off = 1 if (stacked and ndim >= 2) else 0
+
+        def build(*core):
+            core = list(core) + [None] * (ndim - off - len(core))
+            return P(*([None] * off + core[: ndim - off]))
+
+        # ---- norms / scalars / small vectors: replicate
+        if ndim - off <= 1 or "norm" in p or "ln" in p.split("/")[-1][:2]:
+            return P(*([None] * ndim))
+
+        # ---- embedding (V, D): vocab on model, d_model FSDP on data.
+        # Vocab shards *unconditionally* (uneven/padded sharding): vocab
+        # sizes like 51865 are never axis-multiples and replicating the
+        # largest weight of the model is worse than a padded shard.
+        if "embed" in p and ndim - off == 2:
+            return build(self.axes.model_name, self._d(shape[off + 1]))
+
+        # ---- lm head (D, V)
+        if ("lm_head" in p or "head/w" in p) and ndim - off == 2:
+            return build(self._d(shape[off]), self.axes.model_name)
+
+        # ---- MoE experts (E, din, dout) after optional layer dim:
+        # expert-parallel on 'model' (matches grouped dispatch all-to-all),
+        # FSDP the din dim on 'data'.
+        if "experts" in p and ndim - off == 3:
+            e, din, dout = shape[off], shape[off + 1], shape[off + 2]
+            e_ax = self._m(e)
+            d_ax = self._d(din)
+            return build(e_ax, d_ax, None)
+
+        # ---- router (D, E): replicate E (small), FSDP D
+        if "router" in p and ndim - off == 2:
+            return build(self._d(shape[off]), None)
+
+        # ---- conv kernels (kh, kw, cin, cout): shard cout on model
+        if "conv" in p and ndim - off == 4:
+            return build(None, None, None, self._m(shape[off + 3]))
+
+        # ---- output projections: (dout_flat, D) — TP input, FSDP output
+        last = p.split("/")[-1]
+        if last in ("wo", "w_o", "out_proj", "proj_out", "wo2"):
+            return build(self._m(shape[off]), self._d(shape[off + 1]))
+
+        # ---- generic input projections (D, dout): FSDP input, TP output
+        if ndim - off == 2:
+            return build(self._d(shape[off]), self._m(shape[off + 1]))
+
+        # ---- anything else: replicate
+        return P(*([None] * ndim))
+
+    def tree_param_specs(self, params):
+        """Pytree of PartitionSpecs mirroring `params` (arrays or SDS)."""
+        return tree_map_with_path_str(
+            lambda path, leaf: self.param_spec(path, leaf.shape), params
+        )
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(ndim: int, data_axes=("data",)) -> P:
+    """Batch-leading activation spec: batch over data axis, rest replicated."""
+    ax = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+    return P(*([ax] + [None] * (ndim - 1)))
+
+
+def add_leading(spec: P, axis: Optional[str]) -> P:
+    """Prepend one axis (e.g. a stacked client dim on 'pod') to a spec."""
+    return P(*([axis] + list(spec)))
+
+
+def tree_add_leading(specs, axis: Optional[str]):
+    return jax.tree_util.tree_map(
+        lambda s: add_leading(s, axis), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def named(mesh: Mesh, specs):
+    """Pytree of PartitionSpec → pytree of NamedSharding."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context — models are mesh-agnostic; the launcher sets
+# the logical→mesh axis mapping and model code sprinkles constrain_act()
+# hints ("data" on batch/group dims, "model" on TP dims).
+# ---------------------------------------------------------------------------
+
+_AXIS_CTX: dict = {"data": None, "model": None}
+
+
+def set_axis_ctx(data=None, model=None):
+    """data/model: mesh axis name, tuple of names, or None (unset)."""
+    _AXIS_CTX["data"] = data
+    _AXIS_CTX["model"] = model
+
+
+def clear_axis_ctx():
+    set_axis_ctx(None, None)
+
+
+def constrain_act(x, dims):
+    """dims: tuple of 'data' | 'model' | None per array dim (logical)."""
+    if _AXIS_CTX["data"] is None and _AXIS_CTX["model"] is None:
+        return x
+    spec = P(*[_AXIS_CTX.get(d) if d else None for d in dims])
+    return constrain(x, spec)
+
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b"
+)

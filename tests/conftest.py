@@ -1,0 +1,48 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real (1-device) CPU platform; only launch/dryrun.py forces 512."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_REGISTRY, get_config
+from repro.configs.base import FLConfig
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_cnn():
+    return get_config("resnet18-cifar").reduced()
+
+
+@pytest.fixture(scope="session")
+def tiny_fl():
+    return FLConfig(
+        num_clients=6, peers_per_round=2, batch_size=8,
+        client_sample_ratio=0.5, epochs_extractor=1, epochs_header=1,
+    )
+
+
+def tiny_batch(cfg, key, batch=2, seq=16):
+    if cfg.family == "cnn":
+        return {
+            "images": jax.random.normal(
+                key, (batch, cfg.image_size, cfg.image_size, 3)
+            ),
+            "labels": jnp.zeros((batch,), jnp.int32),
+        }
+    out = {
+        "tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    }
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model)
+        ) * 0.02
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = jax.random.normal(
+            key, (batch, cfg.num_prefix_tokens, cfg.d_model)
+        ) * 0.02
+    return out

@@ -1,0 +1,162 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+For each of the 10 assigned architectures (+ the paper's ResNet-18):
+instantiate the REDUCED same-family variant (≤2 layers, d_model ≤ 512,
+≤4 experts) and run one forward/train step on CPU asserting output shapes
+and no NaNs; decode archs also run one serve_step.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_REGISTRY, INPUT_SHAPES, get_config
+from repro.core.partial_freeze import make_phase_steps
+from repro.models import model as model_mod
+from repro.models.split import merge_params, split_params
+from repro.optim.sgd import sgd
+
+from conftest import tiny_batch
+
+ARCHS = list(ARCH_REGISTRY)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_limits(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers <= 3                 # ≤2 + hybrid 3-block pattern
+    assert r.d_model <= 512
+    assert r.num_experts <= 4
+    assert r.family == get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(cfg, key)
+    batch = tiny_batch(cfg, key, batch=2, seq=16)
+    logits, aux = model_mod.forward(cfg, params, batch)
+    if cfg.family == "cnn":
+        assert logits.shape == (2, cfg.num_classes)
+    else:
+        s_total = 16 + (cfg.num_prefix_tokens if cfg.family == "vlm" else 0)
+        assert logits.shape == (2, s_total, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss, metrics = model_mod.loss_fn(cfg, params, batch)
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    """One PFedDST phase-e + phase-h pair step: finite loss, no NaN params."""
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = model_mod.init_params(cfg, key)
+    e, h = split_params(cfg, params)
+    opt = sgd(0.01, momentum=0.9)
+    steps = make_phase_steps(cfg, opt)
+    batch = tiny_batch(cfg, key, batch=2, seq=16)
+    e2, oe, m1 = steps.phase_e(e, h, opt.init(e), batch)
+    h2, oh, m2 = steps.phase_h(e2, h, opt.init(h), batch)
+    from repro.utils.pytree import tree_any_nan
+
+    assert not bool(tree_any_nan(e2))
+    assert not bool(tree_any_nan(h2))
+    assert bool(jnp.isfinite(m1["loss"])) and bool(jnp.isfinite(m2["loss"]))
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCHS if ARCH_REGISTRY[a].family != "cnn"]
+)
+def test_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(2)
+    params = model_mod.init_params(cfg, key)
+    cache = model_mod.init_cache(cfg, 2, 32)
+    tokens = jnp.ones((2, 1), jnp.int32)
+    logits, new_cache = model_mod.decode_step(
+        cfg, params, cache, tokens, jnp.asarray(3, jnp.int32)
+    )
+    assert logits.shape == (2, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # cache structure preserved
+    assert jax.tree_util.tree_structure(cache) == \
+        jax.tree_util.tree_structure(new_cache)
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [a for a in ARCHS
+     if ARCH_REGISTRY[a].family in ("dense", "moe", "vlm", "ssm", "hybrid")],
+)
+def test_decode_matches_forward(arch):
+    """Token-by-token decode logits == teacher-forced forward logits."""
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(3)
+    params = model_mod.init_params(cfg, key)
+    seq = 8
+    tokens = jax.random.randint(key, (1, seq), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        pytest.skip("vlm forward prepends prefix positions — separate path")
+    full_logits, _ = model_mod.forward(cfg, params, batch, backend="naive")
+
+    cache = model_mod.init_cache(cfg, 1, seq)
+    outs = []
+    for t in range(seq):
+        lg, cache = model_mod.decode_step(
+            cfg, params, cache, tokens[:, t : t + 1], jnp.asarray(t)
+        )
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    diff = jnp.max(
+        jnp.abs(
+            dec_logits.astype(jnp.float32) - full_logits.astype(jnp.float32)
+        )
+    )
+    assert float(diff) < 0.15, f"decode/forward divergence {float(diff)}"
+
+
+def test_sub_quadratic_flags():
+    """long_500k applicability matches DESIGN.md §6."""
+    runs = {a for a in ARCHS if ARCH_REGISTRY[a].sub_quadratic}
+    assert runs == {"rwkv6-7b", "recurrentgemma-2b"}
+
+
+def test_all_shapes_registered():
+    assert set(INPUT_SHAPES) == {
+        "train_4k", "prefill_32k", "decode_32k", "long_500k"
+    }
+    s = INPUT_SHAPES["long_500k"]
+    assert s.seq_len == 524_288 and s.global_batch == 1
+
+
+def test_param_counts_match_assignment():
+    """Analytic N ≈ the architecture's nameplate size (sanity on configs)."""
+    # bounds allow the documented uniform-zoo deviations (DESIGN.md §9):
+    # gated 3-matrix MLPs everywhere (starcoder2's plain MLP modeled
+    # gated → +40 %), full LRU gate matrices (recurrentgemma), uniform
+    # MoE stack (deepseek's 3 dense first layers folded in).
+    expect = {
+        "phi3.5-moe-42b-a6.6b": (40e9, 45e9),
+        "qwen2-1.5b": (1.2e9, 1.9e9),
+        "internvl2-76b": (65e9, 80e9),
+        "rwkv6-7b": (6e9, 8.5e9),
+        "recurrentgemma-2b": (2e9, 3.8e9),
+        "qwen2.5-3b": (2.7e9, 3.8e9),
+        "qwen2.5-14b": (13e9, 16e9),
+        "deepseek-v3-671b": (640e9, 720e9),
+        "starcoder2-7b": (6.5e9, 10.5e9),
+        "whisper-base": (0.05e9, 0.15e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: N={n / 1e9:.2f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    ds = get_config("deepseek-v3-671b")
+    active = ds.active_param_count()
+    assert active < 0.1 * ds.param_count()  # 9/257 experts active
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert 5e9 <= phi.active_param_count() <= 8e9   # ~6.6B active

@@ -1,0 +1,58 @@
+"""Checkpoint save/restore roundtrip (npz + manifest, no pickle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import (
+    latest_checkpoint,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+
+def _tree(key):
+    return {
+        "layers": {
+            "w": jax.random.normal(key, (3, 4, 5)),
+            "b": jnp.zeros((4,), jnp.bfloat16),
+        },
+        "head": [jnp.arange(6).reshape(2, 3), jnp.ones(())],
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    path = save_checkpoint(str(tmp_path), 7, tree, extra={"note": "x"})
+    restored, manifest = load_checkpoint(path, like=tree)
+    assert manifest["step"] == 7
+    assert manifest["extra"]["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+        assert a.dtype == b.dtype
+
+
+def test_latest_checkpoint(tmp_path):
+    tree = {"w": jnp.ones((2,))}
+    assert latest_checkpoint(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 12, tree)
+    latest = latest_checkpoint(str(tmp_path))
+    assert latest.endswith("ckpt_00000012.npz")
+
+
+def test_population_state_roundtrip(tmp_path, tiny_cnn):
+    """The full PFedDST PopulationState checkpoints and restores."""
+    from repro.core import init_population
+    from repro.optim.sgd import sgd
+
+    opt = sgd(0.1, momentum=0.9)
+    state = init_population(tiny_cnn, jax.random.PRNGKey(1), 3, opt, opt)
+    path = save_checkpoint(str(tmp_path), 0, state._asdict())
+    restored, _ = load_checkpoint(path, like=state._asdict())
+    for a, b in zip(jax.tree.leaves(state._asdict()),
+                    jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )

@@ -1,0 +1,90 @@
+"""Synthetic data + pathological partition properties (paper §III-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import epoch_batches, sample_client_batches
+from repro.data.synthetic import (
+    client_datasets_cifar,
+    pathological_partition,
+    synth_cifar,
+    synth_tokens,
+)
+
+
+def test_synth_cifar_shapes_and_balance():
+    x, y = synth_cifar(jax.random.PRNGKey(0), num_classes=10,
+                       samples_per_class=20, image_size=16)
+    assert x.shape == (200, 16, 16, 3)
+    counts = np.bincount(np.asarray(y), minlength=10)
+    assert (counts == 20).all()
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    m=st.sampled_from([4, 10, 20]),
+    cpc=st.sampled_from([2, 5]),
+    seed=st.integers(0, 2**30),
+)
+def test_pathological_partition_classes_per_client(m, cpc, seed):
+    """Each client sees at most `classes_per_client` distinct classes —
+    the paper's non-IID protocol."""
+    nc = 10
+    x, y = synth_cifar(jax.random.PRNGKey(seed), num_classes=nc,
+                       samples_per_class=cpc * m * 2, image_size=8)
+    idx = pathological_partition(
+        jax.random.PRNGKey(seed + 1), y, m, cpc, nc
+    )
+    y_np = np.asarray(y)
+    for i in range(m):
+        classes = np.unique(y_np[np.asarray(idx[i])])
+        assert len(classes) <= cpc
+    # every sample assigned at most once
+    flat = np.asarray(idx).ravel()
+    assert len(np.unique(flat)) == len(flat)
+
+
+def test_client_datasets_same_classes_train_test():
+    """Train and test splits of one client share the same class subset
+    (paper: 'training and testing data ... same class subset')."""
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(2), num_clients=6, num_classes=10,
+        classes_per_client=2, samples_per_class=30, image_size=8,
+    )
+    for i in range(6):
+        tr = set(np.unique(np.asarray(data["train_y"][i])))
+        te = set(np.unique(np.asarray(data["test_y"][i])))
+        assert te <= tr
+
+
+def test_synth_tokens_domains():
+    toks, domains = synth_tokens(
+        jax.random.PRNGKey(3), num_clients=8, vocab_size=128, seq_len=64,
+        seqs_per_client=16, num_domains=4, domain_frac=0.9,
+    )
+    assert toks.shape == (8, 16, 64)
+    assert bool(jnp.all((toks >= 0) & (toks < 128)))
+    # same-domain clients share vocab concentration; different domains don't
+    dom_size = 128 // 4
+    for c in range(8):
+        d = int(domains[c])
+        in_dom = ((toks[c] >= d * dom_size) & (toks[c] < (d + 1) * dom_size))
+        assert float(jnp.mean(in_dom)) > 0.6
+
+
+def test_sample_client_batches_shapes():
+    data = {"x": jnp.arange(60).reshape(5, 12), "y": jnp.ones((5, 12, 2))}
+    out = sample_client_batches(jax.random.PRNGKey(0), data, 4)
+    assert out["x"].shape == (5, 4)
+    assert out["y"].shape == (5, 4, 2)
+    # indices drawn within each client's local data
+    assert bool(jnp.all(out["x"] // 12 == jnp.arange(5)[:, None]))
+
+
+def test_epoch_batches_cover_without_repeat():
+    idx = epoch_batches(jax.random.PRNGKey(1), 20, 5)
+    flat = np.asarray(idx).ravel()
+    assert idx.shape == (4, 5)
+    assert len(np.unique(flat)) == 20

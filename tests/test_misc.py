@@ -1,0 +1,86 @@
+"""Cheap pure-python invariants: configs, history, registries, hw."""
+import pytest
+
+from repro.configs import ARCH_REGISTRY, ASSIGNED_ARCHS, get_config
+from repro.fl.simulator import History
+from repro.fl.strategies import STRATEGIES
+from repro.utils.hw import MXU_TILE, TPU_V5E
+
+
+def test_assigned_arch_count_and_families():
+    assert len(ASSIGNED_ARCHS) == 10
+    fams = {get_config(a).family for a in ASSIGNED_ARCHS}
+    assert fams == {"dense", "moe", "audio", "vlm", "ssm", "hybrid"}
+
+
+def test_exact_assigned_configs():
+    """Spot-check the assignment table values survive in configs."""
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads) == \
+        (32, 4096, 32, 8)
+    assert (c.d_ff, c.vocab_size, c.num_experts, c.num_experts_per_tok) == \
+        (6400, 32064, 16, 2)
+    c = get_config("deepseek-v3-671b")
+    assert (c.num_layers, c.d_model, c.num_heads) == (61, 7168, 128)
+    assert (c.num_experts, c.num_experts_per_tok, c.num_shared_experts) == \
+        (256, 8, 1)
+    assert c.use_mla and c.kv_lora_rank == 512
+    c = get_config("recurrentgemma-2b")
+    assert c.block_pattern.count("attn") * 3 + 2 == c.num_layers
+    assert c.window_size == 2048
+    c = get_config("starcoder2-7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (32, 4608, 36, 4, 18432, 49152)
+    c = get_config("internvl2-76b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads) == \
+        (80, 8192, 64, 8)
+    c = get_config("qwen2-1.5b")
+    assert c.qkv_bias and (c.d_ff, c.vocab_size) == (8960, 151936)
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("gpt-5")
+
+
+def test_strategy_registry():
+    assert set(STRATEGIES) == {
+        "fedavg", "fedper", "fedbabu", "dfedavgm", "dispfl", "dfedpgp",
+        "pfeddst", "pfeddst_random",
+    }
+
+
+def test_history_rounds_to_target():
+    h = History(rounds=[5, 10, 15], accuracy=[0.3, 0.85, 0.9],
+                train_loss=[1, 1, 1], wall_s=[1, 2, 3])
+    assert h.rounds_to_target(0.8) == 10
+    assert h.rounds_to_target(0.95) is None
+    d = h.to_dict()
+    assert d["accuracy"] == [0.3, 0.85, 0.9]
+
+
+def test_hw_constants():
+    assert TPU_V5E.peak_flops_bf16 == 197e12
+    assert TPU_V5E.hbm_bandwidth == 819e9
+    assert TPU_V5E.ici_link_bandwidth == 50e9
+    assert MXU_TILE == 128
+
+
+def test_reduced_is_idempotent_family():
+    for a in ARCH_REGISTRY:
+        r = get_config(a).reduced()
+        r2 = r.reduced()
+        assert r2.d_model <= r.d_model
+        assert r.family == r2.family
+
+
+def test_fl_config_paper_defaults():
+    from repro.configs.base import FLConfig
+
+    fl = FLConfig()
+    assert (fl.num_clients, fl.num_rounds, fl.peers_per_round) == \
+        (100, 500, 10)
+    assert (fl.lr, fl.momentum, fl.weight_decay) == (0.1, 0.9, 0.005)
+    assert (fl.batch_size, fl.epochs_extractor, fl.epochs_header) == \
+        (128, 5, 1)
+    assert fl.client_sample_ratio == 0.1

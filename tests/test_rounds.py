@@ -1,0 +1,155 @@
+"""Full PFedDST round invariants (Algorithm 1 end-to-end, population mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import init_population, make_phase_steps, pfeddst_round
+from repro.data.synthetic import client_datasets_cifar
+from repro.optim.sgd import sgd
+
+
+@pytest.fixture(scope="module")
+def setup(tiny_cnn, tiny_fl):
+    cfg, fl = tiny_cnn, tiny_fl
+    key = jax.random.PRNGKey(0)
+    data = client_datasets_cifar(
+        key, fl.num_clients, num_classes=10, classes_per_client=2,
+        samples_per_class=20, image_size=16,
+    )
+    train = {"images": data["train_x"], "labels": data["train_y"]}
+    opt = sgd(0.05, momentum=0.9)
+    state = init_population(cfg, key, fl.num_clients, opt, opt)
+    steps = make_phase_steps(cfg, opt)
+    return cfg, fl, state, steps, train
+
+
+def _run_round(cfg, fl, steps, state, train, seed=1):
+    return pfeddst_round(
+        cfg, fl, steps, state, train, jax.random.PRNGKey(seed),
+        steps_per_epoch=1, probe_size=8,
+    )
+
+
+def test_round_runs_and_metrics_finite(setup):
+    cfg, fl, state, steps, train = setup
+    new_state, m = _run_round(cfg, fl, steps, state, train)
+    assert bool(jnp.isfinite(m["train_loss_e"]))
+    assert bool(jnp.isfinite(m["train_loss_h"]))
+    assert int(new_state.round) == int(state.round) + 1
+
+
+def test_inactive_clients_untouched(setup):
+    """Sampled-out clients keep their exact parameters (paper §III-A)."""
+    cfg, fl, state, steps, train = setup
+    new_state, m = _run_round(cfg, fl, steps, state, train)
+    active = np.asarray(m["active"])
+    assert 0 < active.sum() < fl.num_clients
+    for leaf_old, leaf_new in zip(
+        jax.tree.leaves(state.extractor), jax.tree.leaves(new_state.extractor)
+    ):
+        for i in np.where(~active)[0]:
+            np.testing.assert_array_equal(
+                np.asarray(leaf_old[i]), np.asarray(leaf_new[i])
+            )
+    for leaf_old, leaf_new in zip(
+        jax.tree.leaves(state.header), jax.tree.leaves(new_state.header)
+    ):
+        for i in np.where(~active)[0]:
+            np.testing.assert_array_equal(
+                np.asarray(leaf_old[i]), np.asarray(leaf_new[i])
+            )
+
+
+def test_active_clients_update_and_select(setup):
+    cfg, fl, state, steps, train = setup
+    new_state, m = _run_round(cfg, fl, steps, state, train)
+    active = np.asarray(m["active"])
+    mask = np.asarray(m["select_mask"])
+    # only active rows select peers; they select exactly k
+    assert (mask.sum(1)[~active] == 0).all()
+    assert (mask.sum(1)[active] == fl.peers_per_round).all()
+    # active extractors changed
+    changed = np.zeros(fl.num_clients, bool)
+    for leaf_old, leaf_new in zip(
+        jax.tree.leaves(state.extractor), jax.tree.leaves(new_state.extractor)
+    ):
+        d = np.abs(np.asarray(leaf_new) - np.asarray(leaf_old))
+        changed |= d.reshape(fl.num_clients, -1).max(1) > 0
+    assert changed[active].all()
+
+
+def test_recency_array_updates(setup):
+    cfg, fl, state, steps, train = setup
+    new_state, m = _run_round(cfg, fl, steps, state, train)
+    mask = np.asarray(m["select_mask"])
+    last = np.asarray(new_state.last_selected)
+    assert (last[mask] == int(state.round)).all()
+    assert (last[~mask] == np.asarray(state.last_selected)[~mask]).all()
+
+
+def test_rounds_chain(setup):
+    """Two consecutive rounds: recency influences the second selection."""
+    cfg, fl, state, steps, train = setup
+    s1, m1 = _run_round(cfg, fl, steps, state, train, seed=1)
+    s2, m2 = _run_round(cfg, fl, steps, s1, train, seed=2)
+    assert int(s2.round) == 2
+    assert bool(jnp.isfinite(m2["train_loss_e"]))
+
+
+def test_threshold_selection_mode(setup):
+    import dataclasses
+
+    cfg, fl, state, steps, train = setup
+    fl_thr = dataclasses.replace(fl, selection="threshold",
+                                 score_threshold=-1e9)
+    new_state, m = _run_round(cfg, fl_thr, steps, state, train)
+    mask = np.asarray(m["select_mask"])
+    active = np.asarray(m["active"])
+    # threshold −1e9 admits every non-self peer for active clients
+    assert (mask.sum(1)[active] == fl.num_clients - 1).all()
+
+
+def test_random_selection_ablation(setup):
+    import dataclasses
+
+    cfg, fl, state, steps, train = setup
+    fl_rand = dataclasses.replace(fl, selection="random")
+    new_state, m = _run_round(cfg, fl_rand, steps, state, train)
+    mask = np.asarray(m["select_mask"])
+    active = np.asarray(m["active"])
+    assert (mask.sum(1)[active] == fl.peers_per_round).all()
+    assert not mask.diagonal().any()
+
+
+def test_fed_round_step_matches_semantics(tiny_cnn, tiny_fl):
+    """launch.steps.fed_round_step (the multi-pod lowering) preserves the
+    same invariants at M=2."""
+    import dataclasses
+
+    from repro.launch.steps import make_fed_round_step
+    from repro.models import model as model_mod
+    from repro.models.split import split_params
+
+    cfg = tiny_cnn
+    fl = dataclasses.replace(tiny_fl, num_clients=2, peers_per_round=1)
+    opt = sgd(0.05, momentum=0.9)
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 2)
+    params = jax.vmap(lambda k: model_mod.init_params(cfg, k))(ks)
+    e, h = split_params(cfg, params)
+    oe, oh = jax.vmap(opt.init)(e), jax.vmap(opt.init)(h)
+    batch = {
+        "images": jax.random.normal(key, (2, 4, 16, 16, 3)),
+        "labels": jnp.zeros((2, 4), jnp.int32),
+    }
+    step = make_fed_round_step(cfg, fl, opt, opt, backend="naive",
+                               remat=False)
+    e2, h2, oe2, oh2, last, rnd, metrics = step(
+        e, h, oe, oh, jnp.full((2, 2), -1, jnp.int32),
+        jnp.zeros((), jnp.int32), batch, batch,
+    )
+    assert int(rnd) == 1
+    assert bool(jnp.isfinite(metrics["loss_e"]))
+    last = np.asarray(last)
+    assert last[0, 1] == 0 and last[1, 0] == 0  # each selected the other

@@ -1,0 +1,138 @@
+"""Selection (top-k/threshold/recency-update) + aggregation invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (
+    aggregate_extractors,
+    aggregate_one,
+    selection_to_weights,
+)
+from repro.core.selection import combined_scores, select_peers, update_recency
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    m=st.integers(3, 10),
+    k=st.integers(1, 5),
+    seed=st.integers(0, 2**30),
+)
+def test_topk_selection_properties(m, k, seed):
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (m, m))
+    scores = jnp.where(jnp.eye(m, dtype=bool), -1e30, scores)
+    mask = select_peers(scores, k=k)
+    mask_np = np.asarray(mask)
+    assert mask_np.shape == (m, m)
+    assert not mask_np.diagonal().any()            # never self
+    assert (mask_np.sum(1) == min(k, m - 1)).all()  # exactly k each
+    # selected scores dominate unselected
+    for i in range(m):
+        sel = np.asarray(scores)[i][mask_np[i]]
+        unsel = np.asarray(scores)[i][~mask_np[i] & ~np.eye(m, dtype=bool)[i]]
+        if len(sel) and len(unsel):
+            assert sel.min() >= unsel.max() - 1e-6
+
+
+def test_threshold_selection():
+    scores = jnp.array([[-1e30, 0.5, -0.2], [0.9, -1e30, 0.1], [0.0, 0.3, -1e30]])
+    mask = np.asarray(select_peers(scores, threshold=0.2))
+    assert mask.tolist() == [
+        [False, True, False], [True, False, False], [False, True, False]
+    ]
+
+
+def test_candidate_mask_respected():
+    m = 5
+    scores = jnp.ones((m, m))
+    cand = jnp.zeros((m, m), bool).at[:, 0].set(True)
+    mask = np.asarray(select_peers(scores, k=3, candidate_mask=cand))
+    assert mask[:, 1:].sum() == 0
+    assert mask[1:, 0].all()
+
+
+def test_update_recency():
+    last = jnp.full((3, 3), -1)
+    sel = jnp.zeros((3, 3), bool).at[0, 1].set(True)
+    out = np.asarray(update_recency(last, sel, jnp.asarray(7)))
+    assert out[0, 1] == 7 and out[0, 2] == -1
+
+
+# ---------------------------------------------------------------------------
+# aggregation
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=30)
+@given(m=st.integers(2, 8), seed=st.integers(0, 2**30))
+def test_weights_row_stochastic(m, seed):
+    mask = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.4, (m, m))
+    w = np.asarray(selection_to_weights(mask, include_self=True))
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+    assert (w >= 0).all()
+
+
+def test_aggregation_identity_when_no_peers():
+    """With no peers selected, aggregation must be a no-op (self weight 1)."""
+    m = 4
+    mask = jnp.zeros((m, m), bool)
+    w = selection_to_weights(mask, include_self=True)
+    tree = {"x": jax.random.normal(jax.random.PRNGKey(0), (m, 3, 5))}
+    out = aggregate_extractors(tree, w)
+    np.testing.assert_allclose(
+        np.asarray(out["x"]), np.asarray(tree["x"]), atol=1e-6
+    )
+
+
+def test_aggregation_fixed_point():
+    """If all clients hold identical extractors, aggregation is invariant."""
+    m = 5
+    leaf = jax.random.normal(jax.random.PRNGKey(1), (3, 4))
+    tree = {"w": jnp.broadcast_to(leaf[None], (m, 3, 4))}
+    mask = jax.random.bernoulli(jax.random.PRNGKey(2), 0.5, (m, m))
+    w = selection_to_weights(mask, include_self=True)
+    out = aggregate_extractors(tree, w)
+    np.testing.assert_allclose(
+        np.asarray(out["w"]), np.asarray(tree["w"]), atol=1e-5
+    )
+
+
+@settings(deadline=None, max_examples=20)
+@given(m=st.integers(2, 6), seed=st.integers(0, 2**30))
+def test_aggregation_convexity(m, seed):
+    """Aggregated values stay inside the per-coordinate convex hull."""
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(seed), (m, 4))}
+    mask = jax.random.bernoulli(jax.random.PRNGKey(seed + 1), 0.5, (m, m))
+    w = selection_to_weights(mask, include_self=True)
+    out = np.asarray(aggregate_extractors(tree, w)["w"])
+    lo = np.asarray(tree["w"]).min(0) - 1e-5
+    hi = np.asarray(tree["w"]).max(0) + 1e-5
+    assert (out >= lo).all() and (out <= hi).all()
+
+
+def test_aggregate_one_matches_population():
+    """Single-client path == population einsum row."""
+    m = 4
+    key = jax.random.PRNGKey(3)
+    stacked = {"w": jax.random.normal(key, (m, 6))}
+    mask = jnp.zeros((m, m), bool).at[0, 1].set(True).at[0, 3].set(True)
+    w = selection_to_weights(mask, include_self=True)
+    pop = np.asarray(aggregate_extractors(stacked, w)["w"][0])
+    peers = {"w": stacked["w"][jnp.array([1, 3])]}
+    mine = {"w": stacked["w"][0]}
+    row = jnp.array([w[0, 0], w[0, 1], w[0, 3]])
+    one = np.asarray(aggregate_one(mine, peers, row)["w"])
+    np.testing.assert_allclose(one, pop, atol=1e-6)
+
+
+def test_data_fraction_weighting():
+    """Eq. 5's n_j weighting biases toward data-rich peers."""
+    m = 3
+    mask = jnp.array(
+        [[False, True, True], [False, False, False], [False, False, False]]
+    )
+    frac = jnp.array([1.0, 3.0, 1.0])
+    w = np.asarray(
+        selection_to_weights(mask, include_self=True, data_fractions=frac)
+    )
+    assert w[0, 1] > w[0, 2]
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
