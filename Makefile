@@ -1,0 +1,17 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify test deps bench-comms
+
+deps:
+	$(PY) -m pip install -r requirements-dev.txt
+
+# tier-1 gate (ROADMAP.md): the full CPU suite, fail-fast
+verify:
+	$(PY) -m pytest -x -q
+
+test:
+	$(PY) -m pytest -q
+
+bench-comms:
+	$(PY) benchmarks/comms_cost.py

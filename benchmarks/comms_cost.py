@@ -1,0 +1,106 @@
+"""Accuracy-vs-bytes curves per topology — what PFedDST costs on a network.
+
+Runs the same strategy on the same population under different communication
+graphs (repro.comms) and reports, per topology: final personalized
+accuracy, total bytes moved, simulated network time, energy, and the
+communication budget to reach a target accuracy — the DisPFL-style
+"decentralized personalization under a budget" comparison.
+
+    PYTHONPATH=src python benchmarks/comms_cost.py
+    PYTHONPATH=src python benchmarks/comms_cost.py \
+        --topologies ring erdos_renyi full small_world dynamic \
+        --strategy pfeddst --rounds 30
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+
+from repro.comms.topology import TOPOLOGIES
+from repro.configs import get_config
+from repro.configs.base import CommsConfig, FLConfig
+from repro.data.synthetic import client_datasets_cifar
+from repro.fl import run_experiment
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topologies", nargs="*",
+                    default=["ring", "erdos_renyi", "full"],
+                    choices=list(TOPOLOGIES))
+    ap.add_argument("--strategy", default="pfeddst")
+    ap.add_argument("--clients", type=int, default=12)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--peers", type=int, default=4)
+    ap.add_argument("--sample-ratio", type=float, default=0.5)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--image-size", type=int, default=16)
+    ap.add_argument("--samples-per-class", type=int, default=40)
+    ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--steps-per-epoch", type=int, default=1)
+    ap.add_argument("--link-model", default="uniform",
+                    choices=["uniform", "hetero", "geometric"])
+    ap.add_argument("--er-p", type=float, default=0.3)
+    ap.add_argument("--target-acc", type=float, default=0.6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join(RESULTS, "comms_cost.json"))
+    args = ap.parse_args(argv)
+
+    cfg = get_config("resnet18-cifar").reduced()
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(args.seed), args.clients,
+        classes_per_client=2, samples_per_class=args.samples_per_class,
+        image_size=args.image_size,
+    )
+
+    rows = {}
+    for topo in args.topologies:
+        fl = FLConfig(
+            num_clients=args.clients, peers_per_round=args.peers,
+            batch_size=args.batch_size,
+            client_sample_ratio=args.sample_ratio,
+            probe_size=8, seed=args.seed,
+            comms=CommsConfig(
+                topology=topo, er_p=args.er_p,
+                link_model=args.link_model, graph_seed=args.seed,
+            ),
+        )
+        hist = run_experiment(
+            args.strategy, cfg, fl, data, num_rounds=args.rounds,
+            eval_every=args.eval_every,
+            steps_per_epoch=args.steps_per_epoch, seed=args.seed,
+        )
+        rows[topo] = hist.to_dict()
+        rows[topo]["bytes_to_target"] = hist.bytes_to_target(args.target_acc)
+
+    print(f"\n=== {args.strategy}: accuracy vs communication "
+          f"({args.clients} clients, {args.rounds} rounds, "
+          f"{args.link_model} links) ===")
+    hdr = (f"{'topology':<14} {'final_acc':>9} {'total_MB':>9} "
+           f"{'net_time_s':>10} {'energy_J':>9} "
+           f"{'MB@acc≥' + format(args.target_acc, '.2f'):>12}")
+    print(hdr)
+    print("-" * len(hdr))
+    for topo, d in rows.items():
+        btt = d["bytes_to_target"]
+        print(f"{topo:<14} {d['accuracy'][-1]:>9.4f} "
+              f"{d['comm_bytes'][-1] / 1e6:>9.2f} "
+              f"{d['net_time_s'][-1]:>10.2f} "
+              f"{d['energy_j'][-1]:>9.4f} "
+              f"{btt / 1e6 if btt is not None else float('nan'):>12.2f}")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"args": vars(args), "results": rows}, f, indent=1)
+    print(f"\nwrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

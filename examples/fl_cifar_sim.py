@@ -15,13 +15,22 @@ CPU core; the flag runs the full model at 16 clients × 60 rounds ≈ a few
 hundred local train steps per client. Every paper hyper-parameter —
 lr 0.1, momentum 0.9, wd 0.005, batch 128, K_e=5, K_h=1, 2 classes/client
 — is preserved.)
+
+Network model (repro.comms): `--topology ring` (or torus / erdos_renyi /
+small_world / dynamic) restricts which peers are reachable and prices
+every link; the history then reports bytes moved and simulated network
+time next to accuracy:
+
+    PYTHONPATH=src python examples/fl_cifar_sim.py \
+        --topology ring --link-model hetero
 """
 import argparse
 
 import jax
 
+from repro.comms.topology import TOPOLOGIES
 from repro.configs import get_config
-from repro.configs.base import FLConfig
+from repro.configs.base import CommsConfig, FLConfig
 from repro.data.synthetic import client_datasets_cifar
 from repro.fl import run_experiment
 
@@ -31,18 +40,29 @@ def main():
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--strategies", nargs="*",
                     default=["pfeddst", "pfeddst_random"])
+    ap.add_argument("--topology", default="full", choices=list(TOPOLOGIES),
+                    help="communication graph (repro.comms); 'full' = the "
+                         "paper's all-pairs equal-cost network")
+    ap.add_argument("--link-model", default="uniform",
+                    choices=["uniform", "hetero", "geometric"])
+    ap.add_argument("--p-link-drop", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    comms = CommsConfig(
+        topology=args.topology, link_model=args.link_model,
+        p_link_drop=args.p_link_drop, graph_seed=args.seed,
+    )
 
     if args.paper_scale:
         cfg = get_config("resnet18-cifar")          # full ResNet-18
         fl = FLConfig(num_clients=16, peers_per_round=4, batch_size=128,
-                      client_sample_ratio=0.25, probe_size=16)
+                      client_sample_ratio=0.25, probe_size=16, comms=comms)
         rounds, img, spc, spe = 60, 32, 120, 2
     else:
         cfg = get_config("resnet18-cifar").reduced()
         fl = FLConfig(num_clients=12, peers_per_round=4, batch_size=32,
-                      client_sample_ratio=0.34, probe_size=8)
+                      client_sample_ratio=0.34, probe_size=8, comms=comms)
         rounds, img, spc, spe = 30, 16, 80, 1
 
     data = client_datasets_cifar(
@@ -56,10 +76,12 @@ def main():
             s, cfg, fl, data, num_rounds=rounds, eval_every=5,
             steps_per_epoch=spe, seed=args.seed,
         )
-        final[s] = hist.accuracy[-1]
-    print("\nfinal personalized accuracy:")
-    for s, a in final.items():
-        print(f"  {s:16s} {a:.4f}")
+        final[s] = (hist.accuracy[-1], hist.comm_bytes[-1],
+                    hist.net_time_s[-1])
+    print(f"\nfinal personalized accuracy ({args.topology} topology, "
+          f"{args.link_model} links):")
+    for s, (a, b, t) in final.items():
+        print(f"  {s:16s} acc={a:.4f}  comm={b / 1e6:.2f}MB  net={t:.1f}s")
 
 
 if __name__ == "__main__":

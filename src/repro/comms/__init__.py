@@ -1,0 +1,49 @@
+"""repro.comms — decentralized communication fabric.
+
+Models the network under PFedDST's decentralized protocol: who can talk
+to whom (`topology`), what each link costs (`linkcost` → the Eq. 9 `c`
+matrix), what a round's exchange moves and how long it takes
+(`transport`), and what the network does to participation (`events`).
+`fabric.CommsFabric` ties the four together; `configs.base.CommsConfig`
+is the single knob surface.
+"""
+from repro.comms.fabric import CommsFabric, make_fabric
+from repro.comms.linkcost import (
+    LinkModel,
+    cost_scores,
+    geometric_links,
+    hetero_links,
+    make_link_model,
+    uniform_links,
+)
+from repro.comms.topology import (
+    TOPOLOGIES,
+    dynamic_topk,
+    erdos_renyi,
+    fully_connected,
+    make_topology,
+    ring,
+    small_world,
+    torus,
+)
+from repro.comms.transport import (
+    TrafficStats,
+    payload_bytes_per_client,
+    simulate_exchange,
+    star_exchange,
+)
+from repro.comms.events import (
+    apply_events,
+    availability_mask,
+    drop_links,
+    staleness_rounds,
+)
+
+__all__ = [
+    "CommsFabric", "make_fabric", "LinkModel", "cost_scores",
+    "uniform_links", "hetero_links", "geometric_links", "make_link_model",
+    "TOPOLOGIES", "make_topology", "fully_connected", "ring", "torus",
+    "erdos_renyi", "small_world", "dynamic_topk", "TrafficStats",
+    "payload_bytes_per_client", "simulate_exchange", "star_exchange",
+    "apply_events", "availability_mask", "drop_links", "staleness_rounds",
+]

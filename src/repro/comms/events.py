@@ -1,0 +1,61 @@
+"""Network events — participation, link dropouts, staleness (pure jax).
+
+These make client sampling a property of the network instead of a
+simulator flag: a client is absent because it is offline (`availability`),
+an edge is absent because its link dropped this round (`p_link_drop`), and
+a peer is un-selectable because its update would miss the round deadline
+(`p_stale` — the deadline semantic of asynchronous gossip: a stale peer's
+parameters are still on the network, but not fresh enough to pull).
+
+Everything here takes an explicit PRNG key and is jit-safe, so a jitted
+round can resample events from its per-round key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def availability_mask(key, m: int, p_available: float) -> jnp.ndarray:
+    """(M,) bool — client online this round (iid Bernoulli)."""
+    if p_available >= 1.0:
+        return jnp.ones((m,), bool)
+    return jax.random.uniform(key, (m,)) < p_available
+
+
+def drop_links(key, adj, p_drop: float) -> jnp.ndarray:
+    """Symmetric iid edge dropout: each undirected link fails w.p. p."""
+    if p_drop <= 0.0:
+        return adj
+    m = adj.shape[0]
+    u = jax.random.uniform(key, (m, m))
+    fail = jnp.triu(u < p_drop, 1)
+    fail = fail | fail.T
+    return adj & ~fail
+
+def staleness_rounds(key, m: int, p_stale: float,
+                     max_staleness: int) -> jnp.ndarray:
+    """(M,) int32 — rounds by which each client's published update lags
+    (0 = fresh). Stale clients are dropped from candidate columns."""
+    if p_stale <= 0.0:
+        return jnp.zeros((m,), jnp.int32)
+    k_who, k_lag = jax.random.split(key)
+    stale = jax.random.uniform(k_who, (m,)) < p_stale
+    lag = jax.random.randint(k_lag, (m,), 1, max(max_staleness, 1) + 1)
+    return jnp.where(stale, lag, 0).astype(jnp.int32)
+
+
+def apply_events(key, adj, cfg) -> tuple[jnp.ndarray, jnp.ndarray,
+                                         jnp.ndarray]:
+    """(candidate_mask, available, staleness) for one round.
+
+    candidate_mask: adjacency after link dropouts, minus offline rows and
+    columns, minus stale columns — exactly the reachable-and-fresh peers.
+    """
+    m = adj.shape[0]
+    k_drop, k_avail, k_stale = jax.random.split(key, 3)
+    cand = drop_links(k_drop, adj, cfg.p_link_drop)
+    avail = availability_mask(k_avail, m, cfg.availability)
+    stale = staleness_rounds(k_stale, m, cfg.p_stale, cfg.max_staleness)
+    cand = cand & avail[:, None] & avail[None, :] & (stale == 0)[None, :]
+    return cand, avail, stale

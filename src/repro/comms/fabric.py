@@ -1,0 +1,89 @@
+"""CommsFabric — one object tying topology + links + events + transport.
+
+Built once per experiment from a `CommsConfig`; used in two places:
+
+  inside the jitted round (pure jax):
+      cand, avail, stale = fabric.round_masks(key, affinity=...)
+      scores = combined_scores(..., comm_cost=fabric.cost)
+
+  outside jit, per round (exact numpy accounting):
+      stats = fabric.account(select_mask, payload_bytes)
+
+With the default `CommsConfig` (full topology, uniform links, no events)
+the fabric reproduces the paper's §III-A equal-cost world exactly:
+`cost` is `scale` at every off-diagonal entry and `round_masks` returns
+the all-pairs candidate mask — so turning the fabric on does not change
+the selection semantics until the network is made non-trivial.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms import events as events_mod
+from repro.comms import topology as topo_mod
+from repro.comms.linkcost import LinkModel, cost_scores, make_link_model
+from repro.comms.transport import (
+    TrafficStats,
+    simulate_exchange,
+    star_exchange,
+)
+
+
+class CommsFabric:
+    def __init__(self, cfg, m: int, *, cost_scale: float = 1.0):
+        """cfg: CommsConfig; m: population size; cost_scale: the paper's
+        scalar comm_cost c — the uniform-network value of the c matrix."""
+        self.cfg = cfg
+        self.m = m
+        self.link: LinkModel = make_link_model(cfg, m)
+        self.cost = jnp.asarray(cost_scores(self.link, cost_scale))
+        adj = topo_mod.make_topology(
+            cfg.topology, m, cfg=cfg, seed=cfg.graph_seed
+        )
+        self.static_adj = None if adj is None else jnp.asarray(adj)
+
+    @property
+    def is_dynamic(self) -> bool:
+        return self.static_adj is None
+
+    # -- jit-side ------------------------------------------------------------
+    def adjacency(self, key=None, affinity=None) -> jnp.ndarray:
+        """This round's (M, M) bool adjacency (before events)."""
+        if not self.is_dynamic:
+            return self.static_adj
+        if affinity is None:
+            affinity = jnp.zeros((self.m, self.m), jnp.float32)
+        return topo_mod.dynamic_topk(
+            affinity, self.cfg.dyn_degree, key,
+            explore=self.cfg.dyn_explore,
+        )
+
+    def round_masks(self, key, *, affinity=None):
+        """(candidate_mask (M,M), available (M,), staleness (M,)) — pure
+        jax; safe inside a jitted round."""
+        import jax
+
+        k_adj, k_ev = jax.random.split(key)
+        adj = self.adjacency(k_adj, affinity)
+        return events_mod.apply_events(k_ev, adj, self.cfg)
+
+    # -- host-side accounting ------------------------------------------------
+    def account(self, edges, payload_bytes: int) -> TrafficStats:
+        """Gossip exchange over `edges` (i pulls j ⇔ edges[i, j])."""
+        return simulate_exchange(self.link, np.asarray(edges), payload_bytes)
+
+    def star_account(self, active, *, up_bytes: int,
+                     down_bytes: int) -> TrafficStats:
+        """Client↔server exchange for the centralized baselines."""
+        return star_exchange(
+            self.link, np.asarray(active),
+            up_bytes=up_bytes, down_bytes=down_bytes,
+        )
+
+
+def make_fabric(comms_cfg, m: int, *, cost_scale: float = 1.0):
+    """CommsFabric from a CommsConfig, or None for the legacy scalar path."""
+    if comms_cfg is None:
+        return None
+    return CommsFabric(comms_cfg, m, cost_scale=cost_scale)

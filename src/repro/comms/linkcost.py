@@ -1,0 +1,130 @@
+"""Per-link bandwidth / latency / energy model → the Eq. 9 `c` score.
+
+A `LinkModel` holds symmetric (M, M) matrices of link bandwidth (bytes/s),
+one-way latency (s) and radio energy (J/byte). Three generators:
+
+  uniform    every link identical (the paper's §III-A equal-cost world)
+  hetero     per-client bandwidth tiers (log-uniform over `spread`); a
+             link runs at the slower endpoint's tier — the classic
+             edge-device / cross-silo mix (cf. pFedWN's D2D link quality)
+  geometric  clients placed in the unit square; latency grows with
+             distance and bandwidth decays with it — D2D radio links
+
+`cost_scores` converts link quality into the score-space `c` term of
+S = s_p·(α·s_l − s_d + c): c_ij = scale · t_min / t_ij ∈ (0, scale], where
+t_ij is the transfer time of a reference payload. Faster links ⇒ larger c
+⇒ more attractive peers. On a uniform model every off-diagonal entry is
+exactly `scale`, recovering the scalar comm_cost of the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+REF_PAYLOAD_BYTES = 1 << 20    # 1 MiB blend point for latency vs bandwidth
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    bandwidth: np.ndarray     # (M, M) bytes/s, symmetric
+    latency_s: np.ndarray     # (M, M) seconds, symmetric
+    energy_j_per_byte: np.ndarray  # (M, M) joules/byte, symmetric
+
+    @property
+    def num_clients(self) -> int:
+        return self.bandwidth.shape[0]
+
+    def transfer_time(self, payload_bytes: float) -> np.ndarray:
+        """(M, M) seconds to move `payload_bytes` across each link."""
+        return self.latency_s + payload_bytes / self.bandwidth
+
+    def transfer_energy(self, payload_bytes: float) -> np.ndarray:
+        """(M, M) joules to move `payload_bytes` across each link."""
+        return payload_bytes * self.energy_j_per_byte
+
+    def mean_transfer_time(self, payload_bytes: float) -> float:
+        """Mean off-diagonal transfer time (client↔server proxy link)."""
+        t = self.transfer_time(payload_bytes)
+        off = ~np.eye(self.num_clients, dtype=bool)
+        return float(t[off].mean())
+
+
+def cost_scores(link: LinkModel, scale: float = 1.0) -> np.ndarray:
+    """(M, M) float32 `c` matrix for `combined_scores` (diagonal 0)."""
+    m = link.num_clients
+    t = link.transfer_time(REF_PAYLOAD_BYTES)
+    off = ~np.eye(m, dtype=bool)
+    t_min = t[off].min()
+    c = scale * (t_min / t)
+    c[~off] = 0.0
+    return c.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# generators
+# ---------------------------------------------------------------------------
+
+def _sym(x: np.ndarray) -> np.ndarray:
+    return np.triu(x, 1) + np.triu(x, 1).T + np.diag(np.diag(x))
+
+
+def uniform_links(m: int, *, bandwidth_bps: float, latency_s: float,
+                  energy_j_per_byte: float) -> LinkModel:
+    return LinkModel(
+        bandwidth=np.full((m, m), bandwidth_bps),
+        latency_s=np.full((m, m), latency_s),
+        energy_j_per_byte=np.full((m, m), energy_j_per_byte),
+    )
+
+
+def hetero_links(m: int, *, bandwidth_bps: float, latency_s: float,
+                 energy_j_per_byte: float, spread: float,
+                 rng: np.random.Generator) -> LinkModel:
+    """Per-client tier in [1/spread, 1] (log-uniform); a link runs at the
+    slower endpoint's tier, and its latency/energy scale inversely."""
+    tier = np.exp(rng.uniform(-np.log(spread), 0.0, size=m))
+    pair = np.minimum(tier[:, None], tier[None, :])
+    return LinkModel(
+        bandwidth=bandwidth_bps * pair,
+        latency_s=latency_s / pair,
+        energy_j_per_byte=energy_j_per_byte / pair,
+    )
+
+
+def geometric_links(m: int, *, bandwidth_bps: float, latency_s: float,
+                    energy_j_per_byte: float,
+                    rng: np.random.Generator) -> LinkModel:
+    """Clients at uniform positions in the unit square. Latency grows
+    linearly with distance (mean-normalized); bandwidth and energy decay /
+    grow quadratically with it — a free-space path-loss caricature."""
+    pos = rng.random((m, 2))
+    d = np.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
+    off = ~np.eye(m, dtype=bool)
+    d_rel = d / max(d[off].mean(), 1e-9)
+    np.fill_diagonal(d_rel, 1.0)
+    return LinkModel(
+        bandwidth=bandwidth_bps / (1.0 + d_rel**2),
+        latency_s=latency_s * (0.5 + 0.5 * d_rel),
+        energy_j_per_byte=energy_j_per_byte * (1.0 + d_rel**2),
+    )
+
+
+def make_link_model(cfg, m: int) -> LinkModel:
+    """Build the LinkModel named by a `CommsConfig`."""
+    kw = dict(
+        bandwidth_bps=cfg.bandwidth_mbps * 1e6 / 8.0,
+        latency_s=cfg.latency_ms * 1e-3,
+        energy_j_per_byte=cfg.energy_nj_per_byte * 1e-9,
+    )
+    rng = np.random.default_rng(cfg.graph_seed + 1)
+    if cfg.link_model == "uniform":
+        return uniform_links(m, **kw)
+    if cfg.link_model == "hetero":
+        return hetero_links(m, spread=cfg.hetero_spread, rng=rng, **kw)
+    if cfg.link_model == "geometric":
+        return geometric_links(m, rng=rng, **kw)
+    raise KeyError(
+        f"unknown link_model {cfg.link_model!r}; "
+        "available: uniform | hetero | geometric"
+    )

@@ -1,0 +1,139 @@
+"""Communication-graph generators — who can talk to whom.
+
+Static generators return a symmetric, self-loop-free boolean (M, M)
+adjacency as a numpy array (sampled once at fabric build time with a fixed
+seed, so a run is reproducible and the graph is a jit-capturable constant).
+The score-driven `dynamic_topk` graph is pure jax and safe to call inside a
+jitted round with a per-round key.
+
+Adjacency convention: adj[i, j] = True ⇔ client i can pull from peer j.
+All static graphs here are undirected (adj == adj.T).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TOPOLOGIES = (
+    "full", "ring", "torus", "erdos_renyi", "small_world", "dynamic",
+)
+
+
+def _no_self(adj: np.ndarray) -> np.ndarray:
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def fully_connected(m: int) -> np.ndarray:
+    return _no_self(np.ones((m, m), dtype=bool))
+
+
+def ring(m: int, hops: int = 1) -> np.ndarray:
+    """Circulant graph: each client linked to its ±1..hops ring neighbors."""
+    adj = np.zeros((m, m), dtype=bool)
+    idx = np.arange(m)
+    for h in range(1, min(hops, (m - 1) // 2 + 1) + 1):
+        adj[idx, (idx + h) % m] = True
+        adj[idx, (idx - h) % m] = True
+    return _no_self(adj)
+
+
+def torus(m: int) -> np.ndarray:
+    """2-D torus on an r×c grid (r = largest divisor of m ≤ √m).
+
+    Prime m degenerates to a 1×m grid — i.e. a ring.
+    """
+    r = max(d for d in range(1, int(np.sqrt(m)) + 1) if m % d == 0)
+    c = m // r
+    adj = np.zeros((m, m), dtype=bool)
+    for i in range(m):
+        ri, ci = divmod(i, c)
+        for rj, cj in (
+            ((ri + 1) % r, ci), ((ri - 1) % r, ci),
+            (ri, (ci + 1) % c), (ri, (ci - 1) % c),
+        ):
+            adj[i, rj * c + cj] = True
+    adj |= adj.T
+    return _no_self(adj)
+
+
+def erdos_renyi(m: int, p: float, rng: np.random.Generator) -> np.ndarray:
+    """G(m, p): each undirected edge present iid with probability p.
+
+    Isolated clients are re-attached to one uniform peer so every client
+    stays reachable (biases the degree of small graphs slightly upward).
+    """
+    upper = rng.random((m, m)) < p
+    adj = np.triu(upper, 1)
+    adj = adj | adj.T
+    for i in np.flatnonzero(~adj.any(axis=1)):
+        j = (i + 1 + rng.integers(m - 1)) % m
+        adj[i, j] = adj[j, i] = True
+    return _no_self(adj)
+
+
+def small_world(
+    m: int, k: int, beta: float, rng: np.random.Generator
+) -> np.ndarray:
+    """Watts–Strogatz: ring lattice of degree k, each edge rewired w.p. β."""
+    k = max(2, min(k - (k % 2), m - 1))
+    adj = ring(m, hops=k // 2)
+    for i in range(m):
+        for h in range(1, k // 2 + 1):
+            j = (i + h) % m
+            if rng.random() < beta and adj[i, j]:
+                free = np.flatnonzero(~adj[i])
+                free = free[free != i]
+                if free.size:
+                    t = int(rng.choice(free))
+                    adj[i, j] = adj[j, i] = False
+                    adj[i, t] = adj[t, i] = True
+    return _no_self(adj)
+
+
+def dynamic_topk(
+    affinity, degree: int, key, *, explore: int = 0
+) -> jnp.ndarray:
+    """Score-driven dynamic graph (pure jax, jit-safe).
+
+    Each client keeps edges to its `degree` highest-affinity peers (e.g.
+    the previous round's loss-disparity row — peers it has learned hold
+    useful information) plus `explore` uniformly random exploration edges;
+    the union is symmetrized. Ties (e.g. the all-zero affinity of round 0)
+    are broken by per-round uniform noise.
+    """
+    m = affinity.shape[0]
+    k_tie, k_exp = jax.random.split(key)
+    eye = jnp.eye(m, dtype=bool)
+    noise = jax.random.uniform(k_tie, (m, m)) * 1e-6
+    a = jnp.where(eye, -jnp.inf, affinity + noise)
+    _, idx = jax.lax.top_k(a, min(degree, m - 1))
+    adj = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
+    if explore > 0:
+        r = jnp.where(eye, -jnp.inf, jax.random.uniform(k_exp, (m, m)))
+        _, ridx = jax.lax.top_k(r, min(explore, m - 1))
+        adj = adj | jax.nn.one_hot(ridx, m, dtype=bool).any(axis=-2)
+    adj = adj | adj.T
+    return adj & ~eye
+
+
+def make_topology(name: str, m: int, *, cfg=None, seed: int = 0) -> np.ndarray:
+    """Static adjacency by name. `dynamic` has no static graph (→ None);
+    callers resample it per round via `dynamic_topk`."""
+    rng = np.random.default_rng(seed)
+    if name == "full":
+        return fully_connected(m)
+    if name == "ring":
+        return ring(m, hops=cfg.ring_hops if cfg else 1)
+    if name == "torus":
+        return torus(m)
+    if name == "erdos_renyi":
+        return erdos_renyi(m, cfg.er_p if cfg else 0.3, rng)
+    if name == "small_world":
+        return small_world(
+            m, cfg.ws_k if cfg else 4, cfg.ws_beta if cfg else 0.2, rng
+        )
+    if name == "dynamic":
+        return None
+    raise KeyError(f"unknown topology {name!r}; available: {TOPOLOGIES}")

@@ -4,7 +4,13 @@ The 10 assigned architectures + the paper's own ResNet-18/CIFAR model.
 """
 from __future__ import annotations
 
-from repro.configs.base import FLConfig, INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.base import (
+    CommsConfig,
+    FLConfig,
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+)
 from repro.configs import (
     deepseek_v3,
     internvl2_76b,

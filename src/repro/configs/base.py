@@ -182,6 +182,48 @@ INPUT_SHAPES = {
 
 
 # ---------------------------------------------------------------------------
+# Decentralized communication fabric config (repro.comms)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CommsConfig:
+    """Network model for the decentralized fabric (src/repro/comms).
+
+    The default — fully-connected topology, uniform links, no events —
+    reproduces the paper's §III-A assumption of equal communication cost
+    between all clients: the Eq. 9 `c` matrix degenerates to the scalar
+    `FLConfig.comm_cost` and the candidate mask to all-pairs.
+    """
+    # --- topology -----------------------------------------------------------
+    topology: str = "full"      # full | ring | torus | erdos_renyi |
+                                # small_world | dynamic
+    ring_hops: int = 1          # ring: connect to ±1..hops neighbors
+    er_p: float = 0.3           # erdos_renyi: iid edge probability
+    ws_k: int = 4               # small_world: base lattice degree (even)
+    ws_beta: float = 0.2        # small_world: rewiring probability
+    dyn_degree: int = 4         # dynamic: score-driven out-degree
+    dyn_explore: int = 1        # dynamic: extra random exploration edges
+    graph_seed: int = 0         # static graph sampling seed
+
+    # --- link model ---------------------------------------------------------
+    link_model: str = "uniform"     # uniform | hetero | geometric
+    bandwidth_mbps: float = 100.0   # mean link bandwidth
+    latency_ms: float = 10.0        # mean one-way link latency
+    hetero_spread: float = 4.0      # hetero: max/min client-tier ratio
+    energy_nj_per_byte: float = 5.0 # radio energy per byte on the mean link
+
+    # --- network events -----------------------------------------------------
+    p_link_drop: float = 0.0    # per-round iid symmetric edge dropout
+    availability: float = 1.0   # per-round per-client online probability
+    p_stale: float = 0.0        # prob. a client's update misses the deadline
+    max_staleness: int = 3      # staleness horizon (rounds), reporting only
+
+    # --- payload ------------------------------------------------------------
+    payload_bits: int = 0       # quantized bits/param (0 → native dtype)
+    msg_overhead_bytes: int = 0 # fixed per-message framing overhead
+
+
+# ---------------------------------------------------------------------------
 # Federated-learning run config (the paper's Section III setup)
 # ---------------------------------------------------------------------------
 
@@ -206,3 +248,5 @@ class FLConfig:
     probe_size: int = 32               # per-client probe batch for s_l (Eq. 6)
     classes_per_client: int = 2        # pathological partition
     seed: int = 0
+    # network model; None → legacy scalar-cost path (no candidate masking)
+    comms: Optional[CommsConfig] = field(default_factory=CommsConfig)

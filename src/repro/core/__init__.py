@@ -12,7 +12,12 @@ from repro.core.scoring import (
     loss_disparity_matrix,
     recency_scores,
 )
-from repro.core.selection import combined_scores, select_peers, update_recency
+from repro.core.selection import (
+    as_cost_matrix,
+    combined_scores,
+    select_peers,
+    update_recency,
+)
 from repro.core.aggregation import aggregate_extractors, selection_to_weights
 from repro.core.partial_freeze import make_phase_steps
 from repro.core.client_state import PopulationState, init_population
@@ -22,6 +27,7 @@ __all__ = [
     "header_distance_matrix",
     "loss_disparity_matrix",
     "recency_scores",
+    "as_cost_matrix",
     "combined_scores",
     "select_peers",
     "update_recency",

@@ -70,10 +70,15 @@ def pfeddst_round(
     probe_size: int = 64,
     use_score_kernel: bool = False,
     candidate_mask=None,
+    comm_cost=None,
+    available=None,
 ):
     """One communication round. train_data: dict of (M, N, ...) arrays.
 
-    Returns (new_state, metrics dict).
+    candidate_mask / comm_cost / available are the repro.comms hooks:
+    reachable-peer mask, per-link (M, M) Eq. 9 `c` matrix (None → the
+    scalar fl.comm_cost), and (M,) client-online mask composed with the
+    protocol's client_sample_ratio. Returns (new_state, metrics dict).
     """
     m = state.loss_matrix.shape[0]
     k_probe, k_active, k_e, k_h, k_rand = jax.random.split(key, 5)
@@ -89,7 +94,8 @@ def pfeddst_round(
         state.last_selected, state.round, fl.recency_lambda
     )                                                            # Eq. 8
     scores = combined_scores(
-        s_l, s_d, s_p, alpha=fl.alpha, comm_cost=fl.comm_cost
+        s_l, s_d, s_p, alpha=fl.alpha,
+        comm_cost=fl.comm_cost if comm_cost is None else comm_cost,
     )                                                            # Eq. 9
 
     # ---- 2. selection -----------------------------------------------------
@@ -110,11 +116,15 @@ def pfeddst_round(
             scores, k=fl.peers_per_round, candidate_mask=candidate_mask
         )
 
-    # active-client sampling: inactive clients do not aggregate or train
+    # active-client sampling: inactive clients do not aggregate or train.
+    # Network availability (repro.comms.events) composes with the
+    # protocol's sampling ratio: a client trains iff sampled AND online.
     n_active = max(1, int(round(m * fl.client_sample_ratio)))
     active = jnp.zeros((m,), bool).at[
         jax.random.permutation(k_active, m)[:n_active]
     ].set(True)
+    if available is not None:
+        active = active & available
     mask = mask & active[:, None]
 
     # ---- 3. aggregate extractors -----------------------------------------
@@ -155,8 +165,10 @@ def pfeddst_round(
         round=state.round + 1,
     )
     metrics = {
-        "train_loss_e": jnp.sum(loss_e[-1] * active) / jnp.sum(active),
-        "train_loss_h": jnp.sum(loss_h[-1] * active) / jnp.sum(active),
+        "train_loss_e": jnp.sum(loss_e[-1] * active)
+        / jnp.maximum(jnp.sum(active), 1),
+        "train_loss_h": jnp.sum(loss_h[-1] * active)
+        / jnp.maximum(jnp.sum(active), 1),
         "mean_selected_score": jnp.sum(jnp.where(mask, scores, 0.0))
         / jnp.maximum(jnp.sum(mask), 1),
         "s_l_mean": jnp.mean(s_l),

@@ -13,13 +13,31 @@ import jax.numpy as jnp
 NEG = -1e30
 
 
+def as_cost_matrix(comm_cost, m: int) -> jnp.ndarray:
+    """Validate/broadcast the Eq. 9 `c` term to an (M, M) matrix.
+
+    Accepts the paper's scalar (equal cost between all clients, §III-A)
+    or a per-link (M, M) matrix from repro.comms.linkcost. Anything else
+    is a config error, raised at trace time.
+    """
+    c = jnp.asarray(comm_cost)
+    if c.ndim == 0:
+        return jnp.full((m, m), c, dtype=jnp.float32)
+    if c.shape != (m, m):
+        raise ValueError(
+            f"comm_cost must be a scalar or ({m}, {m}) matrix, "
+            f"got shape {c.shape}"
+        )
+    return c.astype(jnp.float32)
+
+
 def combined_scores(s_l, s_d, s_p, *, alpha: float, comm_cost) -> jnp.ndarray:
     """(M,M) overall scores; diagonal (self) masked to −inf.
 
-    comm_cost: scalar or (M, M) per-link cost score c.
+    comm_cost: scalar or (M, M) per-link cost score c (see as_cost_matrix).
     """
-    s = s_p * (alpha * s_l - s_d + comm_cost)
-    m = s.shape[0]
+    m = s_l.shape[0]
+    s = s_p * (alpha * s_l - s_d + as_cost_matrix(comm_cost, m))
     return jnp.where(jnp.eye(m, dtype=bool), NEG, s)
 
 

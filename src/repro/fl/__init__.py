@@ -4,11 +4,13 @@ strategies — FedAvg / FedPer / FedBABU / DFedAvgM / Dis-PFL / DFedPGP /
              PFedDST (+ random-selection ablation), one round fn each
 simulator  — population runner: round loop, personalized eval, history
 """
-from repro.fl.simulator import run_experiment, evaluate_population
-from repro.fl.strategies import STRATEGIES, make_strategy
+from repro.fl.simulator import History, run_experiment, evaluate_population
+from repro.fl.strategies import STRATEGIES, Strategy, make_strategy
 
 __all__ = [
     "STRATEGIES",
+    "Strategy",
+    "History",
     "make_strategy",
     "run_experiment",
     "evaluate_population",

@@ -6,6 +6,14 @@ M clients, pathological partition, SGD(0.1, m=0.9, wd=0.005), batch 128,
 
 Personalized test accuracy = mean over clients of accuracy of client i's
 model on client i's OWN test split (the paper's primary metric).
+
+When the strategy carries a comms fabric (FLConfig.comms, the default),
+every round's exchange is priced on the simulated network: History gains
+per-round bytes and simulated network time plus cumulative
+bytes/time/energy at each eval point. FLConfig(comms=None) restores the
+paper's costless scalar world (all comm fields stay zero/empty). Only
+parameter traffic is priced; PFedDST's probe/header score context is not
+(see repro.comms.transport docstring).
 """
 from __future__ import annotations
 
@@ -16,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comms.transport import payload_bytes_per_client
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.partial_freeze import make_phase_steps
 from repro.fl.strategies import Strategy, make_strategy
@@ -71,6 +80,12 @@ class History:
     accuracy: list = field(default_factory=list)
     train_loss: list = field(default_factory=list)
     wall_s: list = field(default_factory=list)
+    # --- communication budget (repro.comms; zeros when fabric disabled) ----
+    round_bytes: list = field(default_factory=list)       # per round
+    round_net_time_s: list = field(default_factory=list)  # per round
+    comm_bytes: list = field(default_factory=list)        # cumulative @ eval
+    net_time_s: list = field(default_factory=list)        # cumulative @ eval
+    energy_j: list = field(default_factory=list)          # cumulative @ eval
 
     def to_dict(self):
         return {
@@ -78,6 +93,11 @@ class History:
             "accuracy": [float(a) for a in self.accuracy],
             "train_loss": [float(x) for x in self.train_loss],
             "wall_s": [float(w) for w in self.wall_s],
+            "round_bytes": [int(b) for b in self.round_bytes],
+            "round_net_time_s": [float(t) for t in self.round_net_time_s],
+            "comm_bytes": [int(b) for b in self.comm_bytes],
+            "net_time_s": [float(t) for t in self.net_time_s],
+            "energy_j": [float(e) for e in self.energy_j],
         }
 
     def rounds_to_target(self, target: float):
@@ -85,6 +105,13 @@ class History:
         for r, a in zip(self.rounds, self.accuracy):
             if a >= target:
                 return r
+        return None
+
+    def bytes_to_target(self, target: float):
+        """Cumulative comm bytes when `target` accuracy is first reached."""
+        for a, b in zip(self.accuracy, self.comm_bytes):
+            if a >= target:
+                return b
         return None
 
 
@@ -112,12 +139,45 @@ def run_experiment(
     if cfg.family == "cnn":
         train_data["labels"] = data["train_y"]
 
+    # wire size of one message, from the pytree byte counts (utils/pytree)
+    payload = 0
+    if strat.fabric is not None:
+        params0 = strat.params_for_eval(state)
+        tree = params0 if strat.payload_kind == "model" \
+            else split_params(cfg, params0)[0]
+        payload = payload_bytes_per_client(
+            tree, fl.num_clients,
+            bits=fl.comms.payload_bits,
+            overhead_bytes=fl.comms.msg_overhead_bytes,
+        )
+        payload = int(round(payload * strat.payload_fraction))
+
     round_jit = jax.jit(strat.round)
     hist = History()
+    cum_bytes, cum_net_s, cum_energy = 0, 0.0, 0.0
     t0 = time.time()
     for r in range(num_rounds):
         k_r = jax.random.fold_in(k_rounds, r)
         state, metrics = round_jit(state, train_data, k_r)
+
+        if strat.fabric is not None:
+            if strat.comm_pattern == "star":
+                stats = strat.fabric.star_account(
+                    np.asarray(metrics["active"]),
+                    up_bytes=payload, down_bytes=payload,
+                )
+            else:
+                edges = metrics.get("comm_edges", metrics.get("select_mask"))
+                stats = strat.fabric.account(np.asarray(edges), payload)
+            hist.round_bytes.append(stats.total_bytes)
+            hist.round_net_time_s.append(stats.sim_time_s)
+            cum_bytes += stats.total_bytes
+            cum_net_s += stats.sim_time_s
+            cum_energy += stats.energy_j
+        else:
+            hist.round_bytes.append(0)
+            hist.round_net_time_s.append(0.0)
+
         if (r + 1) % eval_every == 0 or r == num_rounds - 1:
             params = strat.params_for_eval(state)
             if strat.needs_head_finetune:
@@ -134,10 +194,15 @@ def run_experiment(
             hist.accuracy.append(float(acc))
             hist.train_loss.append(tl)
             hist.wall_s.append(time.time() - t0)
+            hist.comm_bytes.append(cum_bytes)
+            hist.net_time_s.append(cum_net_s)
+            hist.energy_j.append(cum_energy)
             if verbose:
                 print(
                     f"[{strategy_name:16s}] round {r + 1:4d} "
                     f"acc={float(acc):.4f} loss={tl:.4f} "
+                    f"comm={cum_bytes / 1e6:.2f}MB "
+                    f"net={cum_net_s:.1f}s "
                     f"({time.time() - t0:.0f}s)",
                     flush=True,
                 )

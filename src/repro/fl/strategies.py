@@ -17,8 +17,9 @@ Baselines (paper §III-B):
             federation; extractor trained + averaged. Personalized eval
             fine-tunes a throwaway header copy (simulator does this).
   dfedavgm  [23] decentralized: local SGD-with-momentum then undirected
-            random-gossip averaging with k neighbors (quantization omitted
-            — bandwidth, not accuracy, semantics).
+            random-gossip averaging with k neighbors (quantized payload
+            sizes are modeled by repro.comms, not applied to the values —
+            bandwidth, not accuracy, semantics).
   dispfl    [24] decentralized personalized sparse training — simplified:
             personal magnitude masks (50% sparsity) with RigL-style
             random regrow; masked extractor gossip-averaged where masks
@@ -30,6 +31,13 @@ Baselines (paper §III-B):
             sampling keeps the mixing doubly-stochastic in expectation.)
   pfeddst        the paper's method (core.rounds.pfeddst_round).
   pfeddst_random ablation: same partial-freeze round, random peer choice.
+
+Every strategy additionally carries a repro.comms fabric (built from
+fl.comms): neighbor/peer choice is restricted to the network's reachable
+candidates, availability composes with client sampling, and metrics carry
+the round's communication edges (`comm_edges`/`select_mask`, or `active`
+for the client↔server baselines) so the simulator can account bytes,
+simulated network time, and energy per round.
 """
 from __future__ import annotations
 
@@ -40,6 +48,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.comms.fabric import CommsFabric, make_fabric
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.aggregation import aggregate_extractors, selection_to_weights
 from repro.core.client_state import PopulationState, init_population
@@ -88,16 +97,31 @@ def _local_train(step, params, opt_state, data, key, n_steps, bs):
     return params, opt_state, losses
 
 
-def _gossip_weights(key, m: int, k: int, directed: bool):
-    """Random k-neighbor selection mask (no self)."""
+def _gossip_weights(key, m: int, k: int, directed: bool, cand=None):
+    """Random k-neighbor selection mask (no self). `cand` restricts
+    neighbor sampling to the comms fabric's reachable peers."""
     scores = jax.random.uniform(key, (m, m))
     scores = jnp.where(jnp.eye(m, dtype=bool), -1.0, scores)
+    if cand is not None:
+        scores = jnp.where(cand, scores, -1.0)
     k = min(k, m - 1)
     _, idx = jax.lax.top_k(scores, k)
     mask = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
+    mask = mask & (scores >= 0.0)  # drop −1 picks (fewer than k reachable)
     if not directed:
         mask = mask | mask.T
+        if cand is not None:
+            # re-apply after symmetrization: cand is not symmetric under
+            # staleness (stale peers lose their column only), and |.T must
+            # not resurrect an edge the network excluded
+            mask = mask & cand
     return mask
+
+
+def _net_key(key):
+    """Independent stream for network events (topology/dropout/availability)
+    so adding the fabric leaves the training randomness untouched."""
+    return jax.random.fold_in(key, 0x636F6D)
 
 
 # ---------------------------------------------------------------------------
@@ -111,13 +135,21 @@ class Strategy:
     round: Callable       # (state, data, key) -> (state, metrics)
     params_for_eval: Callable  # (state) -> leading-M params pytree
     needs_head_finetune: bool = False
+    # --- communication budget reporting (repro.comms) ----------------------
+    fabric: CommsFabric | None = None
+    comm_pattern: str = "p2p"      # "p2p" (metrics carry comm_edges) |
+                                   # "star" (client↔server, metrics carry
+                                   # active)
+    payload_kind: str = "extractor"   # "extractor" | "model" per message
+    payload_fraction: float = 1.0     # sparse payloads (DisPFL masks)
 
 
 # ---------------------------------------------------------------------------
 # centralized family (fedavg / fedper / fedbabu)
 # ---------------------------------------------------------------------------
 
-def _make_central(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
+def _make_central(cfg, fl, steps_per_epoch, kind: str,
+                  fabric: CommsFabric | None = None) -> Strategy:
     opt = _opt(fl)
     step = make_full_step(cfg, opt)
     phase = make_phase_steps(cfg, opt)      # fedbabu: extractor-only train
@@ -147,6 +179,9 @@ def _make_central(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
         m = fl.num_clients
         k_act, k_tr = jax.random.split(key)
         active = _active_mask(k_act, m, fl.client_sample_ratio)
+        if fabric is not None:
+            _, avail, _ = fabric.round_masks(_net_key(key))
+            active = active & avail
         params = state["params"]
 
         # fedbabu trains the extractor with the header frozen structurally;
@@ -184,7 +219,8 @@ def _make_central(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
             params = jax.vmap(merge_params)(bcast_e, h)
             new_state = {"params": params, "opt": {"e": opt_e},
                          "round": state["round"] + 1}
-            return new_state, {"train_loss": jnp.mean(losses[-1])}
+            return new_state, {"train_loss": jnp.mean(losses[-1]),
+                               "active": active}
 
         new_params, opt_state, losses = _local_train(
             step, params, state["opt"], data, k_tr, n_steps, fl.batch_size
@@ -213,12 +249,15 @@ def _make_central(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
             params = jax.vmap(merge_params)(bcast, headers)
         new_state = {"params": params, "opt": opt_state,
                      "round": state["round"] + 1}
-        return new_state, {"train_loss": jnp.mean(losses[-1])}
+        return new_state, {"train_loss": jnp.mean(losses[-1]),
+                           "active": active}
 
     return Strategy(
         name=kind, init=init, round=round_fn,
         params_for_eval=lambda s: s["params"],
         needs_head_finetune=(kind == "fedbabu"),
+        fabric=fabric, comm_pattern="star",
+        payload_kind=("model" if kind == "fedavg" else "extractor"),
     )
 
 
@@ -226,7 +265,8 @@ def _make_central(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
 # decentralized gossip family (dfedavgm / dfedpgp / dispfl)
 # ---------------------------------------------------------------------------
 
-def _make_gossip(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
+def _make_gossip(cfg, fl, steps_per_epoch, kind: str,
+                 fabric: CommsFabric | None = None) -> Strategy:
     opt = _opt(fl)
     step = make_full_step(cfg, opt)
     n_steps = fl.epochs_extractor * steps_per_epoch
@@ -255,6 +295,10 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
         m = fl.num_clients
         k_act, k_tr, k_nbr, k_grow = jax.random.split(key, 4)
         active = _active_mask(k_act, m, fl.client_sample_ratio)
+        cand = None
+        if fabric is not None:
+            cand, avail, _ = fabric.round_masks(_net_key(key))
+            active = active & avail
         params = state["params"]
 
         if kind == "dispfl":
@@ -269,7 +313,8 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
         opt_state = _where_tree(active, opt_state, state["opt"])
 
         nbr = _gossip_weights(
-            k_nbr, m, fl.peers_per_round, directed=(kind == "dfedpgp")
+            k_nbr, m, fl.peers_per_round, directed=(kind == "dfedpgp"),
+            cand=cand,
         )
         nbr = nbr & active[:, None]    # only active clients gossip
         weights = selection_to_weights(nbr, include_self=True)
@@ -279,7 +324,8 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
             mixed = _where_tree(active, mixed, new_params)
             new_state = {"params": mixed, "opt": opt_state,
                          "round": state["round"] + 1}
-            return new_state, {"train_loss": jnp.mean(losses[-1])}
+            return new_state, {"train_loss": jnp.mean(losses[-1]),
+                               "active": active, "comm_edges": nbr}
 
         # partial personalization: header personal, extractor gossiped
         e, h = split_params(cfg, new_params)
@@ -313,11 +359,15 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
             new_state["params"] = jax.tree_util.tree_map(
                 lambda p, mk: p * mk.astype(p.dtype), mixed, new_mask
             )
-        return new_state, {"train_loss": jnp.mean(losses[-1])}
+        return new_state, {"train_loss": jnp.mean(losses[-1]),
+                           "active": active, "comm_edges": nbr}
 
     return Strategy(
         name=kind, init=init, round=round_fn,
         params_for_eval=lambda s: s["params"],
+        fabric=fabric,
+        payload_kind=("model" if kind == "dfedavgm" else "extractor"),
+        payload_fraction=(1.0 - sparsity if kind == "dispfl" else 1.0),
     )
 
 
@@ -325,7 +375,8 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str) -> Strategy:
 # PFedDST (+ random-selection ablation)
 # ---------------------------------------------------------------------------
 
-def _make_pfeddst(cfg, fl, steps_per_epoch, random_select: bool) -> Strategy:
+def _make_pfeddst(cfg, fl, steps_per_epoch, random_select: bool,
+                  fabric: CommsFabric | None = None) -> Strategy:
     opt = _opt(fl)
     steps = make_phase_steps(cfg, opt)
     import dataclasses
@@ -339,16 +390,26 @@ def _make_pfeddst(cfg, fl, steps_per_epoch, random_select: bool) -> Strategy:
         return init_population(cfg, key, fl.num_clients, opt, opt)
 
     def round_fn(state: PopulationState, data, key):
+        cand = cost = avail = None
+        if fabric is not None:
+            # score-driven dynamic graphs steer toward the peers the loss
+            # array l marked informative last round (Algorithm 1 context)
+            cand, avail, _ = fabric.round_masks(
+                _net_key(key), affinity=state.loss_matrix
+            )
+            cost = fabric.cost
         return pfeddst_round(
             cfg, fl_used, steps, state, data, key,
             steps_per_epoch=steps_per_epoch, probe_size=fl.probe_size,
+            candidate_mask=cand, comm_cost=cost, available=avail,
         )
 
     def eval_params(state: PopulationState):
         return jax.vmap(merge_params)(state.extractor, state.header)
 
     return Strategy(
-        name=name, init=init, round=round_fn, params_for_eval=eval_params
+        name=name, init=init, round=round_fn, params_for_eval=eval_params,
+        fabric=fabric,
     )
 
 
@@ -364,12 +425,16 @@ STRATEGIES = (
 
 def make_strategy(name: str, cfg: ModelConfig, fl: FLConfig,
                   steps_per_epoch: int = 2) -> Strategy:
+    # fl.comms = None → legacy scalar-cost path (no fabric, no masking)
+    fabric = make_fabric(fl.comms, fl.num_clients, cost_scale=fl.comm_cost)
     if name in ("fedavg", "fedper", "fedbabu"):
-        return _make_central(cfg, fl, steps_per_epoch, name)
+        return _make_central(cfg, fl, steps_per_epoch, name, fabric)
     if name in ("dfedavgm", "dfedpgp", "dispfl"):
-        return _make_gossip(cfg, fl, steps_per_epoch, name)
+        return _make_gossip(cfg, fl, steps_per_epoch, name, fabric)
     if name == "pfeddst":
-        return _make_pfeddst(cfg, fl, steps_per_epoch, random_select=False)
+        return _make_pfeddst(cfg, fl, steps_per_epoch, random_select=False,
+                             fabric=fabric)
     if name == "pfeddst_random":
-        return _make_pfeddst(cfg, fl, steps_per_epoch, random_select=True)
+        return _make_pfeddst(cfg, fl, steps_per_epoch, random_select=True,
+                             fabric=fabric)
     raise KeyError(f"unknown strategy {name!r}; available: {STRATEGIES}")

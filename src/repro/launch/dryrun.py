@@ -196,6 +196,8 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool, verbose=True):
             print(f"--- {arch} × {shape_name} × {mesh_name} ---")
             print(mem)
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):   # newer jax returns [dict]
+                cost = cost[0] if cost else {}
             print({k: v for k, v in (cost or {}).items()
                    if k in ("flops", "bytes accessed")})
         rep = report_from_compiled(

@@ -72,6 +72,15 @@ def _shape_bytes(type_str: str) -> int:
     return total
 
 
+_OPERAND_SPLIT_RE = re.compile(r",\s*(?![^()\[\]]*[\)\]])")
+
+
+def _split_operands(args: str) -> list[str]:
+    """Split an operand list on top-level commas only (shape dims like
+    f32[128,256] contain commas that a naive split would break on)."""
+    return [a.strip() for a in _OPERAND_SPLIT_RE.split(args)]
+
+
 def _shape_elems_dims(type_str: str):
     """(elem_count, dims list) of the FIRST array shape in the string."""
     m = _SHAPE_RE.search(type_str)
@@ -142,8 +151,7 @@ class HloAnalyzer:
 
     def _operand_bytes(self, args: str, tab: dict) -> int:
         total = 0
-        for arg in re.split(r",\s*(?![^()\[\]]*[\)\]])", args):
-            arg = arg.strip()
+        for arg in _split_operands(args):
             if not arg or arg.startswith("/*"):
                 continue
             if "[" in arg and re.search(r"[a-z][a-z0-9]*\[", arg):
@@ -187,7 +195,7 @@ class HloAnalyzer:
 
             if op == "dot":
                 out_elems, _ = _shape_elems_dims(rtype)
-                lhs = args.split(",")[0].strip()
+                lhs = _split_operands(args)[0]
                 lhs_type = lhs if "[" in lhs else tab.get(lhs.lstrip("%"), "")
                 _, lhs_dims = _shape_elems_dims(lhs_type)
                 cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
@@ -205,7 +213,7 @@ class HloAnalyzer:
 
             if op == "convolution":
                 out_elems, _ = _shape_elems_dims(rtype)
-                parts = [a.strip() for a in args.split(",")]
+                parts = _split_operands(args)
                 rhs = parts[1] if len(parts) > 1 else ""
                 rhs_type = rhs if "[" in rhs else tab.get(rhs.lstrip("%"), "")
                 rhs_elems, rhs_dims = _shape_elems_dims(rhs_type)
@@ -269,8 +277,7 @@ class HloAnalyzer:
             # slice-granular ops: XLA updates/reads these in place on TPU —
             # count the moved slice, not the full buffer
             if op == "dynamic-update-slice":
-                parts = [a.strip() for a in re.split(
-                    r",\s*(?![^()\[\]]*[\)\]])", args)]
+                parts = _split_operands(args)
                 upd = parts[1] if len(parts) > 1 else ""
                 upd_type = upd if "[" in upd else tab.get(upd.lstrip("%"), "")
                 if not in_fusion:

@@ -1,0 +1,351 @@
+"""repro.comms — topology/link-cost/transport/events/fabric invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms import (
+    CommsFabric,
+    LinkModel,
+    cost_scores,
+    dynamic_topk,
+    make_fabric,
+    make_link_model,
+    make_topology,
+    payload_bytes_per_client,
+    simulate_exchange,
+    star_exchange,
+)
+from repro.comms import events as ev
+from repro.configs.base import CommsConfig, FLConfig
+from repro.core.selection import NEG, as_cost_matrix, combined_scores, \
+    select_peers
+from repro.utils.pytree import tree_bytes
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # degrade to a fixed-grid check, don't skip
+    HAS_HYPOTHESIS = False
+
+M = 12
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+STATIC_TOPOS = ["full", "ring", "torus", "erdos_renyi", "small_world"]
+
+
+@pytest.mark.parametrize("name", STATIC_TOPOS)
+def test_static_topologies_symmetric_no_self_loops(name):
+    adj = make_topology(name, M, cfg=CommsConfig(topology=name), seed=3)
+    assert adj.shape == (M, M) and adj.dtype == bool
+    assert (adj == adj.T).all(), "adjacency must be undirected"
+    assert not adj.diagonal().any(), "no self loops"
+    assert adj.any(axis=1).all(), "no isolated client"
+
+
+def test_expected_degrees():
+    assert (make_topology("full", M).sum(1) == M - 1).all()
+    assert (make_topology("ring", M, cfg=CommsConfig(ring_hops=2)).sum(1)
+            == 4).all()
+    assert (make_topology("torus", M).sum(1) == 4).all()   # 12 = 3×4 grid
+    # ER: mean degree concentrates around p·(M−1) on a big graph
+    big = 200
+    adj = make_topology("erdos_renyi", big,
+                        cfg=CommsConfig(er_p=0.3), seed=0)
+    assert abs(adj.sum() / big - 0.3 * (big - 1)) < 5.0
+    # Watts–Strogatz rewiring preserves the edge count of the k-lattice
+    ws = make_topology("small_world", M,
+                       cfg=CommsConfig(ws_k=4, ws_beta=0.5), seed=1)
+    assert ws.sum() == 4 * M
+
+
+def test_static_topology_reproducible():
+    a = make_topology("erdos_renyi", M, cfg=CommsConfig(), seed=5)
+    b = make_topology("erdos_renyi", M, cfg=CommsConfig(), seed=5)
+    assert (a == b).all()
+
+
+def test_dynamic_topk_properties():
+    key = jax.random.PRNGKey(0)
+    affinity = jax.random.normal(jax.random.fold_in(key, 1), (M, M))
+    adj = np.asarray(dynamic_topk(affinity, 3, key, explore=1))
+    assert (adj == adj.T).all()
+    assert not adj.diagonal().any()
+    assert (adj.sum(1) >= 3).all()          # top-3 plus symmetrized extras
+    # the top-affinity peer of every client is connected
+    a = np.asarray(jnp.where(jnp.eye(M, dtype=bool), -jnp.inf, affinity))
+    assert all(adj[i, a[i].argmax()] for i in range(M))
+
+
+# ---------------------------------------------------------------------------
+# link cost → Eq. 9 c term
+# ---------------------------------------------------------------------------
+
+def test_uniform_cost_recovers_scalar():
+    link = make_link_model(CommsConfig(), M)
+    c = cost_scores(link, scale=1.7)
+    off = ~np.eye(M, dtype=bool)
+    np.testing.assert_allclose(c[off], 1.7, rtol=1e-6)
+    assert (c.diagonal() == 0).all()
+
+
+def test_hetero_cost_bounded_and_symmetric():
+    link = make_link_model(CommsConfig(link_model="hetero"), M)
+    c = cost_scores(link, scale=1.0)
+    off = ~np.eye(M, dtype=bool)
+    assert (c[off] > 0).all() and (c[off] <= 1.0 + 1e-6).all()
+    np.testing.assert_allclose(c, c.T, rtol=1e-6)
+    assert c[off].min() < 1.0 - 1e-3       # spread actually differentiates
+
+
+def test_cost_matrix_changes_selection():
+    """A slow enough link must flip the top-k choice (c enters Eq. 9)."""
+    m = 6
+    key = jax.random.PRNGKey(0)
+    s_l = jax.random.uniform(key, (m, m)) * 0.1
+    s_d = jnp.zeros((m, m))
+    s_p = jnp.ones((m, m))
+    flat = combined_scores(s_l, s_d, s_p, alpha=1.0, comm_cost=1.0)
+    pick_flat = select_peers(flat, k=2)
+    # penalize exactly the links client 0 picked under equal cost
+    c = np.ones((m, m), np.float32)
+    c[0, np.asarray(pick_flat)[0]] = -10.0
+    penal = combined_scores(s_l, s_d, s_p, alpha=1.0,
+                            comm_cost=jnp.asarray(c))
+    pick_penal = select_peers(penal, k=2)
+    assert not bool((pick_penal[0] & pick_flat[0]).any())
+    # rows with unchanged costs keep their selection
+    assert bool((pick_penal[1:] == pick_flat[1:]).all())
+
+
+def test_geometric_links_triangle_consistency():
+    link = make_link_model(CommsConfig(link_model="geometric"), M)
+    off = ~np.eye(M, dtype=bool)
+    assert (link.bandwidth[off] > 0).all()
+    assert (link.latency_s[off] > 0).all()
+    np.testing.assert_allclose(link.bandwidth, link.bandwidth.T)
+
+
+# ---------------------------------------------------------------------------
+# scalar-vs-matrix comm_cost (satellite: validate/broadcast once)
+# ---------------------------------------------------------------------------
+
+def _check_scalar_matrix_agree(m, c, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    s_l = jax.random.uniform(ks[0], (m, m))
+    s_d = jax.random.uniform(ks[1], (m, m), minval=-1.0, maxval=1.0)
+    s_p = jax.random.uniform(ks[2], (m, m))
+    a = combined_scores(s_l, s_d, s_p, alpha=0.7, comm_cost=c)
+    b = combined_scores(s_l, s_d, s_p, alpha=0.7,
+                        comm_cost=jnp.full((m, m), c))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(2, 8),
+        c=st.floats(-3.0, 3.0, allow_nan=False),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_scalar_and_matrix_comm_cost_agree(m, c, seed):
+        _check_scalar_matrix_agree(m, c, seed)
+else:
+    @pytest.mark.parametrize("m,c,seed", [
+        (2, -3.0, 0), (3, 0.0, 1), (5, 1.0, 2), (8, 2.5, 3), (6, -0.7, 4),
+    ])
+    def test_scalar_and_matrix_comm_cost_agree(m, c, seed):
+        _check_scalar_matrix_agree(m, c, seed)
+
+
+def test_as_cost_matrix_validation():
+    assert as_cost_matrix(2.0, 4).shape == (4, 4)
+    assert as_cost_matrix(jnp.ones((4, 4)), 4).shape == (4, 4)
+    with pytest.raises(ValueError):
+        as_cost_matrix(jnp.ones((3, 4)), 4)
+    with pytest.raises(ValueError):
+        as_cost_matrix(jnp.ones((5,)), 5)
+
+
+# ---------------------------------------------------------------------------
+# transport — exact byte accounting
+# ---------------------------------------------------------------------------
+
+def test_payload_matches_pytree_bytes_exactly(tiny_cnn):
+    """One message = one client's extractor, byte-for-byte (utils.pytree)."""
+    from repro.core.client_state import init_population
+    from repro.optim.sgd import sgd
+
+    opt = sgd(0.1)
+    state = init_population(tiny_cnn, jax.random.PRNGKey(0), 4, opt, opt)
+    payload = payload_bytes_per_client(state.extractor, 4)
+    one = jax.tree_util.tree_map(lambda x: x[0], state.extractor)
+    assert payload == tree_bytes(one)
+
+    link = make_link_model(CommsConfig(), 4)
+    edges = np.zeros((4, 4), bool)
+    edges[0, 1] = edges[0, 2] = edges[3, 1] = True
+    stats = simulate_exchange(link, edges, payload)
+    assert stats.total_bytes == 3 * payload
+    assert stats.messages == 3
+    assert stats.bytes_recv.tolist() == [2 * payload, 0, 0, payload]
+    assert stats.bytes_sent.tolist() == [0, 2 * payload, payload, 0]
+    assert stats.bytes_sent.sum() == stats.bytes_recv.sum()
+
+
+def test_quantized_payload_and_overhead(tiny_cnn):
+    from repro.core.client_state import init_population
+    from repro.optim.sgd import sgd
+    from repro.utils.pytree import tree_size
+
+    opt = sgd(0.1)
+    state = init_population(tiny_cnn, jax.random.PRNGKey(0), 4, opt, opt)
+    n_params = tree_size(state.extractor) // 4
+    p8 = payload_bytes_per_client(state.extractor, 4, bits=8)
+    assert p8 == n_params                      # 8-bit → 1 byte/param
+    p1 = payload_bytes_per_client(state.extractor, 4, bits=1)
+    assert p1 == -(-n_params // 8)             # ceil
+    p_oh = payload_bytes_per_client(state.extractor, 4, overhead_bytes=64)
+    assert p_oh == payload_bytes_per_client(state.extractor, 4) + 64
+
+
+def test_exchange_time_receiver_serialized():
+    """2 inbound transfers on one NIC take twice one transfer's time."""
+    link = make_link_model(CommsConfig(latency_ms=0.0), 4)
+    one = np.zeros((4, 4), bool)
+    one[0, 1] = True
+    two = one.copy()
+    two[0, 2] = True
+    t1 = simulate_exchange(link, one, 10_000).sim_time_s
+    t2 = simulate_exchange(link, two, 10_000).sim_time_s
+    assert t2 == pytest.approx(2 * t1)
+
+
+def test_star_exchange_accounting():
+    link = make_link_model(CommsConfig(), 6)
+    active = np.array([1, 0, 1, 1, 0, 0], bool)
+    stats = star_exchange(link, active, up_bytes=100, down_bytes=50)
+    assert stats.messages == 6                 # 3 active × (up + down)
+    assert stats.total_bytes == 3 * 100
+    assert stats.bytes_recv.sum() == 3 * 50
+    assert stats.sim_time_s > 0
+    empty = star_exchange(link, np.zeros(6, bool), up_bytes=1, down_bytes=1)
+    assert empty.total_bytes == 0 and empty.sim_time_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# events
+# ---------------------------------------------------------------------------
+
+def test_link_dropout_symmetric_and_rate():
+    m = 60
+    adj = jnp.asarray(make_topology("full", m))
+    out = np.asarray(ev.drop_links(jax.random.PRNGKey(0), adj, 0.3))
+    assert (out == out.T).all()
+    assert not out.diagonal().any()
+    kept = out.sum() / adj.sum()
+    assert 0.55 < kept < 0.85                  # ≈ 1 − p
+    same = ev.drop_links(jax.random.PRNGKey(0), adj, 0.0)
+    assert (np.asarray(same) == np.asarray(adj)).all()
+
+
+def test_availability_and_staleness():
+    k = jax.random.PRNGKey(1)
+    assert np.asarray(ev.availability_mask(k, 8, 1.0)).all()
+    av = np.asarray(ev.availability_mask(k, 2000, 0.25))
+    assert 0.15 < av.mean() < 0.35
+    st_ = np.asarray(ev.staleness_rounds(k, 2000, 0.5, 3))
+    assert st_.min() >= 0 and st_.max() <= 3
+    assert 0.35 < (st_ > 0).mean() < 0.65
+    assert not ev.staleness_rounds(k, 8, 0.0, 3).any()
+
+
+def test_apply_events_composition():
+    cfg = CommsConfig(p_link_drop=0.2, availability=0.5, p_stale=0.3)
+    adj = jnp.asarray(make_topology("full", 40))
+    cand, avail, stale = ev.apply_events(jax.random.PRNGKey(0), adj, cfg)
+    cand, avail, stale = map(np.asarray, (cand, avail, stale))
+    # offline clients appear in no candidate row or column
+    assert not cand[~avail].any() and not cand[:, ~avail].any()
+    # stale peers are not candidates for anyone
+    assert not cand[:, stale > 0].any()
+
+
+# ---------------------------------------------------------------------------
+# fabric + simulator integration
+# ---------------------------------------------------------------------------
+
+def test_default_fabric_is_papers_equal_cost_world():
+    fab = make_fabric(CommsConfig(), M, cost_scale=1.0)
+    assert isinstance(fab, CommsFabric)
+    cand, avail, stale = fab.round_masks(jax.random.PRNGKey(0))
+    assert (np.asarray(cand) == ~np.eye(M, dtype=bool)).all()
+    assert np.asarray(avail).all() and not np.asarray(stale).any()
+    off = ~np.eye(M, dtype=bool)
+    np.testing.assert_allclose(np.asarray(fab.cost)[off], 1.0, rtol=1e-6)
+    assert make_fabric(None, M) is None        # scalar fallback
+
+
+def test_fabric_round_masks_jittable():
+    fab = make_fabric(CommsConfig(topology="dynamic", p_link_drop=0.1), M)
+    aff = jnp.zeros((M, M))
+    f = jax.jit(lambda k: fab.round_masks(k, affinity=aff))
+    cand, avail, stale = f(jax.random.PRNGKey(0))
+    assert cand.shape == (M, M) and not np.asarray(cand).diagonal().any()
+
+
+def test_gossip_symmetrization_respects_candidates():
+    """mask | mask.T must not resurrect edges into a stale peer's column
+    (cand is asymmetric under staleness)."""
+    from repro.fl.strategies import _gossip_weights
+
+    m = 8
+    cand = ~np.eye(m, dtype=bool)
+    cand[:, 3] = False               # peer 3 is stale: nobody may pull it
+    cand = jnp.asarray(cand)
+    for seed in range(5):
+        nbr = np.asarray(_gossip_weights(
+            jax.random.PRNGKey(seed), m, 3, directed=False, cand=cand
+        ))
+        assert not nbr[:, 3].any()       # nobody pulls the stale peer
+        assert nbr[3].any()              # the stale peer may still pull
+        assert not nbr.diagonal().any()
+
+
+def test_simulator_reports_comm_budget(tiny_cnn):
+    from repro.data.synthetic import client_datasets_cifar
+    from repro.fl import run_experiment
+
+    fl = FLConfig(
+        num_clients=4, peers_per_round=2, batch_size=8,
+        client_sample_ratio=1.0, epochs_extractor=1, epochs_header=1,
+        probe_size=4,
+        comms=CommsConfig(topology="ring"),
+    )
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(0), 4, classes_per_client=2,
+        samples_per_class=10, image_size=8,
+    )
+    hist = run_experiment(
+        "pfeddst", tiny_cnn, fl, data, num_rounds=2, eval_every=1,
+        steps_per_epoch=1, verbose=False,
+    )
+    assert len(hist.round_bytes) == 2
+    assert all(b > 0 for b in hist.round_bytes)
+    assert all(t > 0 for t in hist.round_net_time_s)
+    assert hist.comm_bytes[-1] == sum(hist.round_bytes)
+    assert hist.net_time_s[-1] == pytest.approx(sum(hist.round_net_time_s))
+    # ring, k=2, all active: every client pulls its ≤2 ring neighbors —
+    # bytes are an exact multiple of the per-client extractor payload
+    from repro.core.client_state import init_population
+    from repro.optim.sgd import sgd
+
+    opt = sgd(0.1)
+    pop = init_population(tiny_cnn, jax.random.PRNGKey(0), 4, opt, opt)
+    payload = payload_bytes_per_client(pop.extractor, 4)
+    assert all(b % payload == 0 for b in hist.round_bytes)
