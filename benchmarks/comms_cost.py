@@ -14,7 +14,6 @@ communication budget to reach a target accuracy — the DisPFL-style
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 
@@ -95,7 +94,7 @@ def main(argv=None):
               f"{d['energy_j'][-1]:>9.4f} "
               f"{btt / 1e6 if btt is not None else float('nan'):>12.2f}")
 
-    os.makedirs(RESULTS, exist_ok=True)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump({"args": vars(args), "results": rows}, f, indent=1)
     print(f"\nwrote {args.out}")

@@ -17,6 +17,7 @@ the selection semantics until the network is made non-trivial.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -62,8 +63,6 @@ class CommsFabric:
     def round_masks(self, key, *, affinity=None):
         """(candidate_mask (M,M), available (M,), staleness (M,)) — pure
         jax; safe inside a jitted round."""
-        import jax
-
         k_adj, k_ev = jax.random.split(key)
         adj = self.adjacency(k_adj, affinity)
         return events_mod.apply_events(k_ev, adj, self.cfg)

@@ -65,10 +65,6 @@ def cost_scores(link: LinkModel, scale: float = 1.0) -> np.ndarray:
 # generators
 # ---------------------------------------------------------------------------
 
-def _sym(x: np.ndarray) -> np.ndarray:
-    return np.triu(x, 1) + np.triu(x, 1).T + np.diag(np.diag(x))
-
-
 def uniform_links(m: int, *, bandwidth_bps: float, latency_s: float,
                   energy_j_per_byte: float) -> LinkModel:
     return LinkModel(

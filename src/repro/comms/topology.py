@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.selection import select_peers
+
 TOPOLOGIES = (
     "full", "ring", "torus", "erdos_renyi", "small_world", "dynamic",
 )
@@ -107,13 +109,12 @@ def dynamic_topk(
     k_tie, k_exp = jax.random.split(key)
     eye = jnp.eye(m, dtype=bool)
     noise = jax.random.uniform(k_tie, (m, m)) * 1e-6
-    a = jnp.where(eye, -jnp.inf, affinity + noise)
-    _, idx = jax.lax.top_k(a, min(degree, m - 1))
-    adj = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
+    adj = select_peers(affinity + noise, k=degree, candidate_mask=~eye)
     if explore > 0:
-        r = jnp.where(eye, -jnp.inf, jax.random.uniform(k_exp, (m, m)))
-        _, ridx = jax.lax.top_k(r, min(explore, m - 1))
-        adj = adj | jax.nn.one_hot(ridx, m, dtype=bool).any(axis=-2)
+        adj = adj | select_peers(
+            jax.random.uniform(k_exp, (m, m)), k=explore,
+            candidate_mask=~eye,
+        )
     adj = adj | adj.T
     return adj & ~eye
 

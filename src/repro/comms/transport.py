@@ -42,15 +42,20 @@ class TrafficStats:
     messages: int
     sim_time_s: float        # simulated wall-clock of the exchange
     energy_j: float
+    # bytes moved over the network, each payload counted once. Not
+    # derivable from bytes_sent alone: gossip transfers appear in both a
+    # sender's sent and a receiver's recv, while star downlinks appear
+    # only in clients' recv (the server is not a client).
+    wire_bytes: int = 0
 
     @property
     def total_bytes(self) -> int:
-        return int(self.bytes_sent.sum())
+        return self.wire_bytes
 
     @staticmethod
     def zero(m: int) -> "TrafficStats":
         z = np.zeros((m,), np.int64)
-        return TrafficStats(z, z.copy(), 0, 0.0, 0.0)
+        return TrafficStats(z, z.copy(), 0, 0.0, 0.0, 0)
 
 
 def payload_bytes_per_client(stacked_tree, num_clients: int, *,
@@ -86,12 +91,21 @@ def simulate_exchange(link: LinkModel, edges: np.ndarray,
     return TrafficStats(
         bytes_sent=sent, bytes_recv=recv, messages=int(edges.sum()),
         sim_time_s=sim_time, energy_j=energy,
+        wire_bytes=int(edges.sum()) * payload_bytes,
     )
 
 
 def star_exchange(link: LinkModel, active: np.ndarray, *,
                   up_bytes: int, down_bytes: int) -> TrafficStats:
-    """Client↔server round for the centralized baselines."""
+    """Client↔server round for the centralized baselines.
+
+    Only ACTIVE clients are billed (one download + one upload each), even
+    though the simulator broadcasts the average into every client's row:
+    those rows represent the server-held global model, not a transmission
+    — a client pays the download in each round it participates, exactly
+    the real protocol. Evaluating the global model on all clients' test
+    sets is a measurement construct and moves no bytes.
+    """
     active = np.asarray(active, dtype=bool)
     m = link.num_clients
     sent = np.where(active, up_bytes, 0).astype(np.int64)
@@ -106,4 +120,5 @@ def star_exchange(link: LinkModel, active: np.ndarray, *,
         bytes_sent=sent, bytes_recv=recv, messages=2 * n,
         sim_time_s=t_up + t_down,
         energy_j=n * (up_bytes + down_bytes) * e_scale,
+        wire_bytes=n * (up_bytes + down_bytes),
     )

@@ -216,7 +216,8 @@ class CommsConfig:
     p_link_drop: float = 0.0    # per-round iid symmetric edge dropout
     availability: float = 1.0   # per-round per-client online probability
     p_stale: float = 0.0        # prob. a client's update misses the deadline
-    max_staleness: int = 3      # staleness horizon (rounds), reporting only
+    max_staleness: int = 3      # staleness horizon (rounds); the sampled
+                                # lag is reported as History.round_stale_lag
 
     # --- payload ------------------------------------------------------------
     payload_bits: int = 0       # quantized bits/param (0 → native dtype)

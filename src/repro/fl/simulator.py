@@ -83,6 +83,7 @@ class History:
     # --- communication budget (repro.comms; zeros when fabric disabled) ----
     round_bytes: list = field(default_factory=list)       # per round
     round_net_time_s: list = field(default_factory=list)  # per round
+    round_stale_lag: list = field(default_factory=list)   # mean rounds/round
     comm_bytes: list = field(default_factory=list)        # cumulative @ eval
     net_time_s: list = field(default_factory=list)        # cumulative @ eval
     energy_j: list = field(default_factory=list)          # cumulative @ eval
@@ -95,6 +96,7 @@ class History:
             "wall_s": [float(w) for w in self.wall_s],
             "round_bytes": [int(b) for b in self.round_bytes],
             "round_net_time_s": [float(t) for t in self.round_net_time_s],
+            "round_stale_lag": [float(s) for s in self.round_stale_lag],
             "comm_bytes": [int(b) for b in self.comm_bytes],
             "net_time_s": [float(t) for t in self.net_time_s],
             "energy_j": [float(e) for e in self.energy_j],
@@ -168,15 +170,27 @@ def run_experiment(
                 )
             else:
                 edges = metrics.get("comm_edges", metrics.get("select_mask"))
+                if edges is None:
+                    raise KeyError(
+                        f"strategy {strat.name!r} has comm_pattern "
+                        f"{strat.comm_pattern!r} but emitted neither "
+                        "'comm_edges' nor 'select_mask' in its round metrics"
+                    )
                 stats = strat.fabric.account(np.asarray(edges), payload)
             hist.round_bytes.append(stats.total_bytes)
             hist.round_net_time_s.append(stats.sim_time_s)
+            stale = metrics.get("stale")
+            hist.round_stale_lag.append(
+                float(np.mean(np.asarray(stale))) if stale is not None
+                else 0.0
+            )
             cum_bytes += stats.total_bytes
             cum_net_s += stats.sim_time_s
             cum_energy += stats.energy_j
         else:
             hist.round_bytes.append(0)
             hist.round_net_time_s.append(0.0)
+            hist.round_stale_lag.append(0.0)
 
         if (r + 1) % eval_every == 0 or r == num_rounds - 1:
             params = strat.params_for_eval(state)

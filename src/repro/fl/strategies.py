@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from repro.comms.fabric import CommsFabric, make_fabric
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.aggregation import aggregate_extractors, selection_to_weights
+from repro.core.selection import select_peers
 from repro.core.client_state import PopulationState, init_population
 from repro.core.partial_freeze import make_full_step, make_phase_steps
 from repro.core.rounds import pfeddst_round
@@ -82,6 +83,15 @@ def _where_tree(mask_m, new, old):
     return jax.tree_util.tree_map(sel, new, old)
 
 
+def _keep_if_none_active(active, new, old):
+    """With availability < 1 every sampled client may be offline; keeping
+    `old` stops the all-zero average from being broadcast in that round."""
+    any_active = jnp.any(active)
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(any_active, n, o), new, old
+    )
+
+
 def _local_train(step, params, opt_state, data, key, n_steps, bs):
     """n_steps of vmapped full-model SGD with fresh client batches."""
 
@@ -100,21 +110,16 @@ def _local_train(step, params, opt_state, data, key, n_steps, bs):
 def _gossip_weights(key, m: int, k: int, directed: bool, cand=None):
     """Random k-neighbor selection mask (no self). `cand` restricts
     neighbor sampling to the comms fabric's reachable peers."""
-    scores = jax.random.uniform(key, (m, m))
-    scores = jnp.where(jnp.eye(m, dtype=bool), -1.0, scores)
-    if cand is not None:
-        scores = jnp.where(cand, scores, -1.0)
-    k = min(k, m - 1)
-    _, idx = jax.lax.top_k(scores, k)
-    mask = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
-    mask = mask & (scores >= 0.0)  # drop −1 picks (fewer than k reachable)
+    no_self = ~jnp.eye(m, dtype=bool)
+    cand = no_self if cand is None else cand & no_self
+    mask = select_peers(
+        jax.random.uniform(key, (m, m)), k=k, candidate_mask=cand
+    )
     if not directed:
-        mask = mask | mask.T
-        if cand is not None:
-            # re-apply after symmetrization: cand is not symmetric under
-            # staleness (stale peers lose their column only), and |.T must
-            # not resurrect an edge the network excluded
-            mask = mask & cand
+        # re-apply cand after symmetrization: it is not symmetric under
+        # staleness (stale peers lose their column only), and |.T must
+        # not resurrect an edge the network excluded
+        mask = (mask | mask.T) & cand
     return mask
 
 
@@ -179,8 +184,9 @@ def _make_central(cfg, fl, steps_per_epoch, kind: str,
         m = fl.num_clients
         k_act, k_tr = jax.random.split(key)
         active = _active_mask(k_act, m, fl.client_sample_ratio)
+        stale = jnp.zeros((m,), jnp.int32)
         if fabric is not None:
-            _, avail, _ = fabric.round_masks(_net_key(key))
+            _, avail, stale = fabric.round_masks(_net_key(key))
             active = active & avail
         params = state["params"]
 
@@ -204,6 +210,7 @@ def _make_central(cfg, fl, steps_per_epoch, kind: str,
                 body, (e, opt_e), jax.random.split(k_tr, n_steps)
             )
             new_e = _where_tree(active, new_e, e)
+            opt_e = _where_tree(active, opt_e, state["opt"]["e"])
             # central average of active extractors
             w = active.astype(jnp.float32)
             w = w / jnp.maximum(jnp.sum(w), 1.0)
@@ -217,10 +224,11 @@ def _make_central(cfg, fl, steps_per_epoch, kind: str,
                 lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), avg_e
             )
             params = jax.vmap(merge_params)(bcast_e, h)
+            params = _keep_if_none_active(active, params, state["params"])
             new_state = {"params": params, "opt": {"e": opt_e},
                          "round": state["round"] + 1}
             return new_state, {"train_loss": jnp.mean(losses[-1]),
-                               "active": active}
+                               "active": active, "stale": stale}
 
         new_params, opt_state, losses = _local_train(
             step, params, state["opt"], data, k_tr, n_steps, fl.batch_size
@@ -247,10 +255,11 @@ def _make_central(cfg, fl, steps_per_epoch, kind: str,
             params = bcast
         else:
             params = jax.vmap(merge_params)(bcast, headers)
+        params = _keep_if_none_active(active, params, state["params"])
         new_state = {"params": params, "opt": opt_state,
                      "round": state["round"] + 1}
         return new_state, {"train_loss": jnp.mean(losses[-1]),
-                           "active": active}
+                           "active": active, "stale": stale}
 
     return Strategy(
         name=kind, init=init, round=round_fn,
@@ -296,8 +305,9 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str,
         k_act, k_tr, k_nbr, k_grow = jax.random.split(key, 4)
         active = _active_mask(k_act, m, fl.client_sample_ratio)
         cand = None
+        stale = jnp.zeros((m,), jnp.int32)
         if fabric is not None:
-            cand, avail, _ = fabric.round_masks(_net_key(key))
+            cand, avail, stale = fabric.round_masks(_net_key(key))
             active = active & avail
         params = state["params"]
 
@@ -325,7 +335,8 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str,
             new_state = {"params": mixed, "opt": opt_state,
                          "round": state["round"] + 1}
             return new_state, {"train_loss": jnp.mean(losses[-1]),
-                               "active": active, "comm_edges": nbr}
+                               "active": active, "comm_edges": nbr,
+                               "stale": stale}
 
         # partial personalization: header personal, extractor gossiped
         e, h = split_params(cfg, new_params)
@@ -360,7 +371,8 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str,
                 lambda p, mk: p * mk.astype(p.dtype), mixed, new_mask
             )
         return new_state, {"train_loss": jnp.mean(losses[-1]),
-                           "active": active, "comm_edges": nbr}
+                           "active": active, "comm_edges": nbr,
+                           "stale": stale}
 
     return Strategy(
         name=kind, init=init, round=round_fn,
@@ -391,18 +403,20 @@ def _make_pfeddst(cfg, fl, steps_per_epoch, random_select: bool,
 
     def round_fn(state: PopulationState, data, key):
         cand = cost = avail = None
+        stale = jnp.zeros((fl.num_clients,), jnp.int32)
         if fabric is not None:
             # score-driven dynamic graphs steer toward the peers the loss
             # array l marked informative last round (Algorithm 1 context)
-            cand, avail, _ = fabric.round_masks(
+            cand, avail, stale = fabric.round_masks(
                 _net_key(key), affinity=state.loss_matrix
             )
             cost = fabric.cost
-        return pfeddst_round(
+        new_state, metrics = pfeddst_round(
             cfg, fl_used, steps, state, data, key,
             steps_per_epoch=steps_per_epoch, probe_size=fl.probe_size,
             candidate_mask=cand, comm_cost=cost, available=avail,
         )
+        return new_state, {**metrics, "stale": stale}
 
     def eval_params(state: PopulationState):
         return jax.vmap(merge_params)(state.extractor, state.header)

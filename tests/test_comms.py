@@ -231,7 +231,10 @@ def test_star_exchange_accounting():
     active = np.array([1, 0, 1, 1, 0, 0], bool)
     stats = star_exchange(link, active, up_bytes=100, down_bytes=50)
     assert stats.messages == 6                 # 3 active × (up + down)
-    assert stats.total_bytes == 3 * 100
+    # downlinks count too: the server is not a client, so broadcast bytes
+    # appear only in bytes_recv but still crossed the network
+    assert stats.total_bytes == 3 * (100 + 50)
+    assert stats.bytes_sent.sum() == 3 * 100
     assert stats.bytes_recv.sum() == 3 * 50
     assert stats.sim_time_s > 0
     empty = star_exchange(link, np.zeros(6, bool), up_bytes=1, down_bytes=1)

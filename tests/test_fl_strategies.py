@@ -32,6 +32,7 @@ def test_strategy_round_runs(env, name):
     strat = make_strategy(name, cfg, fl, steps_per_epoch=1)
     state = strat.init(jax.random.PRNGKey(1))
     state, metrics = strat.round(state, train, jax.random.PRNGKey(2))
+    assert metrics["stale"].shape == (fl.num_clients,)
     params = strat.params_for_eval(state)
     acc, accs = evaluate_population(
         cfg, params, data["test_x"], data["test_y"]
@@ -56,6 +57,26 @@ def test_fedavg_produces_consensus(env):
             np.testing.assert_allclose(
                 np.asarray(leaf[i], np.float32), ref, atol=1e-6
             )
+
+
+@pytest.mark.parametrize("name", ["fedavg", "fedper", "fedbabu"])
+def test_central_zero_active_round_is_noop(env, name):
+    """With availability 0 no client participates; the round must leave
+    the population untouched instead of broadcasting an all-zero average."""
+    from repro.configs.base import CommsConfig
+
+    cfg, fl, data, train = env
+    import dataclasses
+
+    fl0 = dataclasses.replace(fl, comms=CommsConfig(availability=0.0))
+    strat = make_strategy(name, cfg, fl0, steps_per_epoch=1)
+    state = strat.init(jax.random.PRNGKey(1))
+    before = jax.tree.leaves((state["params"], state["opt"]))
+    state, metrics = strat.round(state, train, jax.random.PRNGKey(2))
+    assert int(jnp.sum(metrics["active"])) == 0
+    after = jax.tree.leaves((state["params"], state["opt"]))
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_fedper_headers_stay_personal(env):
