@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test deps bench-comms
+.PHONY: verify verify-fast test deps bench-comms bench-round
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -10,8 +10,15 @@ deps:
 verify:
 	$(PY) -m pytest -x -q
 
+# fast tier: skips the @pytest.mark.slow population-simulator tests
+verify-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
 test:
 	$(PY) -m pytest -q
 
 bench-comms:
 	$(PY) benchmarks/comms_cost.py
+
+bench-round:
+	$(PY) benchmarks/round_bench.py

@@ -1,0 +1,123 @@
+"""Round-engine wall-time benchmark — emits BENCH_round.json.
+
+Per strategy and population size M, times one engine round (repro.fl.
+engine jitted end-to-end) and splits jit-compile from steady-state:
+
+  first_s    first jitted call (trace + XLA compile + one execution)
+  compile_s  first_s − steady_s (the compile tax the jit pays once)
+  steady_s   mean wall-time of the following rounds (the number the
+             perf trajectory tracks PR-over-PR)
+
+    PYTHONPATH=src python benchmarks/round_bench.py
+    PYTHONPATH=src python benchmarks/round_bench.py \
+        --clients 16 64 --strategies pfeddst dispfl --steady-rounds 5
+
+Defaults keep the paper's round shape (client sampling 0.25, probe-based
+PFedDST scoring restricted to active rows) on the CPU-smoke ResNet so
+the full 8-strategy × M∈{16,64} grid runs in minutes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import FLConfig
+from repro.data.synthetic import client_datasets_cifar
+from repro.fl import STRATEGIES, make_strategy
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def bench_round(name, cfg, fl, data, *, steady_rounds: int, seed: int = 0):
+    strat = make_strategy(name, cfg, fl, steps_per_epoch=1)
+    state = strat.init(jax.random.PRNGKey(seed))
+    train = {"images": data["train_x"], "labels": data["train_y"]}
+
+    t0 = time.perf_counter()
+    state, metrics = strat.round(state, train, jax.random.PRNGKey(1))
+    jax.block_until_ready(metrics)
+    first_s = time.perf_counter() - t0
+
+    steady = []
+    for r in range(steady_rounds):
+        t0 = time.perf_counter()
+        state, metrics = strat.round(
+            state, train, jax.random.PRNGKey(2 + r)
+        )
+        jax.block_until_ready(metrics)
+        steady.append(time.perf_counter() - t0)
+    steady_s = sum(steady) / len(steady)
+    return {
+        "first_s": round(first_s, 4),
+        "compile_s": round(max(first_s - steady_s, 0.0), 4),
+        "steady_s": round(steady_s, 4),
+        "steady_rounds": steady_rounds,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, nargs="*", default=[16, 64])
+    ap.add_argument("--strategies", nargs="*", default=list(STRATEGIES))
+    ap.add_argument("--steady-rounds", type=int, default=3)
+    ap.add_argument("--sample-ratio", type=float, default=0.25)
+    ap.add_argument("--peers", type=int, default=2)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--image-size", type=int, default=8)
+    ap.add_argument("--samples-per-class", type=int, default=10)
+    ap.add_argument("--probe-size", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out",
+                    default=os.path.join(RESULTS, "BENCH_round.json"))
+    args = ap.parse_args(argv)
+
+    cfg = get_config("resnet18-cifar").reduced()
+    out = {
+        "config": {
+            "model": cfg.name,
+            "clients": args.clients,
+            "sample_ratio": args.sample_ratio,
+            "image_size": args.image_size,
+            "batch_size": args.batch_size,
+            "backend": jax.default_backend(),
+        },
+        "rounds": {},
+    }
+    for m in args.clients:
+        fl = FLConfig(
+            num_clients=m, peers_per_round=args.peers,
+            batch_size=args.batch_size,
+            client_sample_ratio=args.sample_ratio,
+            epochs_extractor=1, epochs_header=1,
+            probe_size=args.probe_size, seed=args.seed,
+        )
+        # the pathological partition cuts each class into ~M·cpc/10 whole
+        # shards — keep ≥2 samples per shard at any M
+        spc = max(args.samples_per_class, -(-m * 2 // 10) * 2)
+        data = client_datasets_cifar(
+            jax.random.PRNGKey(args.seed), m, classes_per_client=2,
+            samples_per_class=spc,
+            image_size=args.image_size,
+        )
+        for name in args.strategies:
+            r = bench_round(name, cfg, fl, data,
+                            steady_rounds=args.steady_rounds,
+                            seed=args.seed)
+            out["rounds"].setdefault(name, {})[f"M{m}"] = r
+            print(f"{name:16s} M={m:3d} first={r['first_s']:7.3f}s "
+                  f"compile={r['compile_s']:7.3f}s "
+                  f"steady={r['steady_s']:7.3f}s", flush=True)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -68,6 +68,30 @@ class CommsFabric:
         return events_mod.apply_events(k_ev, adj, self.cfg)
 
     # -- host-side accounting ------------------------------------------------
+    def account_round(self, pattern: str, metrics: dict,
+                      payload_bytes: int, *, name: str = "") -> TrafficStats:
+        """Price one engine round from its emitted ExchangePlan echo.
+
+        `pattern` is the spec's comm_pattern: "star" bills each client in
+        metrics["active"] one upload + one download; "p2p" prices the
+        round's edges (metrics["comm_edges"], or "select_mask" for
+        selection-driven strategies). This is the single accounting entry
+        point the simulator uses — strategies never special-case it.
+        """
+        if pattern == "star":
+            return self.star_account(
+                np.asarray(metrics["active"]),
+                up_bytes=payload_bytes, down_bytes=payload_bytes,
+            )
+        edges = metrics.get("comm_edges", metrics.get("select_mask"))
+        if edges is None:
+            raise KeyError(
+                f"strategy {name!r} has comm_pattern {pattern!r} but "
+                "emitted neither 'comm_edges' nor 'select_mask' in its "
+                "round metrics"
+            )
+        return self.account(np.asarray(edges), payload_bytes)
+
     def account(self, edges, payload_bytes: int) -> TrafficStats:
         """Gossip exchange over `edges` (i pulls j ⇔ edges[i, j])."""
         return simulate_exchange(self.link, np.asarray(edges), payload_bytes)

@@ -247,6 +247,9 @@ class FLConfig:
     selection: str = "topk"            # "topk" | "threshold" | "random"
     score_threshold: float = 0.0       # s*  (used when selection == "threshold")
     probe_size: int = 32               # per-client probe batch for s_l (Eq. 6)
+    # Dis-PFL baseline (fl/strategies dispfl spec)
+    dispfl_sparsity: float = 0.5       # personal-mask sparsity
+    dispfl_regrow: float = 0.02        # RigL-style random regrow rate/round
     classes_per_client: int = 2        # pathological partition
     seed: int = 0
     # network model; None → legacy scalar-cost path (no candidate masking)

@@ -21,7 +21,17 @@ from repro.core.selection import (
 from repro.core.aggregation import aggregate_extractors, selection_to_weights
 from repro.core.partial_freeze import make_phase_steps
 from repro.core.client_state import PopulationState, init_population
-from repro.core.rounds import pfeddst_round
+
+
+def __getattr__(name):
+    # rounds builds on repro.fl.engine, which imports repro.core.* — a
+    # lazy export keeps `from repro.core import pfeddst_round` working
+    # without the package-init cycle.
+    if name in ("pfeddst_round", "make_pfeddst_stages", "PFEDDST_STREAMS"):
+        from repro.core import rounds
+
+        return getattr(rounds, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
 
 __all__ = [
     "header_distance_matrix",

@@ -44,6 +44,23 @@ def aggregate_extractors(stacked_extractor, weights):
     return jax.tree_util.tree_map(agg, stacked_extractor)
 
 
+def mean_over_active(tree, active):
+    """Centralized server step: uniform average of the active clients'
+    leaves, broadcast back to all M rows (FedAvg-family aggregation —
+    previously copy-pasted per strategy). When no client is active the
+    result is all-zero; callers guard with `keep_if_none_active`."""
+    w = active.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1.0)
+
+    def avg(x):
+        a = jnp.einsum("i,i...->...", w, x.astype(jnp.float32)).astype(
+            x.dtype
+        )
+        return jnp.broadcast_to(a[None], x.shape)
+
+    return jax.tree_util.tree_map(avg, tree)
+
+
 def aggregate_one(extractor_i, peer_extractors, weights_row):
     """Decentralized single-client path: aggregate my extractor with a
     stacked tree of received peer extractors ((K, ...) leaves)."""

@@ -9,12 +9,20 @@ Round structure (per active client i, all vmapped/einsum'd over M):
   6. phase-h training       K_h epochs, extractor frozen       (Eq. 4)
   7. update context arrays  (loss array l, recency array t)
 
-Client sampling (§III-A, ratio 0.1): inactive clients keep their state; they
-remain selectable as peers (their parameters are still on the network).
+The round is expressed as repro.fl.engine stages (`make_pfeddst_stages`):
+score_select → aggregate → phase-e → phase-h → update_context, so the
+PFedDST spec in fl/strategies.py and the standalone `pfeddst_round`
+entry point below execute the exact same code.
+
+Client sampling (§III-A, ratio 0.1): inactive clients keep their state;
+they remain selectable as peers (their parameters are still on the
+network). The expensive Eq. 6 probe evaluations run ONLY for the
+sampled rows — a static-size gather of the round's participants —
+so scoring costs O(n_active·M) model evals instead of O(M²); inactive
+rows keep their cached `loss_matrix` entries (which is also what the
+paper's context array l stores between selections).
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -26,36 +34,160 @@ from repro.core.partial_freeze import PhaseSteps
 from repro.core.scoring import (
     flatten_headers,
     header_distance_matrix,
-    loss_disparity_matrix,
+    loss_disparity_rows,
     recency_scores,
 )
 from repro.core.selection import combined_scores, select_peers, update_recency
 from repro.data.pipeline import sample_client_batches
+from repro.fl.engine import (
+    ExchangePlan,
+    RoundContext,
+    run_round,
+    scan_train,
+    where_tree,
+)
 from repro.models.split import merge_params
 
-
-def _where_tree(mask_m, new, old):
-    """Per-client select: mask (M,) bool over leading axis of each leaf."""
-    def sel(n, o):
-        m = mask_m.reshape((-1,) + (1,) * (n.ndim - 1))
-        return jnp.where(m, n, o)
-
-    return jax.tree_util.tree_map(sel, new, old)
+# PRNG stream layout of one PFedDST round (order = seed-for-seed parity
+# with the pre-engine implementation).
+PFEDDST_STREAMS = ("probe", "act", "e", "h", "rand")
 
 
-def _phase_loop(phase_fn, trained, frozen, opt, data, key, n_steps, bs):
-    """Run n_steps vmapped phase steps, sampling fresh client batches."""
+def make_pfeddst_stages(
+    cfg: ModelConfig,
+    fl: FLConfig,
+    steps: PhaseSteps,
+    *,
+    steps_per_epoch: int = 1,
+    probe_size: int = 64,
+    use_score_kernel: bool = False,
+):
+    """Algorithm 1 as engine stages over a PopulationState."""
 
-    def body(carry, k):
-        t, o = carry
-        batch = sample_client_batches(k, data, bs)
-        t, o, metrics = jax.vmap(phase_fn)(t, frozen, o, batch)
-        return (t, o), metrics["loss"]
+    def score_select(state: PopulationState, ctx: RoundContext):
+        # ---- 1. scoring — Eq. 6 restricted to the sampled rows ------------
+        m = ctx.m
+        probe = sample_client_batches(ctx.keys["probe"], ctx.data,
+                                      probe_size)
+        params = jax.vmap(merge_params)(state.extractor, state.header)
+        row_params = jax.tree_util.tree_map(
+            lambda x: x[ctx.sampled_idx], params
+        )
+        s_l_rows = loss_disparity_rows(cfg, row_params, probe)   # (n_act, M)
+        s_l = state.loss_matrix.at[ctx.sampled_idx].set(s_l_rows)
+        s_d = header_distance_matrix(
+            flatten_headers(state.header), use_kernel=use_score_kernel
+        )                                                        # Eq. 7
+        s_p = recency_scores(
+            state.last_selected, state.round, fl.recency_lambda
+        )                                                        # Eq. 8
+        cost = fl.comm_cost if ctx.cost is None else ctx.cost
+        scores = combined_scores(
+            s_l, s_d, s_p, alpha=fl.alpha, comm_cost=cost
+        )                                                        # Eq. 9
 
-    (trained, opt), losses = jax.lax.scan(
-        body, (trained, opt), jax.random.split(key, n_steps)
-    )
-    return trained, opt, losses
+        # ---- 2. selection -------------------------------------------------
+        if fl.selection == "threshold":
+            mask = select_peers(
+                scores, threshold=fl.score_threshold,
+                candidate_mask=ctx.cand,
+            )
+        elif fl.selection == "random":
+            # ablation: identical round structure, uniformly random peers
+            rand = jnp.where(
+                jnp.eye(m, dtype=bool), -1.0,
+                jax.random.uniform(ctx.keys["rand"], (m, m)),
+            )
+            mask = select_peers(
+                rand, k=fl.peers_per_round, candidate_mask=ctx.cand
+            )
+        else:
+            mask = select_peers(
+                scores, k=fl.peers_per_round, candidate_mask=ctx.cand
+            )
+        mask = mask & ctx.active[:, None]
+
+        ctx.plan = ExchangePlan(
+            "p2p", active=ctx.active, edges=mask,
+            weights=selection_to_weights(mask, include_self=True),
+        )
+        ctx.aux.update(s_l=s_l, s_l_rows=s_l_rows, s_d=s_d, scores=scores)
+        return state
+
+    def aggregate(state: PopulationState, ctx: RoundContext):
+        # ---- 3. aggregate extractors --------------------------------------
+        agg_e = aggregate_extractors(state.extractor, ctx.plan.weights)
+        ctx.aux["agg_e"] = where_tree(ctx.active, agg_e, state.extractor)
+        return state
+
+    def _active_mean(loss_row, active):
+        return jnp.sum(loss_row * active) / jnp.maximum(jnp.sum(active), 1)
+
+    def phase_e(state: PopulationState, ctx: RoundContext):
+        # ---- 4. phase-e (header frozen) -----------------------------------
+        n_e = fl.epochs_extractor * steps_per_epoch
+
+        def apply(carry, batch):
+            e, o = carry
+            e, o, met = jax.vmap(steps.phase_e)(e, state.header, o, batch)
+            return (e, o), met["loss"]
+
+        (new_e, opt_e), loss_e = scan_train(
+            apply, (ctx.aux["agg_e"], state.opt_e), ctx.data,
+            ctx.keys["e"], n_e, fl.batch_size,
+        )
+        new_e = where_tree(ctx.active, new_e, state.extractor)
+        opt_e = where_tree(ctx.active, opt_e, state.opt_e)
+        ctx.metrics["train_loss_e"] = _active_mean(loss_e[-1], ctx.active)
+        return state._replace(extractor=new_e, opt_e=opt_e)
+
+    def phase_h(state: PopulationState, ctx: RoundContext):
+        # ---- 5/6. phase-h (extractor frozen) ------------------------------
+        n_h = fl.epochs_header * steps_per_epoch
+
+        def apply(carry, batch):
+            h, o = carry
+            h, o, met = jax.vmap(
+                lambda h_, e_, o_, b: steps.phase_h(e_, h_, o_, b)
+            )(h, state.extractor, o, batch)
+            return (h, o), met["loss"]
+
+        (new_h, opt_h), loss_h = scan_train(
+            apply, (state.header, state.opt_h), ctx.data,
+            ctx.keys["h"], n_h, fl.batch_size,
+        )
+        new_h = where_tree(ctx.active, new_h, state.header)
+        opt_h = where_tree(ctx.active, opt_h, state.opt_h)
+        ctx.metrics["train_loss_h"] = _active_mean(loss_h[-1], ctx.active)
+        return state._replace(header=new_h, opt_h=opt_h)
+
+    def update_context(state: PopulationState, ctx: RoundContext):
+        # ---- 7. context arrays --------------------------------------------
+        m = ctx.m
+        mask, scores = ctx.plan.edges, ctx.aux["scores"]
+        loss_matrix = jnp.where(
+            ctx.active[:, None], ctx.aux["s_l"], state.loss_matrix
+        )
+        s_d = ctx.aux["s_d"]
+        ctx.metrics.update(
+            mean_selected_score=jnp.sum(jnp.where(mask, scores, 0.0))
+            / jnp.maximum(jnp.sum(mask), 1),
+            # mean over the rows actually evaluated this round (the
+            # sampled clients) — unsampled rows are served from cache
+            s_l_mean=jnp.mean(ctx.aux["s_l_rows"]),
+            s_d_offdiag_mean=(jnp.sum(s_d) - jnp.trace(s_d))
+            / (m * (m - 1)),
+            select_mask=mask,
+        )
+        return state._replace(
+            loss_matrix=loss_matrix,
+            last_selected=update_recency(
+                state.last_selected, mask, state.round
+            ),
+            round=state.round + 1,
+        )
+
+    return (score_select, aggregate, phase_e, phase_h, update_context)
 
 
 def pfeddst_round(
@@ -75,105 +207,25 @@ def pfeddst_round(
 ):
     """One communication round. train_data: dict of (M, N, ...) arrays.
 
+    Standalone entry point over `make_pfeddst_stages` (the PFedDST spec in
+    fl/strategies.py runs the same stages through repro.fl.engine).
     candidate_mask / comm_cost / available are the repro.comms hooks:
     reachable-peer mask, per-link (M, M) Eq. 9 `c` matrix (None → the
     scalar fl.comm_cost), and (M,) client-online mask composed with the
     protocol's client_sample_ratio. Returns (new_state, metrics dict).
     """
-    m = state.loss_matrix.shape[0]
-    k_probe, k_active, k_e, k_h, k_rand = jax.random.split(key, 5)
-
-    # ---- 1. scoring -------------------------------------------------------
-    probe = sample_client_batches(k_probe, train_data, probe_size)
-    params = jax.vmap(merge_params)(state.extractor, state.header)
-    s_l = loss_disparity_matrix(cfg, params, probe)              # Eq. 6
-    s_d = header_distance_matrix(
-        flatten_headers(state.header), use_kernel=use_score_kernel
-    )                                                            # Eq. 7
-    s_p = recency_scores(
-        state.last_selected, state.round, fl.recency_lambda
-    )                                                            # Eq. 8
-    scores = combined_scores(
-        s_l, s_d, s_p, alpha=fl.alpha,
-        comm_cost=fl.comm_cost if comm_cost is None else comm_cost,
-    )                                                            # Eq. 9
-
-    # ---- 2. selection -----------------------------------------------------
-    if fl.selection == "threshold":
-        mask = select_peers(
-            scores, threshold=fl.score_threshold, candidate_mask=candidate_mask
-        )
-    elif fl.selection == "random":
-        # ablation: identical round structure, uniformly random peers
-        rand = jnp.where(
-            jnp.eye(m, dtype=bool), -1.0, jax.random.uniform(k_rand, (m, m))
-        )
-        mask = select_peers(
-            rand, k=fl.peers_per_round, candidate_mask=candidate_mask
-        )
-    else:
-        mask = select_peers(
-            scores, k=fl.peers_per_round, candidate_mask=candidate_mask
-        )
-
-    # active-client sampling: inactive clients do not aggregate or train.
-    # Network availability (repro.comms.events) composes with the
-    # protocol's sampling ratio: a client trains iff sampled AND online.
-    n_active = max(1, int(round(m * fl.client_sample_ratio)))
-    active = jnp.zeros((m,), bool).at[
-        jax.random.permutation(k_active, m)[:n_active]
-    ].set(True)
-    if available is not None:
-        active = active & available
-    mask = mask & active[:, None]
-
-    # ---- 3. aggregate extractors -----------------------------------------
-    weights = selection_to_weights(mask, include_self=True)
-    agg_e = aggregate_extractors(state.extractor, weights)
-    agg_e = _where_tree(active, agg_e, state.extractor)
-
-    # ---- 4. phase-e (header frozen) ---------------------------------------
-    n_e = fl.epochs_extractor * steps_per_epoch
-    new_e, opt_e, loss_e = _phase_loop(
-        steps.phase_e, agg_e, state.header, state.opt_e,
-        train_data, k_e, n_e, fl.batch_size,
+    # participation (client sampling × the `available` network mask, a
+    # client trains iff sampled AND online) and the metrics contract are
+    # the engine's run_round — identical to the spec path in
+    # fl/strategies, which additionally derives the network hooks from a
+    # CommsFabric.
+    stages = make_pfeddst_stages(
+        cfg, fl, steps, steps_per_epoch=steps_per_epoch,
+        probe_size=probe_size, use_score_kernel=use_score_kernel,
     )
-    new_e = _where_tree(active, new_e, state.extractor)
-    opt_e = _where_tree(active, opt_e, state.opt_e)
-
-    # ---- 5/6. phase-h (extractor frozen) ----------------------------------
-    n_h = fl.epochs_header * steps_per_epoch
-    phase_h_flipped = lambda h, e, o, b: steps.phase_h(e, h, o, b)
-    new_h, opt_h, loss_h = _phase_loop(
-        phase_h_flipped, state.header, new_e, state.opt_h,
-        train_data, k_h, n_h, fl.batch_size,
+    return run_round(
+        stages, state, train_data, key,
+        m=state.loss_matrix.shape[0], ratio=fl.client_sample_ratio,
+        key_streams=PFEDDST_STREAMS, candidate_mask=candidate_mask,
+        comm_cost=comm_cost, available=available,
     )
-    new_h = _where_tree(active, new_h, state.header)
-    opt_h = _where_tree(active, opt_h, state.opt_h)
-
-    # ---- 7. context arrays -------------------------------------------------
-    loss_matrix = jnp.where(active[:, None], s_l, state.loss_matrix)
-    last_selected = update_recency(state.last_selected, mask, state.round)
-
-    new_state = PopulationState(
-        extractor=new_e,
-        header=new_h,
-        opt_e=opt_e,
-        opt_h=opt_h,
-        loss_matrix=loss_matrix,
-        last_selected=last_selected,
-        round=state.round + 1,
-    )
-    metrics = {
-        "train_loss_e": jnp.sum(loss_e[-1] * active)
-        / jnp.maximum(jnp.sum(active), 1),
-        "train_loss_h": jnp.sum(loss_h[-1] * active)
-        / jnp.maximum(jnp.sum(active), 1),
-        "mean_selected_score": jnp.sum(jnp.where(mask, scores, 0.0))
-        / jnp.maximum(jnp.sum(mask), 1),
-        "s_l_mean": jnp.mean(s_l),
-        "s_d_offdiag_mean": (jnp.sum(s_d) - jnp.trace(s_d)) / (m * (m - 1)),
-        "active": active,
-        "select_mask": mask,
-    }
-    return new_state, metrics

@@ -28,22 +28,32 @@ from repro.utils.pytree import tree_flatten_vector
 # Eq. 6 — loss disparity
 # ---------------------------------------------------------------------------
 
+def loss_disparity_rows(cfg, stacked_params_rows, probe_batches):
+    """L[r, j] = eval-loss of row-client r's model on client j's probe.
+
+    stacked_params_rows: pytree with leading R axis (any subset of the
+    population — typically the round's sampled clients); probe_batches:
+    dict of (M, B, ...) arrays. R·M evaluations — this is how the engine
+    keeps Eq. 6 scoring at O(n_active·M) instead of O(M²): inactive rows
+    keep their cached `loss_matrix` entries.
+    """
+
+    def row(params_r):
+        return jax.vmap(
+            lambda b: model_mod.eval_loss(cfg, params_r, b)
+        )(probe_batches)
+
+    return jax.vmap(row)(stacked_params_rows)  # (R, M)
+
+
 def loss_disparity_matrix(cfg, stacked_params, probe_batches):
     """L[i, j] = eval-loss of client i's model on client j's probe batch.
 
-    stacked_params: pytree with leading M axis; probe_batches: dict of
-    (M, B, ...) arrays. O(M²) evaluations — vmap over peers inner, clients
-    outer. Production note: with clients on the mesh data axis this is an
+    Full O(M²) form of `loss_disparity_rows` (all clients as rows).
+    Production note: with clients on the mesh data axis this is an
     all-gather of probe batches + local eval (batches ≪ models).
     """
-
-    def eval_on(params_i, batch_j):
-        return model_mod.eval_loss(cfg, params_i, batch_j)
-
-    def row(params_i):
-        return jax.vmap(lambda b: eval_on(params_i, b))(probe_batches)
-
-    return jax.vmap(row)(stacked_params)  # (M, M)
+    return loss_disparity_rows(cfg, stacked_params, probe_batches)
 
 
 def loss_disparity_row(cfg, params_i, probe_batches):

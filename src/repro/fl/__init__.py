@@ -1,16 +1,28 @@
-"""Federated-learning simulator + the paper's baselines.
+"""Federated-learning engine, strategies, and simulator.
 
+engine     — composable round engine: declarative StrategySpec, stage
+             library (participate/plan_exchange/local_train/aggregate/
+             update_context), jitted + client-sharded round compilation
 strategies — FedAvg / FedPer / FedBABU / DFedAvgM / Dis-PFL / DFedPGP /
-             PFedDST (+ random-selection ablation), one round fn each
+             PFedDST (+ random-selection ablation) as ~30-line specs
 simulator  — population runner: round loop, personalized eval, history
 """
+from repro.fl.engine import ExchangePlan, RoundContext, StrategySpec, \
+    make_round, run_round
 from repro.fl.simulator import History, run_experiment, evaluate_population
-from repro.fl.strategies import STRATEGIES, Strategy, make_strategy
+from repro.fl.strategies import STRATEGIES, Strategy, make_spec, \
+    make_strategy
 
 __all__ = [
     "STRATEGIES",
     "Strategy",
+    "StrategySpec",
+    "ExchangePlan",
+    "RoundContext",
     "History",
+    "make_round",
+    "run_round",
+    "make_spec",
     "make_strategy",
     "run_experiment",
     "evaluate_population",

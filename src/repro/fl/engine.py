@@ -1,0 +1,408 @@
+"""repro.fl.engine — composable round engine for decentralized FL.
+
+Every strategy in this repo (the paper's PFedDST and all §III-B
+baselines) shares one round skeleton; the engine makes each part of it a
+named, composable stage and executes a declarative `StrategySpec`:
+
+    participate     client sampling × network availability (repro.comms)
+         │          → active mask + the static-size sampled index set
+         ▼
+    plan_exchange   who exchanges what with whom: an ExchangePlan —
+         │          star (client↔server) or p2p edges + mixing weights
+         ▼
+    local_train     full-step SGD or phase-e/phase-h partial-freeze
+         │          loops (Eq. 3/4), always guarded by the active mask
+         ▼
+    aggregate       tree-averaging driven by the plan: server mean +
+         │          broadcast, or row-stochastic gossip mixing — with
+         │          the none-active guard in one place
+         ▼
+    update_context  round counter, context arrays (loss l, recency t),
+                    metrics
+
+A `StrategySpec` is data: an `init`, an ordered tuple of stage
+callables `(state, ctx) -> state`, an eval-params view, and the
+declarative exchange metadata (comm pattern, payload kind/fraction, PRNG
+stream layout). `make_round` turns a spec into a single jitted round
+function; the comms fabric prices the emitted plan directly via
+`CommsFabric.account_round`, so byte/time/energy accounting needs no
+per-strategy branching in the simulator.
+
+Stages communicate through a mutable `RoundContext` (PRNG streams, the
+participation masks, the ExchangePlan, auxiliary values, metrics).
+Writing a new strategy = composing the stage factories below (plus any
+custom stage) into a spec — see tests/test_engine.py for a ~25-line
+threshold-gossip hybrid added entirely in-test.
+
+Scale: the round is jitted end-to-end and every leading-M leaf is
+sharding-constrained onto the mesh's client axis ("data", or "pod" on
+multi-pod meshes) — `place_population` puts a population onto the mesh
+with replicated fallback on a single device, so the same round runs
+unchanged from 1 CPU to a pod slice.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.aggregation import (
+    aggregate_extractors,
+    mean_over_active,
+    selection_to_weights,
+)
+from repro.core.partial_freeze import make_full_step
+from repro.core.selection import select_peers
+from repro.data.pipeline import sample_client_batches
+from repro.models.split import merge_params, split_params
+from repro.utils.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# shared primitives (the helpers formerly copied across fl/strategies.py,
+# core/rounds.py, and the simulator)
+# ---------------------------------------------------------------------------
+
+def net_key(key):
+    """Independent stream for network events (topology/dropout/availability)
+    so adding the fabric leaves the training randomness untouched."""
+    return jax.random.fold_in(key, 0x636F6D)
+
+
+def sample_participants(key, m: int, ratio: float):
+    """→ (idx, active): the round's sampled clients.
+
+    `idx` is the static-size (max(1, round(m·ratio)),) prefix of a random
+    permutation — stages that want active-row-only compute (e.g. the
+    Eq. 6 probe evaluations) gather with it; `active` is the (M,) bool
+    mask over the same set.
+    """
+    n = max(1, int(round(m * ratio)))
+    idx = jax.random.permutation(key, m)[:n]
+    return idx, jnp.zeros((m,), bool).at[idx].set(True)
+
+
+def where_tree(mask_m, new, old):
+    """Per-client select: mask (M,) bool over leading axis of each leaf."""
+
+    def sel(n, o):
+        return jnp.where(mask_m.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def keep_if_none_active(active, new, old):
+    """With availability < 1 every sampled client may be offline; keeping
+    `old` stops the all-zero average from being broadcast in that round."""
+    any_active = jnp.any(active)
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(any_active, n, o), new, old
+    )
+
+
+def scan_train(apply, carry, data, key, n_steps: int, batch_size: int):
+    """n_steps of `apply(carry, stacked_batch) -> (carry, loss)` with fresh
+    per-client batches each step — the one local-training loop every
+    strategy (full-step and phase-freeze alike) runs through."""
+
+    def body(c, k):
+        batch = sample_client_batches(k, data, batch_size)
+        return apply(c, batch)
+
+    return jax.lax.scan(body, carry, jax.random.split(key, n_steps))
+
+
+def gossip_edges(key, m: int, k: int, directed: bool, cand=None):
+    """Random k-neighbor selection mask (no self). `cand` restricts
+    neighbor sampling to the comms fabric's reachable peers."""
+    no_self = ~jnp.eye(m, dtype=bool)
+    cand = no_self if cand is None else cand & no_self
+    mask = select_peers(
+        jax.random.uniform(key, (m, m)), k=k, candidate_mask=cand
+    )
+    if not directed:
+        # re-apply cand after symmetrization: it is not symmetric under
+        # staleness (stale peers lose their column only), and |.T must
+        # not resurrect an edge the network excluded
+        mask = (mask | mask.T) & cand
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# exchange plan + round context
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ExchangePlan:
+    """Who exchanges what with whom this round — the value the aggregate
+    stage mixes by and the comms fabric prices (account_round)."""
+    pattern: str                            # "star" | "p2p"
+    active: Any                             # (M,) bool participants
+    edges: Optional[Any] = None             # (M,M) bool, i pulls j (p2p)
+    weights: Optional[Any] = None           # (M,M) row-stochastic mixing
+
+
+@dataclass
+class RoundContext:
+    """Mutable per-round scratchpad threaded through the stages."""
+    m: int
+    data: Any                               # stacked client dataset dict
+    keys: dict                              # named PRNG streams (spec layout)
+    active: Any                             # (M,) bool sampled ∧ online
+    sampled_idx: Any                        # static-size sampled client ids
+    cand: Any = None                        # (M,M) reachable-peer mask
+    cost: Any = None                        # (M,M) Eq. 9 c matrix (fabric)
+    stale: Any = None                       # (M,) staleness lag
+    plan: Optional[ExchangePlan] = None
+    aux: dict = field(default_factory=dict)
+    metrics: dict = field(default_factory=dict)
+
+
+def named_streams(key, streams: tuple) -> dict:
+    """Split `key` into the spec's named PRNG streams (order is part of
+    the spec: it fixes seed-for-seed parity with the pre-engine code)."""
+    return dict(zip(streams, jax.random.split(key, len(streams))))
+
+
+# ---------------------------------------------------------------------------
+# the declarative strategy spec
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StrategySpec:
+    """A strategy as data: init + ordered stages + exchange metadata.
+
+    stages: tuple of `(state, ctx) -> state` callables, executed in
+    order. The plan-producing stage must set `ctx.plan`; training stages
+    record losses into `ctx.metrics`.
+    """
+    name: str
+    init: Callable                          # (key) -> state
+    stages: tuple                           # ordered (state, ctx) -> state
+    params_for_eval: Callable               # (state) -> leading-M params
+    key_streams: tuple                      # named split layout of round key
+    sample_stream: str = "act"              # stream driving client sampling
+    comm_pattern: str = "p2p"               # "p2p" | "star"
+    payload_kind: str = "extractor"         # "extractor" | "model"
+    payload_fraction: float = 1.0           # sparse payloads (DisPFL masks)
+    needs_head_finetune: bool = False
+    affinity: Optional[Callable] = None     # (state)->(M,M) fabric steering
+
+
+def run_round(stages, state, data, key, *, m: int, ratio: float,
+              key_streams: tuple, sample_stream: str = "act",
+              fabric=None, affinity=None, candidate_mask=None,
+              comm_cost=None, available=None):
+    """Execute one round's stages under the engine's participate step.
+
+    The engine owns participation (client sampling × fabric availability
+    × an optional explicit `available` mask), the PRNG stream layout, and
+    the uniform metrics contract (`active`, `stale`, `comm_edges` for
+    p2p plans) — stages own everything else. `candidate_mask`/`comm_cost`
+    are direct network hooks for fabric-less callers; a fabric overrides
+    them.
+    """
+    keys = named_streams(key, key_streams)
+    cand, cost = candidate_mask, comm_cost
+    stale = jnp.zeros((m,), jnp.int32)
+    if fabric is not None:
+        cand, avail, stale = fabric.round_masks(net_key(key),
+                                                affinity=affinity)
+        cost = fabric.cost
+        available = avail if available is None else available & avail
+    idx, active = sample_participants(keys[sample_stream], m, ratio)
+    if available is not None:
+        active = active & available
+    ctx = RoundContext(
+        m=m, data=data, keys=keys, active=active, sampled_idx=idx,
+        cand=cand, cost=cost, stale=stale,
+    )
+    for stage in stages:
+        state = stage(state, ctx)
+    metrics = ctx.metrics
+    metrics.setdefault("active", active)
+    metrics.setdefault("stale", stale)
+    if (ctx.plan is not None and ctx.plan.pattern == "p2p"
+            and ctx.plan.edges is not None):
+        metrics.setdefault("comm_edges", ctx.plan.edges)
+    return state, metrics
+
+
+def make_round(spec: StrategySpec, fl, fabric=None, *, jit: bool = True,
+               client_axis: str = "data"):
+    """Compile a StrategySpec into one round function
+    `(state, data, key) -> (state, metrics)`: `run_round` over the
+    spec's stages, with sharding constraints on the leading-M axis and
+    (by default) the whole round jitted."""
+    m = fl.num_clients
+
+    def round_fn(state, data, key):
+        state = constrain_clients(state, m, client_axis)
+        aff = (spec.affinity(state)
+               if fabric is not None and spec.affinity is not None else None)
+        state, metrics = run_round(
+            spec.stages, state, data, key, m=m,
+            ratio=fl.client_sample_ratio, key_streams=spec.key_streams,
+            sample_stream=spec.sample_stream, fabric=fabric, affinity=aff,
+        )
+        return constrain_clients(state, m, client_axis), metrics
+
+    return jax.jit(round_fn) if jit else round_fn
+
+
+# ---------------------------------------------------------------------------
+# stage library — the reusable stage factories specs compose
+# ---------------------------------------------------------------------------
+
+def stage_plan_star():
+    """Exchange plan for the centralized baselines: every active client
+    uploads to / downloads from the server."""
+
+    def stage(state, ctx):
+        ctx.plan = ExchangePlan("star", active=ctx.active)
+        return state
+
+    return stage
+
+
+def stage_plan_gossip(fl, *, directed: bool, stream: str = "nbr"):
+    """Random k-neighbor gossip plan restricted to reachable peers; only
+    active clients pull."""
+
+    def stage(state, ctx):
+        nbr = gossip_edges(
+            ctx.keys[stream], ctx.m, fl.peers_per_round,
+            directed=directed, cand=ctx.cand,
+        )
+        nbr = nbr & ctx.active[:, None]
+        ctx.plan = ExchangePlan(
+            "p2p", active=ctx.active, edges=nbr,
+            weights=selection_to_weights(nbr, include_self=True),
+        )
+        return state
+
+    return stage
+
+
+def stage_train_full(cfg, fl, opt, n_steps: int, *, stream: str = "train"):
+    """Full-model local SGD on dict states ({"params", "opt", ...});
+    inactive clients keep params and optimizer state untouched."""
+    step = make_full_step(cfg, opt)
+
+    def stage(state, ctx):
+        params, opt_state = state["params"], state["opt"]
+
+        def apply(carry, batch):
+            p, o = carry
+            p, o, met = jax.vmap(step)(p, o, batch)
+            return (p, o), met["loss"]
+
+        (new_p, new_o), losses = scan_train(
+            apply, (params, opt_state), ctx.data, ctx.keys[stream],
+            n_steps, fl.batch_size,
+        )
+        new_p = where_tree(ctx.active, new_p, params)
+        new_o = where_tree(ctx.active, new_o, opt_state)
+        ctx.metrics["train_loss"] = jnp.mean(losses[-1])
+        return {**state, "params": new_p, "opt": new_o}
+
+    return stage
+
+
+def stage_star_average(cfg, *, share: str):
+    """Server step: average the shared partition ("model" or "extractor")
+    over the plan's active clients, broadcast it back, keep the old
+    population when nobody participated."""
+
+    def stage(state, ctx):
+        params, active = state["params"], ctx.plan.active
+        if share == "model":
+            new = mean_over_active(params, active)
+        else:
+            shared, headers = split_params(cfg, params)
+            new = jax.vmap(merge_params)(
+                mean_over_active(shared, active), headers
+            )
+        return {**state, "params": keep_if_none_active(active, new, params)}
+
+    return stage
+
+
+def stage_mix(cfg, *, share: str):
+    """Gossip step: row-stochastic mixing by the plan's weights over the
+    shared partition; inactive clients keep their model."""
+
+    def stage(state, ctx):
+        params, active = state["params"], ctx.plan.active
+        if share == "model":
+            mixed = aggregate_extractors(params, ctx.plan.weights)
+            mixed = where_tree(active, mixed, params)
+        else:
+            e, h = split_params(cfg, params)
+            mixed_e = aggregate_extractors(e, ctx.plan.weights)
+            mixed_e = where_tree(active, mixed_e, e)
+            mixed = jax.vmap(merge_params)(mixed_e, h)
+        return {**state, "params": mixed}
+
+    return stage
+
+
+def stage_bump_round():
+    def stage(state, ctx):
+        return {**state, "round": state["round"] + 1}
+
+    return stage
+
+
+# ---------------------------------------------------------------------------
+# population sharding — the leading-M client axis on the mesh
+# ---------------------------------------------------------------------------
+
+def constrain_clients(tree, m: int, axis: str = "data"):
+    """Sharding-constrain the leading client dim of every (M, ...) leaf
+    onto `axis` ("data", or "pod" on multi-pod meshes). No-op outside a
+    mesh context or on leaves without the client axis — the 1-device
+    replicated fallback required by utils/sharding's policy."""
+    if axis is None:
+        return tree
+
+    def c(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == m:
+            return constrain(x, P(axis, *([None] * (x.ndim - 1))))
+        return x
+
+    return jax.tree_util.tree_map(c, tree)
+
+
+def population_mesh() -> Optional[Mesh]:
+    """1-D ("data",) mesh over all local devices; None on a single device
+    (the replicated fallback)."""
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return None
+    return Mesh(np.array(devs), ("data",))
+
+
+def place_population(state, m: int, mesh: Optional[Mesh] = None):
+    """device_put a leading-M population onto the mesh: client axis
+    sharded over the mesh's first axis where M divides it, everything
+    else (and everything, on 1 device) replicated."""
+    mesh = mesh if mesh is not None else population_mesh()
+    if mesh is None:
+        return state
+    axis = mesh.axis_names[0]
+    size = int(mesh.devices.shape[0])   # the client axis, not the whole mesh
+
+    def put(x):
+        x = jnp.asarray(x)
+        if x.ndim >= 1 and x.shape[0] == m and m % size == 0:
+            spec = P(axis, *([None] * (x.ndim - 1)))
+        else:
+            spec = P(*([None] * x.ndim))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, state)

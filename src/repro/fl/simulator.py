@@ -8,12 +8,15 @@ Personalized test accuracy = mean over clients of accuracy of client i's
 model on client i's OWN test split (the paper's primary metric).
 
 When the strategy carries a comms fabric (FLConfig.comms, the default),
-every round's exchange is priced on the simulated network: History gains
-per-round bytes and simulated network time plus cumulative
-bytes/time/energy at each eval point. FLConfig(comms=None) restores the
-paper's costless scalar world (all comm fields stay zero/empty). Only
-parameter traffic is priced; PFedDST's probe/header score context is not
-(see repro.comms.transport docstring).
+every round's exchange is priced on the simulated network via
+`CommsFabric.account_round` — the engine's round metrics echo the
+ExchangePlan (`active`, `comm_edges`/`select_mask`), so the simulator
+has no per-strategy accounting branches: History gains per-round bytes
+and simulated network time plus cumulative bytes/time/energy at each
+eval point. FLConfig(comms=None) restores the paper's costless scalar
+world (all comm fields stay zero/empty). Only parameter traffic is
+priced; PFedDST's probe/header score context is not (see
+repro.comms.transport docstring).
 """
 from __future__ import annotations
 
@@ -154,7 +157,7 @@ def run_experiment(
         )
         payload = int(round(payload * strat.payload_fraction))
 
-    round_jit = jax.jit(strat.round)
+    round_jit = strat.round            # engine rounds are already jitted
     hist = History()
     cum_bytes, cum_net_s, cum_energy = 0, 0.0, 0.0
     t0 = time.time()
@@ -163,20 +166,9 @@ def run_experiment(
         state, metrics = round_jit(state, train_data, k_r)
 
         if strat.fabric is not None:
-            if strat.comm_pattern == "star":
-                stats = strat.fabric.star_account(
-                    np.asarray(metrics["active"]),
-                    up_bytes=payload, down_bytes=payload,
-                )
-            else:
-                edges = metrics.get("comm_edges", metrics.get("select_mask"))
-                if edges is None:
-                    raise KeyError(
-                        f"strategy {strat.name!r} has comm_pattern "
-                        f"{strat.comm_pattern!r} but emitted neither "
-                        "'comm_edges' nor 'select_mask' in its round metrics"
-                    )
-                stats = strat.fabric.account(np.asarray(edges), payload)
+            stats = strat.fabric.account_round(
+                strat.comm_pattern, metrics, payload, name=strat.name
+            )
             hist.round_bytes.append(stats.total_bytes)
             hist.round_net_time_s.append(stats.sim_time_s)
             stale = metrics.get("stale")
@@ -195,8 +187,11 @@ def run_experiment(
         if (r + 1) % eval_every == 0 or r == num_rounds - 1:
             params = strat.params_for_eval(state)
             if strat.needs_head_finetune:
+                # fold in the round index: each eval point personalizes on
+                # fresh batch draws instead of replaying the same k_ft ones
                 params = _finetune_heads(
-                    cfg, fl, params, data["train_x"], data["train_y"], k_ft
+                    cfg, fl, params, data["train_x"], data["train_y"],
+                    jax.random.fold_in(k_ft, r),
                 )
             acc, _ = evaluate_population(
                 cfg, params, data["test_x"], data["test_y"]

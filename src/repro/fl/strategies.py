@@ -1,48 +1,48 @@
-"""The paper's baselines + PFedDST, as uniform population-mode strategies.
+"""The paper's baselines + PFedDST as declarative engine specs.
 
-Every strategy exposes
-    init(cfg, fl, key)            -> state pytree (leading-M stacked)
-    round(state, data, key)       -> (state, metrics)
-    params_for_eval(state)        -> merged per-client params (leading M)
+Every strategy is a `repro.fl.engine.StrategySpec` — an init, an ordered
+tuple of engine stages, and exchange metadata — compiled by
+`engine.make_round` into one jitted round function. The `Strategy`
+wrapper below keeps the established external surface:
 
-and is jit-able end-to-end. `data` is the stacked client dataset dict
-(train_x/train_y). All local training uses the paper's §III-A recipe
-(SGD momentum 0.9, weight decay 0.005, lr 0.1) via repro.optim.sgd.
+    init(key)                  -> state pytree (leading-M stacked)
+    round(state, data, key)    -> (state, metrics)       [jitted]
+    params_for_eval(state)     -> merged per-client params (leading M)
 
-Baselines (paper §III-B):
-  fedavg    [30] one global model, sampled clients train + average.
-  fedper    [15] personal header; extractor trained jointly, averaged
-            centrally across active clients.
+`data` is the stacked client dataset dict (train_x/train_y). All local
+training uses the paper's §III-A recipe (SGD momentum 0.9, weight decay
+0.005, lr 0.1) via repro.optim.sgd.
+
+Baselines (paper §III-B), each ~30 lines of spec:
+  fedavg    [30] star plan → full-step train → server-average the model.
+  fedper    [15] star plan → full-step train → server-average the
+            extractor; personal headers ride along.
   fedbabu   [21] header FROZEN at init (never trained/averaged) during
             federation; extractor trained + averaged. Personalized eval
             fine-tunes a throwaway header copy (simulator does this).
-  dfedavgm  [23] decentralized: local SGD-with-momentum then undirected
-            random-gossip averaging with k neighbors (quantized payload
-            sizes are modeled by repro.comms, not applied to the values —
-            bandwidth, not accuracy, semantics).
-  dispfl    [24] decentralized personalized sparse training — simplified:
-            personal magnitude masks (50% sparsity) with RigL-style
-            random regrow; masked extractor gossip-averaged where masks
-            overlap; header personal. (Full Dis-PFL also evolves masks by
-            gradient saliency; noted in DESIGN.md §9.)
-  dfedpgp   [26] directed push gossip, partial personalization: each
-            client pushes its extractor to k random OUT-neighbors; header
-            personal. (Push-sum weight bookkeeping omitted — symmetric
-            sampling keeps the mixing doubly-stochastic in expectation.)
-  pfeddst        the paper's method (core.rounds.pfeddst_round).
-  pfeddst_random ablation: same partial-freeze round, random peer choice.
+  dfedavgm  [23] undirected random-gossip plan → full-step train → mix
+            the whole model over the plan's weights.
+  dispfl    [24] personal magnitude masks (fl.dispfl_sparsity) applied →
+            gossip plan → train → mix extractor → mask evolution
+            (magnitude prune + random regrow at fl.dispfl_regrow).
+  dfedpgp   [26] directed push-gossip plan; extractor mixed, header
+            personal.
+  pfeddst        the paper's method — core.rounds.make_pfeddst_stages
+                 (score → select → aggregate → phase-e → phase-h →
+                 context update) over the same engine.
+  pfeddst_random ablation: same stages, selection="random".
 
-Every strategy additionally carries a repro.comms fabric (built from
-fl.comms): neighbor/peer choice is restricted to the network's reachable
-candidates, availability composes with client sampling, and metrics carry
-the round's communication edges (`comm_edges`/`select_mask`, or `active`
-for the client↔server baselines) so the simulator can account bytes,
-simulated network time, and energy per round.
+Every spec additionally carries a repro.comms fabric (built from
+fl.comms): the engine composes availability with client sampling,
+restricts plans to reachable candidates, and echoes the round's
+ExchangePlan into the metrics (`comm_edges`/`select_mask`, plus
+`active`) so `CommsFabric.account_round` can price bytes, simulated
+network time, and energy with zero per-strategy branching.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable
 
 import jax
@@ -50,94 +50,42 @@ import jax.numpy as jnp
 
 from repro.comms.fabric import CommsFabric, make_fabric
 from repro.configs.base import FLConfig, ModelConfig
-from repro.core.aggregation import aggregate_extractors, selection_to_weights
-from repro.core.selection import select_peers
-from repro.core.client_state import PopulationState, init_population
-from repro.core.partial_freeze import make_full_step, make_phase_steps
-from repro.core.rounds import pfeddst_round
-from repro.data.pipeline import sample_client_batches
+from repro.core.client_state import init_population
+from repro.core.partial_freeze import make_phase_steps
+from repro.fl.engine import (
+    StrategySpec,
+    gossip_edges,
+    make_round,
+    stage_bump_round,
+    stage_mix,
+    stage_plan_gossip,
+    stage_plan_star,
+    stage_star_average,
+    stage_train_full,
+    scan_train,
+    where_tree,
+)
 from repro.models import model as model_mod
 from repro.models.split import merge_params, split_params
 from repro.optim.sgd import sgd
 
+# back-compat alias (pre-engine name; tests/external code import it)
+_gossip_weights = gossip_edges
 
-# ---------------------------------------------------------------------------
-# helpers
-# ---------------------------------------------------------------------------
 
 def _opt(fl: FLConfig):
     return sgd(fl.lr, momentum=fl.momentum, weight_decay=fl.weight_decay)
 
 
-def _active_mask(key, m: int, ratio: float):
-    n = max(1, int(round(m * ratio)))
-    return jnp.zeros((m,), bool).at[jax.random.permutation(key, m)[:n]].set(
-        True
-    )
-
-
-def _where_tree(mask_m, new, old):
-    def sel(n, o):
-        return jnp.where(mask_m.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
-
-    return jax.tree_util.tree_map(sel, new, old)
-
-
-def _keep_if_none_active(active, new, old):
-    """With availability < 1 every sampled client may be offline; keeping
-    `old` stops the all-zero average from being broadcast in that round."""
-    any_active = jnp.any(active)
-    return jax.tree_util.tree_map(
-        lambda n, o: jnp.where(any_active, n, o), new, old
-    )
-
-
-def _local_train(step, params, opt_state, data, key, n_steps, bs):
-    """n_steps of vmapped full-model SGD with fresh client batches."""
-
-    def body(carry, k):
-        p, o = carry
-        batch = sample_client_batches(k, data, bs)
-        p, o, metrics = jax.vmap(step)(p, o, batch)
-        return (p, o), metrics["loss"]
-
-    (params, opt_state), losses = jax.lax.scan(
-        body, (params, opt_state), jax.random.split(key, n_steps)
-    )
-    return params, opt_state, losses
-
-
-def _gossip_weights(key, m: int, k: int, directed: bool, cand=None):
-    """Random k-neighbor selection mask (no self). `cand` restricts
-    neighbor sampling to the comms fabric's reachable peers."""
-    no_self = ~jnp.eye(m, dtype=bool)
-    cand = no_self if cand is None else cand & no_self
-    mask = select_peers(
-        jax.random.uniform(key, (m, m)), k=k, candidate_mask=cand
-    )
-    if not directed:
-        # re-apply cand after symmetrization: it is not symmetric under
-        # staleness (stale peers lose their column only), and |.T must
-        # not resurrect an edge the network excluded
-        mask = (mask | mask.T) & cand
-    return mask
-
-
-def _net_key(key):
-    """Independent stream for network events (topology/dropout/availability)
-    so adding the fabric leaves the training randomness untouched."""
-    return jax.random.fold_in(key, 0x636F6D)
-
-
 # ---------------------------------------------------------------------------
-# strategy struct
+# strategy struct — the stable external surface around a StrategySpec
 # ---------------------------------------------------------------------------
 
 @dataclass
 class Strategy:
     name: str
     init: Callable        # (key) -> state
-    round: Callable       # (state, data, key) -> (state, metrics)
+    round: Callable       # (state, data, key) -> (state, metrics) [jitted]
     params_for_eval: Callable  # (state) -> leading-M params pytree
     needs_head_finetune: bool = False
     # --- communication budget reporting (repro.comms) ----------------------
@@ -147,126 +95,98 @@ class Strategy:
                                    # active)
     payload_kind: str = "extractor"   # "extractor" | "model" per message
     payload_fraction: float = 1.0     # sparse payloads (DisPFL masks)
+    spec: StrategySpec | None = None  # the declarative round definition
+
+
+def _wrap(spec: StrategySpec, fl: FLConfig, fabric, *, jit=True) -> Strategy:
+    return Strategy(
+        name=spec.name,
+        init=spec.init,
+        round=make_round(spec, fl, fabric, jit=jit),
+        params_for_eval=spec.params_for_eval,
+        needs_head_finetune=spec.needs_head_finetune,
+        fabric=fabric,
+        comm_pattern=spec.comm_pattern,
+        payload_kind=spec.payload_kind,
+        payload_fraction=spec.payload_fraction,
+        spec=spec,
+    )
 
 
 # ---------------------------------------------------------------------------
 # centralized family (fedavg / fedper / fedbabu)
 # ---------------------------------------------------------------------------
 
-def _make_central(cfg, fl, steps_per_epoch, kind: str,
-                  fabric: CommsFabric | None = None) -> Strategy:
+def _init_broadcast(cfg, fl):
+    """Single global init: broadcast client 0 (incl. fedper/babu headers —
+    they diverge through local training)."""
+
+    def init_params(key):
+        keys = jax.random.split(key, fl.num_clients)
+        params = jax.vmap(lambda k: model_mod.init_params(cfg, k))(keys)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[:1], x.shape), params
+        )
+
+    return init_params
+
+
+def stage_train_babu(cfg, fl, opt, n_steps: int, *, stream: str = "train"):
+    """FedBABU local training: extractor phase-e steps with the header
+    structurally frozen; optimizer state covers the extractor only."""
+    phase = make_phase_steps(cfg, opt)
+
+    def stage(state, ctx):
+        e, h = split_params(cfg, state["params"])
+
+        def apply(carry, batch):
+            e_c, o_c = carry
+            e2, o2, met = jax.vmap(phase.phase_e)(e_c, h, o_c, batch)
+            return (e2, o2), met["loss"]
+
+        (new_e, opt_e), losses = scan_train(
+            apply, (e, state["opt"]["e"]), ctx.data, ctx.keys[stream],
+            n_steps, fl.batch_size,
+        )
+        new_e = where_tree(ctx.active, new_e, e)
+        opt_e = where_tree(ctx.active, opt_e, state["opt"]["e"])
+        ctx.metrics["train_loss"] = jnp.mean(losses[-1])
+        return {**state, "params": jax.vmap(merge_params)(new_e, h),
+                "opt": {"e": opt_e}}
+
+    return stage
+
+
+def _central_spec(cfg, fl, steps_per_epoch, kind: str) -> StrategySpec:
     opt = _opt(fl)
-    step = make_full_step(cfg, opt)
-    phase = make_phase_steps(cfg, opt)      # fedbabu: extractor-only train
     n_steps = fl.epochs_extractor * steps_per_epoch
+    init_params = _init_broadcast(cfg, fl)
 
     def init(key):
-        keys = jax.random.split(key, fl.num_clients)
-
-        def one(k):
-            return model_mod.init_params(cfg, k)
-
-        params = jax.vmap(one)(keys)
-        if kind in ("fedavg", "fedper", "fedbabu"):
-            # single global init: broadcast client 0 (incl. fedper/babu
-            # headers — they diverge through local training)
-            params = jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(x[:1], x.shape), params
-            )
+        params = init_params(key)
+        rnd = jnp.zeros((), jnp.int32)
         if kind == "fedbabu":   # extractor-only optimizer state
             e, _ = split_params(cfg, params)
             return {"params": params, "opt": {"e": jax.vmap(opt.init)(e)},
-                    "round": jnp.zeros((), jnp.int32)}
+                    "round": rnd}
         return {"params": params, "opt": jax.vmap(opt.init)(params),
-                "round": jnp.zeros((), jnp.int32)}
+                "round": rnd}
 
-    def round_fn(state, data, key):
-        m = fl.num_clients
-        k_act, k_tr = jax.random.split(key)
-        active = _active_mask(k_act, m, fl.client_sample_ratio)
-        stale = jnp.zeros((m,), jnp.int32)
-        if fabric is not None:
-            _, avail, stale = fabric.round_masks(_net_key(key))
-            active = active & avail
-        params = state["params"]
-
-        # fedbabu trains the extractor with the header frozen structurally;
-        # fedavg/fedper train the full model.
-        if kind == "fedbabu":
-            e, h = split_params(cfg, params)
-
-            def babu_step(e_i, h_i, o_i, b_i):
-                e2, o2, met = phase.phase_e(e_i, h_i, o_i, b_i)
-                return e2, o2, met
-
-            def body(carry, kk):
-                e_c, o_c = carry
-                batch = sample_client_batches(kk, data, fl.batch_size)
-                e_c, o_c, met = jax.vmap(babu_step)(e_c, h, o_c, batch)
-                return (e_c, o_c), met["loss"]
-
-            opt_e = state["opt"]["e"]
-            (new_e, opt_e), losses = jax.lax.scan(
-                body, (e, opt_e), jax.random.split(k_tr, n_steps)
-            )
-            new_e = _where_tree(active, new_e, e)
-            opt_e = _where_tree(active, opt_e, state["opt"]["e"])
-            # central average of active extractors
-            w = active.astype(jnp.float32)
-            w = w / jnp.maximum(jnp.sum(w), 1.0)
-            avg_e = jax.tree_util.tree_map(
-                lambda x: jnp.einsum(
-                    "i,i...->...", w, x.astype(jnp.float32)
-                ).astype(x.dtype),
-                new_e,
-            )
-            bcast_e = jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), avg_e
-            )
-            params = jax.vmap(merge_params)(bcast_e, h)
-            params = _keep_if_none_active(active, params, state["params"])
-            new_state = {"params": params, "opt": {"e": opt_e},
-                         "round": state["round"] + 1}
-            return new_state, {"train_loss": jnp.mean(losses[-1]),
-                               "active": active, "stale": stale}
-
-        new_params, opt_state, losses = _local_train(
-            step, params, state["opt"], data, k_tr, n_steps, fl.batch_size
-        )
-        new_params = _where_tree(active, new_params, params)
-        opt_state = _where_tree(active, opt_state, state["opt"])
-
-        w = active.astype(jnp.float32)
-        w = w / jnp.maximum(jnp.sum(w), 1.0)
-        if kind == "fedavg":
-            shared = new_params        # everything averaged
-        else:                          # fedper: extractor only
-            shared, headers = split_params(cfg, new_params)
-        avg = jax.tree_util.tree_map(
-            lambda x: jnp.einsum(
-                "i,i...->...", w, x.astype(jnp.float32)
-            ).astype(x.dtype),
-            shared,
-        )
-        bcast = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), avg
-        )
-        if kind == "fedavg":
-            params = bcast
-        else:
-            params = jax.vmap(merge_params)(bcast, headers)
-        params = _keep_if_none_active(active, params, state["params"])
-        new_state = {"params": params, "opt": opt_state,
-                     "round": state["round"] + 1}
-        return new_state, {"train_loss": jnp.mean(losses[-1]),
-                           "active": active, "stale": stale}
-
-    return Strategy(
-        name=kind, init=init, round=round_fn,
+    if kind == "fedbabu":
+        train = stage_train_babu(cfg, fl, opt, n_steps)
+    else:
+        train = stage_train_full(cfg, fl, opt, n_steps)
+    share = "model" if kind == "fedavg" else "extractor"
+    return StrategySpec(
+        name=kind,
+        init=init,
+        stages=(stage_plan_star(), train,
+                stage_star_average(cfg, share=share), stage_bump_round()),
         params_for_eval=lambda s: s["params"],
+        key_streams=("act", "train"),
+        comm_pattern="star",
+        payload_kind=share,
         needs_head_finetune=(kind == "fedbabu"),
-        fabric=fabric, comm_pattern="star",
-        payload_kind=("model" if kind == "fedavg" else "extractor"),
     )
 
 
@@ -274,12 +194,58 @@ def _make_central(cfg, fl, steps_per_epoch, kind: str,
 # decentralized gossip family (dfedavgm / dfedpgp / dispfl)
 # ---------------------------------------------------------------------------
 
-def _make_gossip(cfg, fl, steps_per_epoch, kind: str,
-                 fabric: CommsFabric | None = None) -> Strategy:
+def stage_apply_masks():
+    """DisPFL: project each client's params onto its personal sparse mask
+    before local training."""
+
+    def stage(state, ctx):
+        params = jax.tree_util.tree_map(
+            lambda p, mk: p * mk.astype(p.dtype),
+            state["params"], state["mask"],
+        )
+        return {**state, "params": params}
+
+    return stage
+
+
+def stage_evolve_masks(fl, *, stream: str = "grow"):
+    """DisPFL mask evolution: magnitude prune back to the target sparsity
+    (threshold via an O(n) partition, not a full sort) + RigL-style
+    random regrow at rate fl.dispfl_regrow, then re-project."""
+    sparsity, regrow = fl.dispfl_sparsity, fl.dispfl_regrow
+
+    def stage(state, ctx):
+        mixed = state["params"]
+
+        def evolve(leaf, mk, kk):
+            if leaf.ndim <= 1:
+                return mk
+            flat = jnp.abs(leaf).ravel()
+            keep = max(int(flat.size * (1 - sparsity)), 1)
+            kth = flat.size - keep
+            thr = jnp.partition(flat, kth)[kth]
+            new_mk = jnp.abs(leaf) >= thr
+            grown = jax.random.uniform(kk, leaf.shape) > (1.0 - regrow)
+            return new_mk | (grown & ~new_mk)
+
+        leaves, treedef = jax.tree_util.tree_flatten(mixed)
+        mleaves = jax.tree_util.tree_leaves(state["mask"])
+        gkeys = jax.random.split(ctx.keys[stream], len(leaves))
+        new_mask = jax.tree_util.tree_unflatten(
+            treedef,
+            [evolve(l, mk, k) for l, mk, k in zip(leaves, mleaves, gkeys)],
+        )
+        params = jax.tree_util.tree_map(
+            lambda p, mk: p * mk.astype(p.dtype), mixed, new_mask
+        )
+        return {**state, "params": params, "mask": new_mask}
+
+    return stage
+
+
+def _gossip_spec(cfg, fl, steps_per_epoch, kind: str) -> StrategySpec:
     opt = _opt(fl)
-    step = make_full_step(cfg, opt)
     n_steps = fl.epochs_extractor * steps_per_epoch
-    sparsity = 0.5
 
     def init(key):
         keys = jax.random.split(key, fl.num_clients)
@@ -292,7 +258,7 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str,
             def mask_of(leaf, k):
                 if leaf.ndim <= 1:
                     return jnp.ones(leaf.shape, bool)
-                return jax.random.uniform(k, leaf.shape) > sparsity
+                return jax.random.uniform(k, leaf.shape) > fl.dispfl_sparsity
 
             leaves, treedef = jax.tree_util.tree_flatten(params)
             mkeys = jax.random.split(km, len(leaves))
@@ -300,86 +266,21 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str,
             state["mask"] = jax.tree_util.tree_unflatten(treedef, masks)
         return state
 
-    def round_fn(state, data, key):
-        m = fl.num_clients
-        k_act, k_tr, k_nbr, k_grow = jax.random.split(key, 4)
-        active = _active_mask(k_act, m, fl.client_sample_ratio)
-        cand = None
-        stale = jnp.zeros((m,), jnp.int32)
-        if fabric is not None:
-            cand, avail, stale = fabric.round_masks(_net_key(key))
-            active = active & avail
-        params = state["params"]
-
-        if kind == "dispfl":
-            params = jax.tree_util.tree_map(
-                lambda p, mk: p * mk.astype(p.dtype), params, state["mask"]
-            )
-
-        new_params, opt_state, losses = _local_train(
-            step, params, state["opt"], data, k_tr, n_steps, fl.batch_size
-        )
-        new_params = _where_tree(active, new_params, params)
-        opt_state = _where_tree(active, opt_state, state["opt"])
-
-        nbr = _gossip_weights(
-            k_nbr, m, fl.peers_per_round, directed=(kind == "dfedpgp"),
-            cand=cand,
-        )
-        nbr = nbr & active[:, None]    # only active clients gossip
-        weights = selection_to_weights(nbr, include_self=True)
-
-        if kind == "dfedavgm":
-            mixed = aggregate_extractors(new_params, weights)  # full model
-            mixed = _where_tree(active, mixed, new_params)
-            new_state = {"params": mixed, "opt": opt_state,
-                         "round": state["round"] + 1}
-            return new_state, {"train_loss": jnp.mean(losses[-1]),
-                               "active": active, "comm_edges": nbr,
-                               "stale": stale}
-
-        # partial personalization: header personal, extractor gossiped
-        e, h = split_params(cfg, new_params)
-        mixed_e = aggregate_extractors(e, weights)
-        mixed_e = _where_tree(active, mixed_e, e)
-        mixed = jax.vmap(merge_params)(mixed_e, h)
-
-        new_state = {"params": mixed, "opt": opt_state,
-                     "round": state["round"] + 1}
-        if kind == "dispfl":
-            # magnitude prune back to target sparsity + random regrow
-            def evolve(leaf, mk, kk):
-                if leaf.ndim <= 1:
-                    return mk
-                flat = jnp.abs(leaf).ravel()
-                keep = int(flat.size * (1 - sparsity))
-                thr = jnp.sort(flat)[-max(keep, 1)]
-                new_mk = jnp.abs(leaf) >= thr
-                regrow = jax.random.uniform(kk, leaf.shape) > 0.98
-                return new_mk | (regrow & ~new_mk)
-
-            leaves, treedef = jax.tree_util.tree_flatten(mixed)
-            mleaves = jax.tree_util.tree_leaves(state["mask"])
-            gkeys = jax.random.split(k_grow, len(leaves))
-            new_mask = jax.tree_util.tree_unflatten(
-                treedef,
-                [evolve(l, mk, k) for l, mk, k in
-                 zip(leaves, mleaves, gkeys)],
-            )
-            new_state["mask"] = new_mask
-            new_state["params"] = jax.tree_util.tree_map(
-                lambda p, mk: p * mk.astype(p.dtype), mixed, new_mask
-            )
-        return new_state, {"train_loss": jnp.mean(losses[-1]),
-                           "active": active, "comm_edges": nbr,
-                           "stale": stale}
-
-    return Strategy(
-        name=kind, init=init, round=round_fn,
+    plan = stage_plan_gossip(fl, directed=(kind == "dfedpgp"))
+    train = stage_train_full(cfg, fl, opt, n_steps)
+    share = "model" if kind == "dfedavgm" else "extractor"
+    stages = (plan, train, stage_mix(cfg, share=share))
+    if kind == "dispfl":
+        stages = (stage_apply_masks(),) + stages + (stage_evolve_masks(fl),)
+    return StrategySpec(
+        name=kind,
+        init=init,
+        stages=stages + (stage_bump_round(),),
         params_for_eval=lambda s: s["params"],
-        fabric=fabric,
-        payload_kind=("model" if kind == "dfedavgm" else "extractor"),
-        payload_fraction=(1.0 - sparsity if kind == "dispfl" else 1.0),
+        key_streams=("act", "train", "nbr", "grow"),
+        payload_kind=share,
+        payload_fraction=(1.0 - fl.dispfl_sparsity if kind == "dispfl"
+                          else 1.0),
     )
 
 
@@ -387,43 +288,35 @@ def _make_gossip(cfg, fl, steps_per_epoch, kind: str,
 # PFedDST (+ random-selection ablation)
 # ---------------------------------------------------------------------------
 
-def _make_pfeddst(cfg, fl, steps_per_epoch, random_select: bool,
-                  fabric: CommsFabric | None = None) -> Strategy:
+def _pfeddst_spec(cfg, fl, steps_per_epoch, random_select: bool,
+                  ) -> StrategySpec:
+    # lazy import: core.rounds builds on fl.engine (cycle otherwise)
+    from repro.core.rounds import PFEDDST_STREAMS, make_pfeddst_stages
+
     opt = _opt(fl)
     steps = make_phase_steps(cfg, opt)
-    import dataclasses
-
     name = "pfeddst_random" if random_select else "pfeddst"
     fl_used = fl if not random_select else dataclasses.replace(
         fl, selection="random"
     )
 
-    def init(key):
-        return init_population(cfg, key, fl.num_clients, opt, opt)
-
-    def round_fn(state: PopulationState, data, key):
-        cand = cost = avail = None
-        stale = jnp.zeros((fl.num_clients,), jnp.int32)
-        if fabric is not None:
-            # score-driven dynamic graphs steer toward the peers the loss
-            # array l marked informative last round (Algorithm 1 context)
-            cand, avail, stale = fabric.round_masks(
-                _net_key(key), affinity=state.loss_matrix
-            )
-            cost = fabric.cost
-        new_state, metrics = pfeddst_round(
-            cfg, fl_used, steps, state, data, key,
-            steps_per_epoch=steps_per_epoch, probe_size=fl.probe_size,
-            candidate_mask=cand, comm_cost=cost, available=avail,
-        )
-        return new_state, {**metrics, "stale": stale}
-
-    def eval_params(state: PopulationState):
+    def eval_params(state):
         return jax.vmap(merge_params)(state.extractor, state.header)
 
-    return Strategy(
-        name=name, init=init, round=round_fn, params_for_eval=eval_params,
-        fabric=fabric,
+    return StrategySpec(
+        name=name,
+        init=lambda key: init_population(
+            cfg, key, fl.num_clients, opt, opt
+        ),
+        stages=make_pfeddst_stages(
+            cfg, fl_used, steps, steps_per_epoch=steps_per_epoch,
+            probe_size=fl.probe_size,
+        ),
+        params_for_eval=eval_params,
+        key_streams=PFEDDST_STREAMS,
+        # score-driven dynamic graphs steer toward the peers the loss
+        # array l marked informative last round (Algorithm 1 context)
+        affinity=lambda state: state.loss_matrix,
     )
 
 
@@ -437,18 +330,23 @@ STRATEGIES = (
 )
 
 
+def make_spec(name: str, cfg: ModelConfig, fl: FLConfig,
+              steps_per_epoch: int = 2) -> StrategySpec:
+    """The declarative spec for a registered strategy (engine input)."""
+    if name in ("fedavg", "fedper", "fedbabu"):
+        return _central_spec(cfg, fl, steps_per_epoch, name)
+    if name in ("dfedavgm", "dfedpgp", "dispfl"):
+        return _gossip_spec(cfg, fl, steps_per_epoch, name)
+    if name == "pfeddst":
+        return _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=False)
+    if name == "pfeddst_random":
+        return _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=True)
+    raise KeyError(f"unknown strategy {name!r}; available: {STRATEGIES}")
+
+
 def make_strategy(name: str, cfg: ModelConfig, fl: FLConfig,
-                  steps_per_epoch: int = 2) -> Strategy:
+                  steps_per_epoch: int = 2, *, jit: bool = True) -> Strategy:
     # fl.comms = None → legacy scalar-cost path (no fabric, no masking)
     fabric = make_fabric(fl.comms, fl.num_clients, cost_scale=fl.comm_cost)
-    if name in ("fedavg", "fedper", "fedbabu"):
-        return _make_central(cfg, fl, steps_per_epoch, name, fabric)
-    if name in ("dfedavgm", "dfedpgp", "dispfl"):
-        return _make_gossip(cfg, fl, steps_per_epoch, name, fabric)
-    if name == "pfeddst":
-        return _make_pfeddst(cfg, fl, steps_per_epoch, random_select=False,
-                             fabric=fabric)
-    if name == "pfeddst_random":
-        return _make_pfeddst(cfg, fl, steps_per_epoch, random_select=True,
-                             fabric=fabric)
-    raise KeyError(f"unknown strategy {name!r}; available: {STRATEGIES}")
+    spec = make_spec(name, cfg, fl, steps_per_epoch)
+    return _wrap(spec, fl, fabric, jit=jit)

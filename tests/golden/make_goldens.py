@@ -1,0 +1,84 @@
+"""Regenerate tests/golden/engine_parity.json.
+
+The fingerprints were captured from the PRE-engine strategy
+implementations (PR 1 tree, commit a495a80) so the engine rewrite in
+repro.fl.engine can be held to fixed-seed parity with them. Re-running
+this script against the engine tree must reproduce the same file — that
+is exactly what tests/test_engine.py asserts, datum by datum.
+
+    PYTHONPATH=src python tests/golden/make_goldens.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import CommsConfig, FLConfig
+from repro.data.synthetic import client_datasets_cifar
+from repro.fl import STRATEGIES, evaluate_population, make_strategy
+
+OUT = os.path.join(os.path.dirname(__file__), "engine_parity.json")
+
+
+def fingerprint(tree):
+    """Order-stable per-leaf [sum, abs-sum], accumulated in host f64."""
+    out = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        x = np.asarray(leaf, np.float64)
+        out.append([float(x.sum()), float(np.abs(x).sum())])
+    return out
+
+
+def run(name, fl, data, rounds=2):
+    cfg = get_config("resnet18-cifar").reduced()
+    strat = make_strategy(name, cfg, fl, steps_per_epoch=1)
+    state = strat.init(jax.random.PRNGKey(1))
+    train = {"images": data["train_x"], "labels": data["train_y"]}
+    for r in range(rounds):
+        state, metrics = strat.round(
+            state, train, jax.random.PRNGKey(2 + r)
+        )
+    params = strat.params_for_eval(state)
+    acc, _ = evaluate_population(cfg, params, data["test_x"], data["test_y"])
+    return {
+        "params": fingerprint(params),
+        "accuracy": float(acc),
+        "active_sum": int(jnp.sum(metrics["active"])),
+    }
+
+
+def main():
+    base_fl = FLConfig(
+        num_clients=6, peers_per_round=2, batch_size=8,
+        client_sample_ratio=0.5, epochs_extractor=1, epochs_header=1,
+        probe_size=8,
+    )
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(0), base_fl.num_clients, num_classes=10,
+        classes_per_client=2, samples_per_class=20, image_size=16,
+    )
+    golden = {"default_comms": {}, "ring_events": {}}
+    for name in STRATEGIES:
+        golden["default_comms"][name] = run(name, base_fl, data)
+        print("default ", name, golden["default_comms"][name]["accuracy"])
+    ring_fl = dataclasses.replace(
+        base_fl,
+        comms=CommsConfig(topology="ring", availability=0.9,
+                          p_link_drop=0.1),
+    )
+    for name in ("fedavg", "dfedavgm", "dispfl", "pfeddst"):
+        golden["ring_events"][name] = run(name, ring_fl, data)
+        print("ring    ", name, golden["ring_events"][name]["accuracy"])
+    with open(OUT, "w") as f:
+        json.dump(golden, f, indent=1)
+    print("wrote", OUT)
+
+
+if __name__ == "__main__":
+    main()

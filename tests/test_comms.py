@@ -320,6 +320,7 @@ def test_gossip_symmetrization_respects_candidates():
         assert not nbr.diagonal().any()
 
 
+@pytest.mark.slow
 def test_simulator_reports_comm_budget(tiny_cnn):
     from repro.data.synthetic import client_datasets_cifar
     from repro.fl import run_experiment

@@ -4,6 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# full population-simulator rounds for all 8 strategies — slow tier
+pytestmark = pytest.mark.slow
+
 from repro.configs.base import FLConfig
 from repro.data.synthetic import client_datasets_cifar
 from repro.fl import STRATEGIES, evaluate_population, make_strategy
