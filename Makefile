@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-fast test deps bench-comms bench-round
+.PHONY: verify verify-fast test deps bench-comms bench-round bench-async \
+	docs-check
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -22,3 +23,11 @@ bench-comms:
 
 bench-round:
 	$(PY) benchmarks/round_bench.py
+
+# sync vs semi-async accuracy-vs-wall-clock → benchmarks/results/BENCH_async.json
+bench-async:
+	$(PY) benchmarks/async_bench.py
+
+# markdown link check over README + docs/ (also a CI job)
+docs-check:
+	$(PY) tools/check_links.py README.md docs

@@ -1,0 +1,177 @@
+"""Semi-async vs synchronous rounds under device heterogeneity —
+emits BENCH_async.json (accuracy vs simulated device wall-clock).
+
+For each straggler fraction f ∈ {0, 0.25, 0.5} (bimodal device profile,
+slowdown 4×) the bench runs the same experiment twice:
+
+  sync   pfeddst        — every round stalls on the slowest sampled
+                          client (round wall-time = straggler wall-time)
+  async  pfeddst_async  — a deadline slightly above the fast-client
+                          wall-time gates stragglers out; peers pull
+                          their last published version from the
+                          versioned peer store, discounted by the
+                          (1+lag)^(−α) staleness weights
+
+and reports the accuracy trajectory against History.device_time_s (the
+cumulative simulated device wall-clock). Both runs get (approximately)
+the SAME device wall-clock budget: the sync run executes `--rounds`
+rounds, and the async round count is scaled by the expected per-round
+speedup (straggler stall ÷ deadline), so `acc_at_budget` — each run's
+accuracy at the largest eval point not exceeding the shared budget —
+compares equal wall-clock, not equal rounds. At f = 0.5 the semi-async
+run fits ~slowdown× more rounds into the budget, which is the
+accuracy-vs-wall-clock win the scenario exists to show.
+
+    PYTHONPATH=src python benchmarks/async_bench.py
+    PYTHONPATH=src python benchmarks/async_bench.py \
+        --clients 16 --rounds 40 --fractions 0 0.5
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import CommsConfig, DeviceProfile, FLConfig
+from repro.data.synthetic import client_datasets_cifar
+from repro.fl import run_experiment
+from repro.fl.hetero import local_wall_times, sample_device_vectors
+from repro.fl.strategies import local_train_steps
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def acc_at_budget(run: dict, budget_s: float):
+    """Accuracy at the last eval point whose cumulative device
+    wall-clock is within `budget_s` (None if no eval point qualifies)."""
+    acc = None
+    for a, t in zip(run["accuracy"], run["device_time_s"]):
+        if t <= budget_s + 1e-9:
+            acc = a
+    return acc
+
+
+def run_pair(cfg, fl_base, data, *, rounds, eval_every, steps_per_epoch,
+             fraction, slowdown, seed):
+    profile = DeviceProfile(
+        family="bimodal" if fraction > 0 else "uniform",
+        straggler_fraction=fraction, straggler_slowdown=slowdown,
+        seed=seed,
+    )
+    # deadline = fast-client round wall-time + 5% slack: completes the
+    # fast fleet, gates every straggler. Step count from the same source
+    # the hetero runtime prices with, so the budgets stay equal.
+    n_local = local_train_steps("pfeddst", fl_base, steps_per_epoch)
+    devices = sample_device_vectors(profile, fl_base.num_clients)
+    wall = local_wall_times(devices, n_local, profile)
+    deadline = float(wall.min()) * 1.05
+
+    fl_sync = dataclasses.replace(fl_base, device_profile=profile)
+    fl_async = dataclasses.replace(
+        fl_base, device_profile=profile, deadline_s=deadline,
+    )
+    # equal DEVICE-TIME budgets, not equal round counts: the async run
+    # fits speedup× more rounds into the same simulated wall-clock
+    speedup = float(wall.max()) / deadline
+    rounds_async = max(rounds, int(round(rounds * speedup)))
+    out = {"straggler_fraction": fraction, "deadline_s": deadline,
+           "rounds_sync": rounds, "rounds_async": rounds_async}
+    for mode, name, fl, n_rounds in (
+            ("sync", "pfeddst", fl_sync, rounds),
+            ("async", "pfeddst_async", fl_async, rounds_async)):
+        hist = run_experiment(
+            name, cfg, fl, data, num_rounds=n_rounds,
+            eval_every=eval_every,
+            steps_per_epoch=steps_per_epoch, seed=seed, verbose=False,
+        )
+        out[mode] = {
+            "strategy": name,
+            "accuracy": [float(a) for a in hist.accuracy],
+            "device_time_s": [float(t) for t in hist.device_time_s],
+            "final_accuracy": float(hist.accuracy[-1]),
+            "total_device_time_s": float(hist.device_time_s[-1]),
+            "mean_round_wall_s": sum(hist.round_device_wall_s)
+            / max(len(hist.round_device_wall_s), 1),
+            "mean_eff_lag": sum(hist.round_eff_lag)
+            / max(len(hist.round_eff_lag), 1),
+        }
+        print(f"  f={fraction:4.2f} {mode:5s} acc={out[mode]['final_accuracy']:.4f} "
+              f"device_time={out[mode]['total_device_time_s']:8.1f}s "
+              f"eff_lag={out[mode]['mean_eff_lag']:.2f}", flush=True)
+    budget = min(out["sync"]["total_device_time_s"],
+                 out["async"]["total_device_time_s"])
+    out["budget_s"] = budget
+    out["acc_at_budget"] = {
+        "sync": acc_at_budget(out["sync"], budget),
+        "async": acc_at_budget(out["async"], budget),
+    }
+    print(f"  f={fraction:4.2f} acc@budget({budget:.1f}s): "
+          f"sync={out['acc_at_budget']['sync']} "
+          f"async={out['acc_at_budget']['async']}", flush=True)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=12)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--eval-every", type=int, default=2)
+    ap.add_argument("--fractions", type=float, nargs="*",
+                    default=[0.0, 0.25, 0.5])
+    ap.add_argument("--slowdown", type=float, default=4.0)
+    ap.add_argument("--sample-ratio", type=float, default=0.5)
+    ap.add_argument("--peers", type=int, default=3)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--image-size", type=int, default=16)
+    ap.add_argument("--samples-per-class", type=int, default=80)
+    ap.add_argument("--probe-size", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out",
+                    default=os.path.join(RESULTS, "BENCH_async.json"))
+    args = ap.parse_args(argv)
+
+    cfg = get_config("resnet18-cifar").reduced()
+    # paper local-epoch recipe (K_e=5, K_h=1): enough local progress per
+    # round that accuracy is still climbing at --rounds — the regime
+    # where wall-clock budget, not round count, is the binding resource
+    fl_base = FLConfig(
+        num_clients=args.clients, peers_per_round=args.peers,
+        batch_size=args.batch_size, client_sample_ratio=args.sample_ratio,
+        probe_size=args.probe_size, seed=args.seed,
+        comms=CommsConfig(stale_mode="serve"),
+    )
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(args.seed), args.clients, classes_per_client=2,
+        samples_per_class=args.samples_per_class,
+        image_size=args.image_size,
+    )
+    out = {
+        "config": {
+            "model": cfg.name,
+            "clients": args.clients,
+            "rounds": args.rounds,
+            "sample_ratio": args.sample_ratio,
+            "slowdown": args.slowdown,
+            "backend": jax.default_backend(),
+        },
+        "sweeps": [],
+    }
+    for fraction in args.fractions:
+        out["sweeps"].append(run_pair(
+            cfg, fl_base, data, rounds=args.rounds,
+            eval_every=args.eval_every, steps_per_epoch=1,
+            fraction=fraction, slowdown=args.slowdown, seed=args.seed,
+        ))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

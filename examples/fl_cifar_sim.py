@@ -23,6 +23,16 @@ time next to accuracy:
 
     PYTHONPATH=src python examples/fl_cifar_sim.py \
         --topology ring --link-model hetero
+
+Device heterogeneity + semi-async rounds (repro.fl.hetero): give the
+fleet a device profile and a round deadline, and run the semi-async
+PFedDST variant against the synchronous one — the history then also
+reports simulated device wall-clock and effective staleness:
+
+    PYTHONPATH=src python examples/fl_cifar_sim.py \
+        --strategies pfeddst pfeddst_async \
+        --device-profile bimodal --straggler-fraction 0.5 \
+        --deadline 1.2 --staleness-alpha 0.5
 """
 import argparse
 
@@ -30,7 +40,7 @@ import jax
 
 from repro.comms.topology import TOPOLOGIES
 from repro.configs import get_config
-from repro.configs.base import CommsConfig, FLConfig
+from repro.configs.base import CommsConfig, DeviceProfile, FLConfig
 from repro.data.synthetic import client_datasets_cifar
 from repro.fl import run_experiment
 
@@ -46,23 +56,55 @@ def main():
     ap.add_argument("--link-model", default="uniform",
                     choices=["uniform", "hetero", "geometric"])
     ap.add_argument("--p-link-drop", type=float, default=0.0)
+    ap.add_argument("--device-profile", default=None,
+                    choices=["uniform", "bimodal", "zipf"],
+                    help="device capability family (repro.fl.hetero); "
+                         "omit for the paper's homogeneous fleet")
+    ap.add_argument("--straggler-fraction", type=float, default=0.25,
+                    help="bimodal profile: fraction of slow devices")
+    ap.add_argument("--straggler-slowdown", type=float, default=4.0,
+                    help="bimodal profile: slow-device slowdown factor")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="semi-async round deadline in simulated seconds "
+                         "(0 = no deadline / synchronous rounds)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="(1+lag)^(-alpha) staleness discount for "
+                         "semi-async aggregation")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     comms = CommsConfig(
         topology=args.topology, link_model=args.link_model,
         p_link_drop=args.p_link_drop, graph_seed=args.seed,
+        # with a finite deadline, stale peers serve their last published
+        # version (versioned peer store) instead of dropping out
+        stale_mode="serve" if args.deadline > 0 else "drop",
+    )
+    profile = None
+    if args.device_profile is not None:
+        profile = DeviceProfile(
+            family=args.device_profile,
+            straggler_fraction=args.straggler_fraction,
+            straggler_slowdown=args.straggler_slowdown,
+            seed=args.seed,
+        )
+    hetero_kw = dict(
+        device_profile=profile,
+        deadline_s=args.deadline if args.deadline > 0 else float("inf"),
+        staleness_alpha=args.staleness_alpha,
     )
 
     if args.paper_scale:
         cfg = get_config("resnet18-cifar")          # full ResNet-18
         fl = FLConfig(num_clients=16, peers_per_round=4, batch_size=128,
-                      client_sample_ratio=0.25, probe_size=16, comms=comms)
+                      client_sample_ratio=0.25, probe_size=16, comms=comms,
+                      **hetero_kw)
         rounds, img, spc, spe = 60, 32, 120, 2
     else:
         cfg = get_config("resnet18-cifar").reduced()
         fl = FLConfig(num_clients=12, peers_per_round=4, batch_size=32,
-                      client_sample_ratio=0.34, probe_size=8, comms=comms)
+                      client_sample_ratio=0.34, probe_size=8, comms=comms,
+                      **hetero_kw)
         rounds, img, spc, spe = 30, 16, 80, 1
 
     data = client_datasets_cifar(
@@ -77,11 +119,17 @@ def main():
             steps_per_epoch=spe, seed=args.seed,
         )
         final[s] = (hist.accuracy[-1], hist.comm_bytes[-1],
-                    hist.net_time_s[-1])
+                    hist.net_time_s[-1], hist.device_time_s[-1])
     print(f"\nfinal personalized accuracy ({args.topology} topology, "
-          f"{args.link_model} links):")
-    for s, (a, b, t) in final.items():
-        print(f"  {s:16s} acc={a:.4f}  comm={b / 1e6:.2f}MB  net={t:.1f}s")
+          f"{args.link_model} links"
+          + (f", {args.device_profile} devices" if args.device_profile
+             else "") + "):")
+    for s, (a, b, t, d) in final.items():
+        line = (f"  {s:16s} acc={a:.4f}  comm={b / 1e6:.2f}MB  "
+                f"net={t:.1f}s")
+        if d:
+            line += f"  device={d:.1f}s"
+        print(line)
 
 
 if __name__ == "__main__":

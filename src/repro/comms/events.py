@@ -36,7 +36,10 @@ def drop_links(key, adj, p_drop: float) -> jnp.ndarray:
 def staleness_rounds(key, m: int, p_stale: float,
                      max_staleness: int) -> jnp.ndarray:
     """(M,) int32 — rounds by which each client's published update lags
-    (0 = fresh). Stale clients are dropped from candidate columns."""
+    (0 = fresh). What a lag means is `CommsConfig.stale_mode`'s call:
+    "drop" removes the stale candidate column (legacy semantics);
+    "serve" keeps the peer selectable and versioned strategies pull its
+    lag-rounds-old snapshot from the repro.fl.hetero PeerStore."""
     if p_stale <= 0.0:
         return jnp.zeros((m,), jnp.int32)
     k_who, k_lag = jax.random.split(key)
@@ -50,12 +53,17 @@ def apply_events(key, adj, cfg) -> tuple[jnp.ndarray, jnp.ndarray,
     """(candidate_mask, available, staleness) for one round.
 
     candidate_mask: adjacency after link dropouts, minus offline rows and
-    columns, minus stale columns — exactly the reachable-and-fresh peers.
+    columns. Under the default `stale_mode="drop"` stale columns are
+    also removed (reachable-and-fresh peers only); under "serve" they
+    stay — the returned `staleness` lag then tells versioned strategies
+    which published snapshot each peer serves (repro.fl.hetero).
     """
     m = adj.shape[0]
     k_drop, k_avail, k_stale = jax.random.split(key, 3)
     cand = drop_links(k_drop, adj, cfg.p_link_drop)
     avail = availability_mask(k_avail, m, cfg.availability)
     stale = staleness_rounds(k_stale, m, cfg.p_stale, cfg.max_staleness)
-    cand = cand & avail[:, None] & avail[None, :] & (stale == 0)[None, :]
+    cand = cand & avail[:, None] & avail[None, :]
+    if cfg.stale_mode != "serve":
+        cand = cand & (stale == 0)[None, :]
     return cand, avail, stale

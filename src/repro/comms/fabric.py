@@ -23,7 +23,12 @@ import numpy as np
 
 from repro.comms import events as events_mod
 from repro.comms import topology as topo_mod
-from repro.comms.linkcost import LinkModel, cost_scores, make_link_model
+from repro.comms.linkcost import (
+    LinkModel,
+    cost_scores,
+    make_link_model,
+    scale_by_channel_rate,
+)
 from repro.comms.transport import (
     TrafficStats,
     simulate_exchange,
@@ -32,12 +37,20 @@ from repro.comms.transport import (
 
 
 class CommsFabric:
-    def __init__(self, cfg, m: int, *, cost_scale: float = 1.0):
+    def __init__(self, cfg, m: int, *, cost_scale: float = 1.0,
+                 channel_rate=None):
         """cfg: CommsConfig; m: population size; cost_scale: the paper's
-        scalar comm_cost c — the uniform-network value of the c matrix."""
+        scalar comm_cost c — the uniform-network value of the c matrix.
+        channel_rate: optional (M,) per-client relative link rates from a
+        device profile (repro.fl.hetero) — scales the link model so both
+        the traffic accounting and the Eq. 9 `c` matrix see the device's
+        channel (uniform rates leave everything bit-for-bit unchanged)."""
         self.cfg = cfg
         self.m = m
-        self.link: LinkModel = make_link_model(cfg, m)
+        link = make_link_model(cfg, m)
+        if channel_rate is not None:
+            link = scale_by_channel_rate(link, channel_rate)
+        self.link: LinkModel = link
         self.cost = jnp.asarray(cost_scores(self.link, cost_scale))
         adj = topo_mod.make_topology(
             cfg.topology, m, cfg=cfg, seed=cfg.graph_seed
@@ -105,8 +118,11 @@ class CommsFabric:
         )
 
 
-def make_fabric(comms_cfg, m: int, *, cost_scale: float = 1.0):
+def make_fabric(comms_cfg, m: int, *, cost_scale: float = 1.0,
+                channel_rate=None):
     """CommsFabric from a CommsConfig, or None for the legacy scalar path."""
     if comms_cfg is None:
         return None
-    return CommsFabric(comms_cfg, m, cost_scale=cost_scale)
+    return CommsFabric(
+        comms_cfg, m, cost_scale=cost_scale, channel_rate=channel_rate
+    )

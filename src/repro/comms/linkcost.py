@@ -61,6 +61,29 @@ def cost_scores(link: LinkModel, scale: float = 1.0) -> np.ndarray:
     return c.astype(np.float32)
 
 
+def scale_by_channel_rate(link: LinkModel, channel_rate) -> LinkModel:
+    """Scale a LinkModel by per-client relative channel rates
+    (repro.fl.hetero DeviceVectors.channel_rate).
+
+    A link runs at the slower endpoint's rate (same convention as
+    `hetero_links`): bandwidth scales with `min(rate_i, rate_j)`,
+    latency and energy inversely. Uniform rates (all exactly 1.0) leave
+    the model bit-for-bit unchanged — the synchronous-equivalence
+    guarantee of the semi-async path relies on this.
+    """
+    rate = np.asarray(channel_rate, np.float64)
+    if rate.shape != (link.num_clients,):
+        raise ValueError(
+            f"channel_rate must be ({link.num_clients},), got {rate.shape}"
+        )
+    pair = np.minimum(rate[:, None], rate[None, :])
+    return LinkModel(
+        bandwidth=link.bandwidth * pair,
+        latency_s=link.latency_s / pair,
+        energy_j_per_byte=link.energy_j_per_byte / pair,
+    )
+
+
 # ---------------------------------------------------------------------------
 # generators
 # ---------------------------------------------------------------------------

@@ -6,6 +6,7 @@ from __future__ import annotations
 
 from repro.configs.base import (
     CommsConfig,
+    DeviceProfile,
     FLConfig,
     INPUT_SHAPES,
     InputShape,
@@ -54,6 +55,8 @@ def get_config(name: str) -> ModelConfig:
 __all__ = [
     "ARCH_REGISTRY",
     "ASSIGNED_ARCHS",
+    "CommsConfig",
+    "DeviceProfile",
     "FLConfig",
     "INPUT_SHAPES",
     "InputShape",

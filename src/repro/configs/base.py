@@ -182,6 +182,39 @@ INPUT_SHAPES = {
 
 
 # ---------------------------------------------------------------------------
+# Device-heterogeneity config (repro.fl.hetero)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """Per-client device capability model (repro.fl.hetero).
+
+    Sampled once per experiment into three (M,) vectors — relative
+    compute speed, channel rate, and energy scale — that feed (a) the
+    per-client local-training wall-time of the semi-async deadline
+    engine and (b) the link-cost `c` matrix of the Eq. 9 peer score
+    (a slow channel makes a peer less attractive to pull).
+
+    Families:
+      uniform   every device identical (speed 1.0) — the paper's
+                implicit assumption; the semi-async machinery
+                degenerates exactly to the synchronous protocol.
+      bimodal   `straggler_fraction` of clients run `straggler_slowdown`
+                times slower — the classic fast-fleet + stragglers mix.
+      zipf      speed ∝ rank^(−zipf_exponent) over a random permutation
+                of clients — a long-tailed capability distribution.
+    """
+    family: str = "uniform"            # uniform | bimodal | zipf
+    straggler_fraction: float = 0.25   # bimodal: fraction of slow devices
+    straggler_slowdown: float = 4.0    # bimodal: slow-device speed = 1/this
+    zipf_exponent: float = 1.1         # zipf: speed_i = rank_i^(−exponent)
+    step_time_s: float = 0.1           # reference-device seconds / local step
+    comm_s: float = 0.5                # reference payload transfer seconds
+    rate_follows_speed: bool = True    # slow compute ⇒ equally slow channel
+    seed: int = 0                      # device-vector sampling seed
+
+
+# ---------------------------------------------------------------------------
 # Decentralized communication fabric config (repro.comms)
 # ---------------------------------------------------------------------------
 
@@ -218,10 +251,23 @@ class CommsConfig:
     p_stale: float = 0.0        # prob. a client's update misses the deadline
     max_staleness: int = 3      # staleness horizon (rounds); the sampled
                                 # lag is reported as History.round_stale_lag
+    stale_mode: str = "drop"    # "drop": a stale peer loses its candidate
+                                # column (legacy semantics); "serve": the
+                                # peer stays selectable and versioned
+                                # strategies (repro.fl.hetero PeerStore)
+                                # pull its lag-rounds-old published
+                                # snapshot instead
 
     # --- payload ------------------------------------------------------------
     payload_bits: int = 0       # quantized bits/param (0 → native dtype)
     msg_overhead_bytes: int = 0 # fixed per-message framing overhead
+
+    def __post_init__(self):
+        if self.stale_mode not in ("drop", "serve"):
+            raise ValueError(
+                f"stale_mode must be 'drop' or 'serve', "
+                f"got {self.stale_mode!r}"
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -254,3 +300,17 @@ class FLConfig:
     seed: int = 0
     # network model; None → legacy scalar-cost path (no candidate masking)
     comms: Optional[CommsConfig] = field(default_factory=CommsConfig)
+    # --- device heterogeneity + semi-async rounds (repro.fl.hetero) --------
+    # None → every device identical (no wall-time accounting in History)
+    device_profile: Optional[DeviceProfile] = None
+    # per-round deadline (seconds of simulated device time). inf / <= 0 →
+    # synchronous rounds: the round stalls on the slowest sampled client.
+    # Finite → semi-async: clients whose round wall-time exceeds the
+    # deadline complete one update every ceil(wall/deadline) rounds and
+    # are served from the versioned peer store in between.
+    deadline_s: float = float("inf")
+    # polynomial staleness-discount exponent for semi-async aggregation:
+    # a version `lag` rounds old mixes with weight (1 + lag)^(−alpha)
+    staleness_alpha: float = 0.5
+    # ring-buffer depth V of the versioned peer store (pfeddst_async)
+    version_depth: int = 4

@@ -15,20 +15,47 @@ import jax.numpy as jnp
 
 
 def selection_to_weights(select_mask, *, include_self: bool = True,
-                         data_fractions=None):
+                         data_fractions=None, column_scale=None):
     """bool (M,M) → row-stochastic float32 (M,M) aggregation weights.
 
     data_fractions: optional (M,) n_j weights (Eq. 5 weighting); None =
     simple average (the paper's 'e.g., simple average').
+    column_scale: optional (M,) per-column pre-normalization scale that
+    EXEMPTS the diagonal (a client's own contribution is never scaled) —
+    the hook `staleness_weights` discounts stale peers through. None
+    leaves the arithmetic bit-for-bit identical to the unscaled path.
     """
     m = select_mask.shape[0]
     w = select_mask.astype(jnp.float32)
     if include_self:
         w = jnp.maximum(w, jnp.eye(m, dtype=jnp.float32))
+    if column_scale is not None:
+        w = w * jnp.where(jnp.eye(m, dtype=bool), 1.0,
+                          column_scale[None, :])
     if data_fractions is not None:
         w = w * data_fractions[None, :]
     denom = jnp.sum(w, axis=1, keepdims=True)
     return w / jnp.maximum(denom, 1e-12)
+
+
+def staleness_weights(select_mask, lag, *, alpha: float,
+                      include_self: bool = True, data_fractions=None):
+    """Row-stochastic mixing weights with a polynomial staleness
+    discount (semi-async aggregation, repro.fl.hetero).
+
+    Column j's contribution is scaled by `(1 + lag_j)^(−alpha)` — a
+    version `lag` rounds old counts less, à la buffered asynchronous
+    FL — before row normalization. The self column (diagonal) is always
+    fresh and never discounted. With `lag == 0` everywhere this is
+    bit-for-bit `selection_to_weights(mask, include_self=True)`: the
+    discount is exactly 1.0 and multiplication by 1.0 is exact, which
+    the synchronous-equivalence guarantee of `pfeddst_async` relies on.
+    """
+    discount = jnp.power(1.0 + lag.astype(jnp.float32), -alpha)
+    return selection_to_weights(
+        select_mask, include_self=include_self,
+        data_fractions=data_fractions, column_scale=discount,
+    )
 
 
 def aggregate_extractors(stacked_extractor, weights):

@@ -24,6 +24,9 @@ class PopulationState(NamedTuple):
     loss_matrix: Any     # (M, M) f32 — loss array l (Eq. 6 cache)
     last_selected: Any   # (M, M) i32 — peer recency array t (−1 = never)
     round: Any           # () i32
+    # versioned peer store (repro.fl.hetero PeerStore) — only the
+    # semi-async specs carry one; None (an empty pytree) otherwise
+    store: Any = None
 
 
 def init_population(

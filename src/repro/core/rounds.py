@@ -12,7 +12,10 @@ Round structure (per active client i, all vmapped/einsum'd over M):
 The round is expressed as repro.fl.engine stages (`make_pfeddst_stages`):
 score_select → aggregate → phase-e → phase-h → update_context, so the
 PFedDST spec in fl/strategies.py and the standalone `pfeddst_round`
-entry point below execute the exact same code.
+entry point below execute the exact same code. Passing a
+`repro.fl.hetero.HeteroRuntime` (the `pfeddst_async` spec) wraps the
+same stages with a deadline gate, versioned-peer-store serving, and
+staleness-weighted aggregation — see `make_pfeddst_stages`.
 
 Client sampling (§III-A, ratio 0.1): inactive clients keep their state;
 they remain selectable as peers (their parameters are still on the
@@ -61,8 +64,29 @@ def make_pfeddst_stages(
     steps_per_epoch: int = 1,
     probe_size: int = 64,
     use_score_kernel: bool = False,
+    hetero=None,
 ):
-    """Algorithm 1 as engine stages over a PopulationState."""
+    """Algorithm 1 as engine stages over a PopulationState.
+
+    hetero: optional `repro.fl.hetero.HeteroRuntime` — the semi-async
+    variant (`pfeddst_async`). It prepends the deadline gate, scores and
+    aggregates against the versioned peer store's *served* snapshots
+    (Eq. 7 header distances use the version a peer actually publishes;
+    the pull lag is discounted by `(1+lag)^(−α)` mixing weights), and
+    appends a publish stage. The Eq. 6 loss-disparity rows are
+    unaffected: they evaluate the (always fresh) row-client's own model
+    on probe *data*, which does not version. With a uniform profile and
+    an infinite deadline every hetero operation is a bitwise identity,
+    so the stage tuple reproduces the synchronous trace exactly.
+    """
+    if hetero is not None:
+        from repro.fl.hetero import (
+            pull_staleness,
+            stage_deadline_gate,
+            store_publish,
+            store_serve,
+        )
+        from repro.core.aggregation import staleness_weights
 
     def score_select(state: PopulationState, ctx: RoundContext):
         # ---- 1. scoring — Eq. 6 restricted to the sampled rows ------------
@@ -75,8 +99,31 @@ def make_pfeddst_stages(
         )
         s_l_rows = loss_disparity_rows(cfg, row_params, probe)   # (n_act, M)
         s_l = state.loss_matrix.at[ctx.sampled_idx].set(s_l_rows)
+        if hetero is not None:
+            # serve each peer's published snapshot (channel lag picks an
+            # older ring slot); Eq. 7 sees the header actually pulled.
+            # ACTIVE clients' columns are their live state: a participant
+            # exchanges in real time (and mixes its own diagonal from its
+            # live params, never a stale self-snapshot) — only absent
+            # peers are served from the store. Their value-staleness
+            # (deadline misses since last publish) still discounts them
+            # via store.lag below.
+            ctx.store = state.store
+            served, age = store_serve(state.store, state.round, ctx.stale)
+            served = {
+                "e": where_tree(ctx.active, state.extractor, served["e"]),
+                "h": where_tree(ctx.active, state.header, served["h"]),
+            }
+            # a live-served column is current: age 0, like pull_staleness
+            age = jnp.where(ctx.active, 0, age)
+            lag = pull_staleness(state.store, ctx.stale, hetero.depth,
+                                 active=ctx.active)
+            ctx.aux.update(served=served, serve_age=age, pull_lag=lag)
+            header_view = served["h"]
+        else:
+            header_view = state.header
         s_d = header_distance_matrix(
-            flatten_headers(state.header), use_kernel=use_score_kernel
+            flatten_headers(header_view), use_kernel=use_score_kernel
         )                                                        # Eq. 7
         s_p = recency_scores(
             state.last_selected, state.round, fl.recency_lambda
@@ -107,16 +154,35 @@ def make_pfeddst_stages(
             )
         mask = mask & ctx.active[:, None]
 
+        if hetero is not None:
+            lag = ctx.aux["pull_lag"]
+            weights = staleness_weights(mask, lag, alpha=hetero.alpha)
+            lagf = lag.astype(jnp.float32)
+            n_edges = jnp.maximum(jnp.sum(mask), 1)
+            ctx.metrics["eff_lag_mean"] = (
+                jnp.sum(jnp.where(mask, lagf[None, :], 0.0)) / n_edges
+            )
+            ctx.metrics["eff_lag_max"] = jnp.max(
+                jnp.where(mask, lag[None, :], 0)
+            )
+            ctx.metrics["serve_age_mean"] = (
+                jnp.sum(jnp.where(mask,
+                                  ctx.aux["serve_age"][None, :].astype(
+                                      jnp.float32), 0.0)) / n_edges
+            )
+        else:
+            weights = selection_to_weights(mask, include_self=True)
         ctx.plan = ExchangePlan(
-            "p2p", active=ctx.active, edges=mask,
-            weights=selection_to_weights(mask, include_self=True),
+            "p2p", active=ctx.active, edges=mask, weights=weights,
         )
         ctx.aux.update(s_l=s_l, s_l_rows=s_l_rows, s_d=s_d, scores=scores)
         return state
 
     def aggregate(state: PopulationState, ctx: RoundContext):
         # ---- 3. aggregate extractors --------------------------------------
-        agg_e = aggregate_extractors(state.extractor, ctx.plan.weights)
+        src_e = ctx.aux["served"]["e"] if hetero is not None \
+            else state.extractor
+        agg_e = aggregate_extractors(src_e, ctx.plan.weights)
         ctx.aux["agg_e"] = where_tree(ctx.active, agg_e, state.extractor)
         return state
 
@@ -187,7 +253,23 @@ def make_pfeddst_stages(
             round=state.round + 1,
         )
 
-    return (score_select, aggregate, phase_e, phase_h, update_context)
+    if hetero is None:
+        return (score_select, aggregate, phase_e, phase_h, update_context)
+
+    def publish(state: PopulationState, ctx: RoundContext):
+        # ---- 6.5 publish — completers' snapshots enter the ring -----------
+        store = store_publish(
+            state.store,
+            {"e": state.extractor, "h": state.header},
+            ctx.active,
+            ctx.aux["deadline_blocked"],
+            state.round,
+        )
+        return state._replace(store=store)
+
+    gate = stage_deadline_gate(hetero, get_round=lambda s: s.round)
+    return (gate, score_select, aggregate, phase_e, phase_h, publish,
+            update_context)
 
 
 def pfeddst_round(

@@ -4,8 +4,13 @@ engine     — composable round engine: declarative StrategySpec, stage
              library (participate/plan_exchange/local_train/aggregate/
              update_context), jitted + client-sharded round compilation
 strategies — FedAvg / FedPer / FedBABU / DFedAvgM / Dis-PFL / DFedPGP /
-             PFedDST (+ random-selection ablation) as ~30-line specs
+             PFedDST (+ random-selection ablation, + semi-async
+             pfeddst_async) as ~30-line specs
+hetero     — device heterogeneity + semi-async rounds: DeviceProfile
+             sampling, versioned peer store (stale peers serve their
+             last published snapshot), deadline gate stage
 simulator  — population runner: round loop, personalized eval, history
+             (incl. simulated device wall-clock and staleness metrics)
 """
 from repro.fl.engine import ExchangePlan, RoundContext, StrategySpec, \
     make_round, run_round

@@ -148,7 +148,44 @@ class ExchangePlan:
 
 @dataclass
 class RoundContext:
-    """Mutable per-round scratchpad threaded through the stages."""
+    """Mutable per-round scratchpad threaded through the stages.
+
+    Fields the engine populates before the first stage runs:
+
+    m            population size (static int)
+    data         stacked client dataset dict — (M, N, ...) arrays
+    keys         named PRNG streams per the spec's `key_streams` layout
+    active       (M,) bool — sampled ∧ online this round. A stage may
+                 REFINE it (e.g. the hetero deadline gate intersects it
+                 with the round's completers); later stages and the
+                 engine's `metrics["active"]` echo see the refined mask.
+    sampled_idx  static-size (max(1, round(M·ratio)),) int — the sampled
+                 client ids (for active-row-only compute, e.g. Eq. 6)
+    cand         (M,M) bool reachable-peer mask from the comms fabric
+                 (None without a network model)
+    cost         (M,M) Eq. 9 `c` matrix from the fabric (None → the
+                 scalar FLConfig.comm_cost)
+    stale        (M,) int32 per-peer staleness lag from network events
+                 (zeros without a fabric). Under
+                 CommsConfig.stale_mode="serve", versioned strategies
+                 use it to pick the ring-buffer slot each peer serves.
+
+    Fields stages fill in:
+
+    plan         the ExchangePlan (set by the plan stage — required)
+    store        the repro.fl.hetero PeerStore a versioned strategy
+                 serves peers from this round (None otherwise). Exposed
+                 for composed CUSTOM stages and debugging — the library
+                 stages read the store from the strategy state, not
+                 from here.
+    devices      repro.fl.hetero DeviceVectors (set by the deadline
+                 gate; None in homogeneous-device rounds). Same status:
+                 an exposure for custom stages, not read by library
+                 code.
+    aux          stage-to-stage scratch values (cleared every round)
+    metrics      round metrics dict — see `run_round` for the keys the
+                 engine itself guarantees
+    """
     m: int
     data: Any                               # stacked client dataset dict
     keys: dict                              # named PRNG streams (spec layout)
@@ -158,6 +195,8 @@ class RoundContext:
     cost: Any = None                        # (M,M) Eq. 9 c matrix (fabric)
     stale: Any = None                       # (M,) staleness lag
     plan: Optional[ExchangePlan] = None
+    store: Any = None                       # versioned PeerStore (hetero)
+    devices: Any = None                     # DeviceVectors (hetero)
     aux: dict = field(default_factory=dict)
     metrics: dict = field(default_factory=dict)
 
@@ -176,9 +215,61 @@ def named_streams(key, streams: tuple) -> dict:
 class StrategySpec:
     """A strategy as data: init + ordered stages + exchange metadata.
 
-    stages: tuple of `(state, ctx) -> state` callables, executed in
-    order. The plan-producing stage must set `ctx.plan`; training stages
-    record losses into `ctx.metrics`.
+    A new strategy should be writable from this docstring alone; see
+    docs/architecture.md ("writing a strategy") for a worked example.
+
+    init : (key: PRNGKey) -> state
+        Builds the strategy state — a pytree whose per-client leaves
+        carry a leading (M, ...) client axis (the engine shards that
+        axis onto the mesh). Non-client leaves (round counters, a
+        hetero PeerStore with (V, M, ...) leaves) pass through.
+
+    stages : tuple of (state, ctx: RoundContext) -> state
+        Executed in order inside one jitted round. Contract:
+        - exactly one stage must set `ctx.plan` (the ExchangePlan) and
+          it must run before any stage that reads it;
+        - training stages must guard updates with `ctx.active` (use
+          `where_tree`) so inactive clients keep params AND optimizer
+          state bit-for-bit;
+        - stages communicate forward through `ctx.aux` and record
+          scalars/arrays into `ctx.metrics` (any key containing "loss"
+          is averaged into History.train_loss by the simulator);
+        - stages draw randomness ONLY from `ctx.keys[<stream>]` —
+          fold_in for sub-draws; never split a stream another stage
+          also uses.
+
+    params_for_eval : (state) -> leading-M params pytree
+        The merged per-client model the simulator evaluates.
+
+    key_streams : tuple of stream names — the ordered
+        `jax.random.split` layout of the round key. ORDER IS PART OF
+        THE SPEC: adding/reordering streams changes every stream's
+        value and breaks seed-for-seed parity.
+
+    sample_stream : which stream drives client sampling ("act").
+    comm_pattern : "p2p" | "star" — how `CommsFabric.account_round`
+        prices the round ("p2p" needs edges in the metrics, see below).
+    payload_kind : "extractor" | "model" — what one message carries.
+    payload_fraction : fraction of the payload actually sent (sparse
+        payloads, e.g. DisPFL masks).
+    needs_head_finetune : simulator fine-tunes a throwaway header copy
+        at eval time (FedBABU semantics).
+    affinity : optional (state) -> (M,M) float steering matrix for the
+        fabric's dynamic topology (higher → keep/rewire toward edge).
+    versioned : the strategy carries a repro.fl.hetero PeerStore and
+        honors staleness lags by serving published snapshots. Without
+        it, CommsConfig.stale_mode="serve" keeps stale peers selectable
+        but they serve LIVE parameters (make_strategy warns).
+
+    Metrics contract — `run_round` guarantees these keys exist after
+    the stages ran (stages may overwrite them first):
+      active      (M,) bool  participants (post any deadline gate)
+      stale       (M,) int32 network staleness lag (zeros, no fabric)
+      comm_edges  (M,M) bool p2p pulls — echoed from `ctx.plan.edges`
+                  for p2p plans; selection strategies emit
+                  `select_mask` instead (account_round accepts either).
+    Hetero stages add: round_wall_s, straggler_wall_s (deadline gate)
+    and eff_lag_mean / eff_lag_max / serve_age_mean (versioned pulls).
     """
     name: str
     init: Callable                          # (key) -> state
@@ -191,6 +282,7 @@ class StrategySpec:
     payload_fraction: float = 1.0           # sparse payloads (DisPFL masks)
     needs_head_finetune: bool = False
     affinity: Optional[Callable] = None     # (state)->(M,M) fabric steering
+    versioned: bool = False                 # carries a hetero PeerStore
 
 
 def run_round(stages, state, data, key, *, m: int, ratio: float,
@@ -224,7 +316,9 @@ def run_round(stages, state, data, key, *, m: int, ratio: float,
     for stage in stages:
         state = stage(state, ctx)
     metrics = ctx.metrics
-    metrics.setdefault("active", active)
+    # read ctx.active (not the local) — a stage may have refined it
+    # (the hetero deadline gate), and accounting must see the result
+    metrics.setdefault("active", ctx.active)
     metrics.setdefault("stale", stale)
     if (ctx.plan is not None and ctx.plan.pattern == "p2p"
             and ctx.plan.edges is not None):

@@ -1,0 +1,351 @@
+"""repro.fl.hetero — device heterogeneity + semi-asynchronous rounds.
+
+The paper motivates PFedDST with non-IID data AND device capability
+disparities, but models every client at the same speed. This module
+lands the missing scenario axis on top of the round engine
+(repro.fl.engine) in three pieces:
+
+1. **Device vectors** — `sample_device_vectors` turns a
+   `configs.base.DeviceProfile` into per-client compute-speed /
+   channel-rate / energy vectors (families: uniform, bimodal
+   stragglers, Zipf). They feed per-client local-step wall-time
+   (`local_wall_times`) and — through
+   `comms.linkcost.scale_by_channel_rate` — the Eq. 9 link-cost `c`
+   matrix, so a slow channel makes a peer measurably less attractive.
+
+2. **Versioned peer store** — `PeerStore` is a jit-safe ring buffer of
+   published parameter snapshots with leaves `(V, M, ...)`. A peer
+   whose update is stale (channel delay, missed deadline) *serves its
+   last published version with its lag* instead of losing its
+   candidate column (`CommsConfig.stale_mode="serve"`); Eq. 7 score
+   context and the aggregation pull are computed against the version
+   actually served. This round's participants are the exception: they
+   exchange in real time, so their columns (and in particular each
+   client's own diagonal) are their live parameters — only absent
+   peers are served from the store. With lag 0 the gather returns the
+   live parameters bit-for-bit, so the store is invisible in the
+   synchronous limit.
+
+3. **Deadline gate** — `stage_deadline_gate` is an engine stage usable
+   by any `StrategySpec`. Each client's round wall-time is
+   `n_steps·step_time/speed + comm/rate`; under a finite deadline `T`
+   a client completes one local update every `ceil(wall/T)` rounds
+   (staggered offsets so stragglers don't synchronize) and is excluded
+   from the exchange in between — the round no longer stalls on the
+   slowest device. Peers keep pulling the straggler's last published
+   version, discounted by the polynomial staleness weight
+   `(1 + lag)^(−staleness_alpha)` (`core.aggregation.staleness_weights`,
+   à la buffered asynchronous FL). With `deadline_s=inf` and a uniform
+   profile every gate/weight/serve operation is a bitwise identity —
+   `pfeddst_async` then reproduces the synchronous `pfeddst` trace
+   exactly (tests/test_hetero.py asserts this).
+
+Simulation model (documented approximation): a straggler's update is
+*computed* on the round it completes, from the state it holds then —
+the intermediate pulls it would have made mid-flight are not replayed.
+The timing side (who completes when, which version peers see, what the
+exchange costs) is exact; the optimization side penalizes staleness
+through the served versions and the `(1+lag)^(−α)` mixing weights,
+which is the standard semi-async simulator shortcut.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DeviceProfile, FLConfig
+
+
+# ---------------------------------------------------------------------------
+# device vectors — per-client capability sampled from a DeviceProfile
+# ---------------------------------------------------------------------------
+
+class DeviceVectors(NamedTuple):
+    """Per-client capability vectors, all (M,) float32 numpy.
+
+    speed         relative compute speed (1.0 = reference device)
+    channel_rate  relative link rate (scales the comms LinkModel and the
+                  Eq. 9 `c` matrix via `scale_by_channel_rate`)
+    energy_scale  relative energy per unit work (slow devices burn more)
+    """
+    speed: np.ndarray
+    channel_rate: np.ndarray
+    energy_scale: np.ndarray
+
+
+def sample_device_vectors(profile: DeviceProfile, m: int) -> DeviceVectors:
+    """Sample the (M,) device vectors named by a `DeviceProfile`.
+
+    Deterministic in `profile.seed`; a uniform profile returns exact
+    ones so every downstream scaling is a bitwise no-op.
+    """
+    rng = np.random.default_rng(profile.seed)
+    if profile.family == "uniform":
+        speed = np.ones(m)
+    elif profile.family == "bimodal":
+        n_slow = int(round(m * profile.straggler_fraction))
+        speed = np.ones(m)
+        slow = rng.permutation(m)[:n_slow]
+        speed[slow] = 1.0 / max(profile.straggler_slowdown, 1.0)
+    elif profile.family == "zipf":
+        ranks = rng.permutation(m).astype(np.float64)
+        speed = (1.0 + ranks) ** (-profile.zipf_exponent)
+    else:
+        raise KeyError(
+            f"unknown device-profile family {profile.family!r}; "
+            "available: uniform | bimodal | zipf"
+        )
+    rate = speed.copy() if profile.rate_follows_speed else np.ones(m)
+    return DeviceVectors(
+        speed=speed.astype(np.float32),
+        channel_rate=rate.astype(np.float32),
+        energy_scale=(1.0 / speed).astype(np.float32),
+    )
+
+
+def local_wall_times(devices: DeviceVectors, n_steps: int,
+                     profile: DeviceProfile) -> np.ndarray:
+    """(M,) seconds of simulated device time for one round's local work:
+    `n_steps` local steps at the client's compute speed plus one payload
+    exchange at its channel rate."""
+    compute = n_steps * profile.step_time_s / devices.speed
+    comm = profile.comm_s / devices.channel_rate
+    return (compute + comm).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# versioned peer store — the (V, M, ...) ring buffer of published snapshots
+# ---------------------------------------------------------------------------
+
+class PeerStore(NamedTuple):
+    """Jit-safe ring buffer of published parameter versions.
+
+    params     pytree whose leaves carry leading (V, M, ...) axes; slot
+               `r % V` holds, after round r's publish, the latest
+               published version of EVERY client (non-publishers are
+               carried forward, so the freshest version never falls off
+               the ring).
+    pub_round  (V, M) int32 — the round at which each slot's snapshot
+               was actually published (ages the served version).
+    lag        (M,) int32 — deadline-miss counter: rounds a client has
+               been blocked by the deadline since its last publish.
+               This (plus any channel event lag) is the staleness the
+               aggregation weights discount by; it deliberately
+               excludes sampling-induced age, which the synchronous
+               protocol does not penalize either.
+    """
+    params: Any
+    pub_round: Any
+    lag: Any
+
+
+def store_depth(store: PeerStore) -> int:
+    return jax.tree_util.tree_leaves(store.params)[0].shape[0]
+
+
+def init_peer_store(tree, depth: int) -> PeerStore:
+    """All V slots hold `tree` (the init params), published at round 0."""
+    depth = max(int(depth), 1)
+
+    def rep(x):
+        x = jnp.asarray(x)
+        return jnp.broadcast_to(x[None], (depth,) + x.shape)
+
+    m = jax.tree_util.tree_leaves(tree)[0].shape[0]
+    return PeerStore(
+        params=jax.tree_util.tree_map(rep, tree),
+        pub_round=jnp.zeros((depth, m), jnp.int32),
+        lag=jnp.zeros((m,), jnp.int32),
+    )
+
+
+def _gather_slot(leaf, idx):
+    """leaf (V, M, ...), idx (M,) → (M, ...): per-client slot gather.
+
+    A pure integer gather (no arithmetic), so a lag-0 serve returns the
+    stored array bit-for-bit — the property the synchronous-equivalence
+    guarantee rests on.
+    """
+    return jax.vmap(lambda col, i: col[i], in_axes=(1, 0))(leaf, idx)
+
+
+def store_serve(store: PeerStore, rnd, event_lag=None):
+    """The version each peer serves at round `rnd` → (served_tree, age).
+
+    Serving happens before round `rnd`'s training, so the freshest
+    available slot is `(rnd − 1) % V`; a peer with channel lag `l`
+    serves slot `(rnd − 1 − l) % V` (clipped to the ring depth).
+    `age[j] = rnd − pub_round` of the slot actually served — the true
+    age of the snapshot, including publishes missed to the deadline.
+    """
+    v = store_depth(store)
+    m = store.pub_round.shape[1]
+    if event_lag is None:
+        lag = jnp.zeros((m,), jnp.int32)
+    else:
+        lag = jnp.clip(event_lag, 0, v - 1).astype(jnp.int32)
+    idx = jnp.mod(rnd - 1 - lag, v)
+    served = jax.tree_util.tree_map(
+        lambda x: _gather_slot(x, idx), store.params
+    )
+    age = rnd - _gather_slot(store.pub_round, idx)
+    return served, age
+
+
+def store_publish(store: PeerStore, tree, fresh, blocked, rnd) -> PeerStore:
+    """End-of-round publish into slot `rnd % V`.
+
+    fresh    (M,) bool — clients that completed a local update this
+             round: their slot snapshot is `tree`'s row, pub_round is
+             `rnd`, and their miss counter resets.
+    blocked  (M,) bool — clients that wanted to participate but were
+             gated by the deadline: their latest version carries
+             forward and their miss counter increments. Everyone else
+             (not sampled / offline) carries forward unchanged.
+    """
+    v = store_depth(store)
+    head = jnp.mod(rnd, v)
+    prev = jnp.mod(rnd - 1, v)
+
+    def pub(slot_leaf, new_leaf):
+        carried = slot_leaf[prev]
+        sel = fresh.reshape((-1,) + (1,) * (new_leaf.ndim - 1))
+        return slot_leaf.at[head].set(jnp.where(sel, new_leaf, carried))
+
+    params = jax.tree_util.tree_map(pub, store.params, tree)
+    pub_round = store.pub_round.at[head].set(
+        jnp.where(fresh, rnd, store.pub_round[prev]).astype(jnp.int32)
+    )
+    lag = jnp.where(
+        fresh, 0, jnp.where(blocked, store.lag + 1, store.lag)
+    ).astype(jnp.int32)
+    return PeerStore(params=params, pub_round=pub_round, lag=lag)
+
+
+# ---------------------------------------------------------------------------
+# the semi-async runtime — everything the stages close over
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HeteroRuntime:
+    """Static per-experiment view of the heterogeneity scenario: the
+    sampled device vectors, each client's round wall-time, the deadline,
+    the staleness-discount exponent, and the ring depth."""
+    devices: DeviceVectors
+    wall_s: np.ndarray          # (M,) per-client round wall-time
+    deadline_s: float           # inf → synchronous (no gating)
+    alpha: float                # (1 + lag)^(−alpha) aggregation discount
+    depth: int                  # peer-store ring depth V
+    # False when no DeviceProfile was configured: the gate then emits no
+    # wall-time metrics, so an un-profiled pfeddst_async run reports the
+    # same zero device wall-clock a sync strategy does (otherwise the
+    # sync-vs-async accuracy-vs-wall-clock comparison is one-sided)
+    profiled: bool = True
+
+
+def make_hetero_runtime(fl: FLConfig, m: int, n_steps: int) -> HeteroRuntime:
+    """Build the runtime from `FLConfig` (profile defaults to uniform)."""
+    profile = fl.device_profile or DeviceProfile()
+    devices = sample_device_vectors(profile, m)
+    deadline = fl.deadline_s
+    if deadline is None or deadline <= 0:
+        deadline = float("inf")
+    return HeteroRuntime(
+        devices=devices,
+        wall_s=local_wall_times(devices, n_steps, profile),
+        deadline_s=float(deadline),
+        alpha=float(fl.staleness_alpha),
+        depth=max(int(fl.version_depth), 1),
+        profiled=fl.device_profile is not None,
+    )
+
+
+def completion_schedule(runtime: HeteroRuntime):
+    """Static (periods, offsets) int32 arrays of the deadline schedule.
+
+    A client with wall-time w completes one update every
+    `ceil(w / deadline)` rounds, first at round `i % period` (staggered
+    so stragglers don't all land on the same round). Infinite deadline →
+    period 1 for everyone (complete every round).
+    """
+    wall = np.asarray(runtime.wall_s, np.float64)
+    m = wall.shape[0]
+    if np.isfinite(runtime.deadline_s):
+        periods = np.maximum(
+            np.ceil(wall / runtime.deadline_s), 1.0
+        ).astype(np.int32)
+    else:
+        periods = np.ones(m, np.int32)
+    offsets = (np.arange(m) % periods).astype(np.int32)
+    return periods, offsets
+
+
+def stage_deadline_gate(runtime: HeteroRuntime, get_round):
+    """Engine stage: refine `ctx.active` to the clients that meet this
+    round's deadline, and record the round's simulated wall-time.
+
+    Composable into any `StrategySpec` (first stage, before the plan is
+    formed). `get_round` maps the strategy state to the round counter
+    (e.g. `lambda s: s["round"]` / `lambda s: s.round`). Effects:
+
+      ctx.active                &= this round's completers
+      ctx.aux["deadline_blocked"] sampled∧online clients gated out
+      ctx.devices               the DeviceVectors (for later stages)
+      ctx.metrics["straggler_wall_s"]  slowest sampled client's wall-time
+                                (what a synchronous round would stall on)
+      ctx.metrics["round_wall_s"]      min(deadline, straggler wall) —
+                                the semi-async round's actual duration
+    The two wall-time metrics are emitted only when `runtime.profiled`
+    (a DeviceProfile was configured): without one, sync strategies
+    report zero device wall-clock and the gate must match.
+
+    With an infinite deadline every client is a completer and the gate
+    reduces to `active & True` — bitwise invisible.
+    """
+    periods, offsets = completion_schedule(runtime)
+    periods_j = jnp.asarray(periods)
+    offsets_j = jnp.asarray(offsets)
+    wall_j = jnp.asarray(runtime.wall_s, jnp.float32)
+    deadline = runtime.deadline_s
+
+    def stage(state, ctx):
+        rnd = get_round(state)
+        completer = jnp.mod(rnd - offsets_j, periods_j) == 0
+        pre = ctx.active
+        ctx.aux["deadline_blocked"] = pre & ~completer
+        ctx.active = pre & completer
+        ctx.devices = runtime.devices
+        if runtime.profiled:
+            straggler = jnp.max(jnp.where(pre, wall_j, 0.0))
+            ctx.metrics["straggler_wall_s"] = straggler
+            if np.isfinite(deadline):
+                ctx.metrics["round_wall_s"] = jnp.minimum(straggler,
+                                                          deadline)
+            else:
+                ctx.metrics["round_wall_s"] = straggler
+        return state
+
+    return stage
+
+
+def pull_staleness(store: PeerStore, ctx_stale, depth: int, active=None):
+    """(M,) int32 staleness of the version each peer column serves:
+    accumulated deadline misses plus this round's channel event lag
+    (clipped to the ring depth). This — not the raw snapshot age — is
+    what the aggregation weights discount: sampling-induced age is not
+    penalized, matching the synchronous protocol's cache semantics.
+
+    `active`: this round's participants. A participant exchanges in
+    real time, so its column carries no CHANNEL lag — but its
+    value-staleness (store.lag: rounds it sat blocked since last
+    publishing) still counts, because the state it serves has not
+    trained since then."""
+    event = jnp.zeros_like(store.lag) if ctx_stale is None else \
+        jnp.clip(ctx_stale, 0, depth - 1).astype(jnp.int32)
+    if active is not None:
+        event = jnp.where(active, 0, event)
+    return store.lag + event

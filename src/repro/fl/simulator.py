@@ -79,6 +79,10 @@ def _finetune_heads(cfg: ModelConfig, fl: FLConfig, params, train_x, train_y,
 
 @dataclass
 class History:
+    """Experiment trace. Schema documented in docs/architecture.md
+    ("History schema"); lengths: per-eval-point lists are appended at
+    every eval (every `eval_every` rounds + the last round), per-round
+    lists every round."""
     rounds: list = field(default_factory=list)
     accuracy: list = field(default_factory=list)
     train_loss: list = field(default_factory=list)
@@ -86,10 +90,18 @@ class History:
     # --- communication budget (repro.comms; zeros when fabric disabled) ----
     round_bytes: list = field(default_factory=list)       # per round
     round_net_time_s: list = field(default_factory=list)  # per round
-    round_stale_lag: list = field(default_factory=list)   # mean rounds/round
+    # mean lag over the STALE clients only (fresh zeros would dilute the
+    # signal toward 0 as p_stale shrinks); 0.0 on rounds with none stale
+    round_stale_lag: list = field(default_factory=list)   # per round
+    round_stale_max: list = field(default_factory=list)   # per round
     comm_bytes: list = field(default_factory=list)        # cumulative @ eval
     net_time_s: list = field(default_factory=list)        # cumulative @ eval
     energy_j: list = field(default_factory=list)          # cumulative @ eval
+    # --- device heterogeneity (repro.fl.hetero; zeros without a profile) ---
+    round_device_wall_s: list = field(default_factory=list)     # per round
+    round_straggler_wall_s: list = field(default_factory=list)  # per round
+    round_eff_lag: list = field(default_factory=list)           # per round
+    device_time_s: list = field(default_factory=list)     # cumulative @ eval
 
     def to_dict(self):
         return {
@@ -100,9 +112,18 @@ class History:
             "round_bytes": [int(b) for b in self.round_bytes],
             "round_net_time_s": [float(t) for t in self.round_net_time_s],
             "round_stale_lag": [float(s) for s in self.round_stale_lag],
+            "round_stale_max": [int(s) for s in self.round_stale_max],
             "comm_bytes": [int(b) for b in self.comm_bytes],
             "net_time_s": [float(t) for t in self.net_time_s],
             "energy_j": [float(e) for e in self.energy_j],
+            "round_device_wall_s": [
+                float(t) for t in self.round_device_wall_s
+            ],
+            "round_straggler_wall_s": [
+                float(t) for t in self.round_straggler_wall_s
+            ],
+            "round_eff_lag": [float(s) for s in self.round_eff_lag],
+            "device_time_s": [float(t) for t in self.device_time_s],
         }
 
     def rounds_to_target(self, target: float):
@@ -118,6 +139,22 @@ class History:
             if a >= target:
                 return b
         return None
+
+
+def _stale_summary(stale) -> tuple:
+    """(mean lag over stale clients, max lag) — 0s when nobody is stale.
+
+    The mean is over the stale subpopulation only: averaging over all M
+    clients dilutes the lag toward 0 with the fresh clients' zeros and
+    makes the metric track p_stale instead of the lag distribution.
+    """
+    if stale is None:
+        return 0.0, 0
+    arr = np.asarray(stale)
+    lagging = arr[arr > 0]
+    if lagging.size == 0:
+        return 0.0, 0
+    return float(lagging.mean()), int(arr.max())
 
 
 def run_experiment(
@@ -157,9 +194,25 @@ def run_experiment(
         )
         payload = int(round(payload * strat.payload_fraction))
 
+    # per-client round wall-times for SYNC strategies under a device
+    # profile (semi-async rounds report their own via metrics); the step
+    # count is strategy-specific — local_train_steps is the same source
+    # the hetero runtime prices pfeddst_async with
+    wall_np = None
+    if fl.device_profile is not None:
+        from repro.fl.hetero import local_wall_times, sample_device_vectors
+        from repro.fl.strategies import local_train_steps
+
+        devices = sample_device_vectors(fl.device_profile, fl.num_clients)
+        wall_np = local_wall_times(
+            devices, local_train_steps(strategy_name, fl, steps_per_epoch),
+            fl.device_profile,
+        )
+
     round_jit = strat.round            # engine rounds are already jitted
     hist = History()
     cum_bytes, cum_net_s, cum_energy = 0, 0.0, 0.0
+    cum_device_s = 0.0
     t0 = time.time()
     for r in range(num_rounds):
         k_r = jax.random.fold_in(k_rounds, r)
@@ -171,18 +224,35 @@ def run_experiment(
             )
             hist.round_bytes.append(stats.total_bytes)
             hist.round_net_time_s.append(stats.sim_time_s)
-            stale = metrics.get("stale")
-            hist.round_stale_lag.append(
-                float(np.mean(np.asarray(stale))) if stale is not None
-                else 0.0
-            )
             cum_bytes += stats.total_bytes
             cum_net_s += stats.sim_time_s
             cum_energy += stats.energy_j
         else:
             hist.round_bytes.append(0)
             hist.round_net_time_s.append(0.0)
-            hist.round_stale_lag.append(0.0)
+
+        mean_lag, max_lag = _stale_summary(metrics.get("stale"))
+        hist.round_stale_lag.append(mean_lag)
+        hist.round_stale_max.append(max_lag)
+
+        # simulated device wall-clock: semi-async rounds report their
+        # deadline-capped duration; synchronous rounds under a device
+        # profile stall on the slowest sampled client
+        round_wall = metrics.get("round_wall_s")
+        if round_wall is not None:
+            round_wall = float(round_wall)
+            straggler = float(metrics.get("straggler_wall_s", round_wall))
+        elif wall_np is not None:
+            act = np.asarray(metrics["active"])
+            straggler = float(wall_np[act].max()) if act.any() else 0.0
+            round_wall = straggler
+        else:
+            round_wall = straggler = 0.0
+        hist.round_device_wall_s.append(round_wall)
+        hist.round_straggler_wall_s.append(straggler)
+        eff = metrics.get("eff_lag_mean")
+        hist.round_eff_lag.append(float(eff) if eff is not None else 0.0)
+        cum_device_s += round_wall
 
         if (r + 1) % eval_every == 0 or r == num_rounds - 1:
             params = strat.params_for_eval(state)
@@ -206,6 +276,7 @@ def run_experiment(
             hist.comm_bytes.append(cum_bytes)
             hist.net_time_s.append(cum_net_s)
             hist.energy_j.append(cum_energy)
+            hist.device_time_s.append(cum_device_s)
             if verbose:
                 print(
                     f"[{strategy_name:16s}] round {r + 1:4d} "

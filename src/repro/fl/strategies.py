@@ -31,6 +31,11 @@ Baselines (paper §III-B), each ~30 lines of spec:
                  (score → select → aggregate → phase-e → phase-h →
                  context update) over the same engine.
   pfeddst_random ablation: same stages, selection="random".
+  pfeddst_async  semi-asynchronous extension (repro.fl.hetero): device
+                 profiles + deadline gate + versioned peer store +
+                 (1+lag)^(−α) staleness-weighted aggregation. With a
+                 uniform profile and deadline=∞ it reproduces pfeddst's
+                 synchronous trace bitwise (tests/test_hetero.py).
 
 Every spec additionally carries a repro.comms fabric (built from
 fl.comms): the engine composes availability with client sampling,
@@ -75,6 +80,19 @@ _gossip_weights = gossip_edges
 
 def _opt(fl: FLConfig):
     return sgd(fl.lr, momentum=fl.momentum, weight_decay=fl.weight_decay)
+
+
+def local_train_steps(name: str, fl: FLConfig, steps_per_epoch: int) -> int:
+    """Local SGD steps one client runs in one round of strategy `name` —
+    the single source of truth for device wall-time accounting (the
+    hetero runtime and the simulator's sync-stall path both use it).
+    The PFedDST family trains K_e extractor + K_h header epochs; every
+    other strategy trains K_e epochs of its (full or extractor-only)
+    step."""
+    epochs = fl.epochs_extractor
+    if name.startswith("pfeddst"):
+        epochs += fl.epochs_header
+    return epochs * steps_per_epoch
 
 
 # ---------------------------------------------------------------------------
@@ -289,34 +307,49 @@ def _gossip_spec(cfg, fl, steps_per_epoch, kind: str) -> StrategySpec:
 # ---------------------------------------------------------------------------
 
 def _pfeddst_spec(cfg, fl, steps_per_epoch, random_select: bool,
-                  ) -> StrategySpec:
+                  semi_async: bool = False) -> StrategySpec:
     # lazy import: core.rounds builds on fl.engine (cycle otherwise)
     from repro.core.rounds import PFEDDST_STREAMS, make_pfeddst_stages
 
     opt = _opt(fl)
     steps = make_phase_steps(cfg, opt)
-    name = "pfeddst_random" if random_select else "pfeddst"
+    name = "pfeddst_random" if random_select else \
+        ("pfeddst_async" if semi_async else "pfeddst")
     fl_used = fl if not random_select else dataclasses.replace(
         fl, selection="random"
     )
+    hetero = None
+    if semi_async:
+        from repro.fl.hetero import init_peer_store, make_hetero_runtime
+
+        hetero = make_hetero_runtime(
+            fl, fl.num_clients, local_train_steps(name, fl, steps_per_epoch)
+        )
+
+    def init(key):
+        state = init_population(cfg, key, fl.num_clients, opt, opt)
+        if hetero is not None:
+            state = state._replace(store=init_peer_store(
+                {"e": state.extractor, "h": state.header}, hetero.depth
+            ))
+        return state
 
     def eval_params(state):
         return jax.vmap(merge_params)(state.extractor, state.header)
 
     return StrategySpec(
         name=name,
-        init=lambda key: init_population(
-            cfg, key, fl.num_clients, opt, opt
-        ),
+        init=init,
         stages=make_pfeddst_stages(
             cfg, fl_used, steps, steps_per_epoch=steps_per_epoch,
-            probe_size=fl.probe_size,
+            probe_size=fl.probe_size, hetero=hetero,
         ),
         params_for_eval=eval_params,
         key_streams=PFEDDST_STREAMS,
         # score-driven dynamic graphs steer toward the peers the loss
         # array l marked informative last round (Algorithm 1 context)
         affinity=lambda state: state.loss_matrix,
+        versioned=semi_async,
     )
 
 
@@ -326,7 +359,7 @@ def _pfeddst_spec(cfg, fl, steps_per_epoch, random_select: bool,
 
 STRATEGIES = (
     "fedavg", "fedper", "fedbabu", "dfedavgm", "dispfl", "dfedpgp",
-    "pfeddst", "pfeddst_random",
+    "pfeddst", "pfeddst_random", "pfeddst_async",
 )
 
 
@@ -341,12 +374,48 @@ def make_spec(name: str, cfg: ModelConfig, fl: FLConfig,
         return _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=False)
     if name == "pfeddst_random":
         return _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=True)
+    if name == "pfeddst_async":
+        return _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=False,
+                             semi_async=True)
     raise KeyError(f"unknown strategy {name!r}; available: {STRATEGIES}")
 
 
 def make_strategy(name: str, cfg: ModelConfig, fl: FLConfig,
                   steps_per_epoch: int = 2, *, jit: bool = True) -> Strategy:
     # fl.comms = None → legacy scalar-cost path (no fabric, no masking)
-    fabric = make_fabric(fl.comms, fl.num_clients, cost_scale=fl.comm_cost)
+    rates = None
+    if fl.device_profile is not None:
+        from repro.fl.hetero import sample_device_vectors
+
+        # deterministic in (profile, num_clients): the hetero runtime and
+        # the simulator re-derive the same vectors from the same inputs
+        rates = sample_device_vectors(
+            fl.device_profile, fl.num_clients
+        ).channel_rate
+    fabric = make_fabric(fl.comms, fl.num_clients, cost_scale=fl.comm_cost,
+                         channel_rate=rates)
     spec = make_spec(name, cfg, fl, steps_per_epoch)
+    if not spec.versioned:
+        import math
+        import warnings
+
+        if (fl.comms is not None and fl.comms.stale_mode == "serve"
+                and fl.comms.p_stale > 0):
+            warnings.warn(
+                f"CommsConfig(stale_mode='serve', p_stale="
+                f"{fl.comms.p_stale}) with non-versioned strategy "
+                f"{name!r}: stale peers stay selectable but serve their "
+                "LIVE parameters (no peer store); staleness events will "
+                "not affect the optimization. Use 'pfeddst_async' or "
+                "stale_mode='drop' for real staleness semantics.",
+                stacklevel=2,
+            )
+        if 0 < fl.deadline_s < math.inf:
+            warnings.warn(
+                f"FLConfig(deadline_s={fl.deadline_s}) is ignored by "
+                f"non-versioned strategy {name!r}: only 'pfeddst_async' "
+                "runs the semi-async deadline gate; this strategy runs "
+                "fully synchronous rounds.",
+                stacklevel=2,
+            )
     return _wrap(spec, fl, fabric, jit=jit)

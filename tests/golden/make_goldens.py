@@ -65,6 +65,11 @@ def main():
     )
     golden = {"default_comms": {}, "ring_events": {}}
     for name in STRATEGIES:
+        if name == "pfeddst_async":
+            # no entry of its own: with uniform devices and an infinite
+            # deadline it degenerates bitwise to pfeddst, and the parity
+            # tests hold it to the pfeddst golden
+            continue
         golden["default_comms"][name] = run(name, base_fl, data)
         print("default ", name, golden["default_comms"][name]["accuracy"])
     ring_fl = dataclasses.replace(

@@ -76,7 +76,11 @@ def _assert_matches(got, want):
 @pytest.mark.parametrize("name", STRATEGIES)
 def test_parity_with_pre_engine_strategies(golden_env, goldens, name):
     mg, fl, data = golden_env
-    _assert_matches(mg.run(name, fl, data), goldens["default_comms"][name])
+    # pfeddst_async (uniform devices, infinite deadline) degenerates
+    # bitwise to pfeddst, so it is held to the same golden trace
+    golden_name = "pfeddst" if name == "pfeddst_async" else name
+    _assert_matches(mg.run(name, fl, data),
+                    goldens["default_comms"][golden_name])
 
 
 @pytest.mark.slow

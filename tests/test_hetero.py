@@ -1,0 +1,539 @@
+"""repro.fl.hetero — device vectors, versioned peer store, deadline
+gate, staleness-weighted aggregation, and the pfeddst_async spec
+(incl. the bitwise synchronous-equivalence guarantee)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms import events as events_mod
+from repro.configs.base import CommsConfig, DeviceProfile, FLConfig
+from repro.core.aggregation import selection_to_weights, staleness_weights
+from repro.data.synthetic import client_datasets_cifar
+from repro.fl import make_spec, make_strategy
+from repro.fl.hetero import (
+    HeteroRuntime,
+    completion_schedule,
+    init_peer_store,
+    local_wall_times,
+    make_hetero_runtime,
+    pull_staleness,
+    sample_device_vectors,
+    stage_deadline_gate,
+    store_publish,
+    store_serve,
+)
+
+
+# ---------------------------------------------------------------------------
+# device vectors
+# ---------------------------------------------------------------------------
+
+def test_uniform_profile_is_exact_ones():
+    dv = sample_device_vectors(DeviceProfile(), 16)
+    assert (dv.speed == 1.0).all()
+    assert (dv.channel_rate == 1.0).all()
+    assert (dv.energy_scale == 1.0).all()
+
+
+def test_bimodal_profile_straggler_count_and_slowdown():
+    prof = DeviceProfile(family="bimodal", straggler_fraction=0.25,
+                         straggler_slowdown=4.0, seed=3)
+    dv = sample_device_vectors(prof, 16)
+    slow = dv.speed < 1.0
+    assert slow.sum() == 4
+    np.testing.assert_allclose(dv.speed[slow], 0.25)
+    # channel follows compute by default; energy is its inverse
+    np.testing.assert_allclose(dv.channel_rate, dv.speed)
+    np.testing.assert_allclose(dv.energy_scale, 1.0 / dv.speed, rtol=1e-6)
+
+
+def test_zipf_profile_long_tail_and_determinism():
+    prof = DeviceProfile(family="zipf", zipf_exponent=1.2, seed=7)
+    a = sample_device_vectors(prof, 32)
+    b = sample_device_vectors(prof, 32)
+    np.testing.assert_array_equal(a.speed, b.speed)   # seed-deterministic
+    s = np.sort(a.speed)[::-1]
+    assert s[0] == 1.0 and s[-1] < 0.1                # spans the tail
+    assert len(np.unique(a.speed)) == 32
+
+
+def test_unknown_family_raises():
+    with pytest.raises(KeyError, match="zap"):
+        sample_device_vectors(DeviceProfile(family="zap"), 4)
+
+
+def test_wall_times_scale_with_speed_and_rate():
+    prof = DeviceProfile(family="bimodal", straggler_fraction=0.5,
+                         straggler_slowdown=4.0, step_time_s=0.1,
+                         comm_s=0.5)
+    dv = sample_device_vectors(prof, 8)
+    wall = local_wall_times(dv, 2, prof)
+    fast = wall[dv.speed == 1.0]
+    slow = wall[dv.speed < 1.0]
+    np.testing.assert_allclose(fast, 2 * 0.1 + 0.5, rtol=1e-6)
+    np.testing.assert_allclose(slow, 4 * (2 * 0.1 + 0.5), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# versioned peer store (ring buffer)
+# ---------------------------------------------------------------------------
+
+def _tiny_tree(m=4):
+    return {"w": jnp.arange(m, dtype=jnp.float32).reshape(m, 1) * 0.0}
+
+
+def test_store_serve_lag_zero_is_bitwise_identity():
+    m, depth = 4, 3
+    store = init_peer_store(_tiny_tree(m), depth)
+    for r in range(5):
+        fresh = jnp.ones((m,), bool)
+        tree = {"w": jnp.full((m, 1), float(r))}
+        store = store_publish(store, tree, fresh,
+                              jnp.zeros((m,), bool), jnp.int32(r))
+        served, age = store_serve(store, jnp.int32(r + 1))
+        np.testing.assert_array_equal(np.asarray(served["w"]),
+                                      np.asarray(tree["w"]))
+        assert (np.asarray(age) == 1).all()
+
+
+def test_store_serve_event_lag_returns_older_version():
+    m, depth = 4, 4
+    store = init_peer_store(_tiny_tree(m), depth)
+    for r in range(4):
+        tree = {"w": jnp.full((m, 1), float(r))}
+        store = store_publish(store, tree, jnp.ones((m,), bool),
+                              jnp.zeros((m,), bool), jnp.int32(r))
+    # at round 4, client 2 serves with lag 2 → version from round 1
+    lag = jnp.array([0, 0, 2, 0], jnp.int32)
+    served, age = store_serve(store, jnp.int32(4), lag)
+    w = np.asarray(served["w"])[:, 0]
+    np.testing.assert_array_equal(w, [3.0, 3.0, 1.0, 3.0])
+    np.testing.assert_array_equal(np.asarray(age), [1, 1, 3, 1])
+    # lag beyond the ring depth is clipped to the oldest slot
+    served, _ = store_serve(store, jnp.int32(4),
+                            jnp.full((m,), 99, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(served["w"])[:, 0],
+                                  [0.0, 0.0, 0.0, 0.0])
+
+
+def test_store_carry_forward_survives_ring_wraparound():
+    """A client that stops publishing keeps its freshest version
+    available even after more than V rounds."""
+    m, depth = 3, 2
+    store = init_peer_store(_tiny_tree(m), depth)
+    store = store_publish(store, {"w": jnp.full((m, 1), 10.0)},
+                          jnp.ones((m,), bool), jnp.zeros((m,), bool),
+                          jnp.int32(0))
+    for r in range(1, 6):   # client 0 never publishes again
+        fresh = jnp.array([False, True, True])
+        store = store_publish(store, {"w": jnp.full((m, 1), 10.0 + r)},
+                              fresh, jnp.zeros((m,), bool), jnp.int32(r))
+    served, age = store_serve(store, jnp.int32(6))
+    np.testing.assert_array_equal(np.asarray(served["w"])[:, 0],
+                                  [10.0, 15.0, 15.0])
+    np.testing.assert_array_equal(np.asarray(age), [6, 1, 1])
+
+
+def test_store_lag_counter_tracks_deadline_misses():
+    m = 3
+    store = init_peer_store(_tiny_tree(m), 2)
+    blocked = jnp.array([True, False, False])
+    fresh = jnp.array([False, True, True])
+    for r in range(3):
+        store = store_publish(store, _tiny_tree(m), fresh, blocked,
+                              jnp.int32(r))
+    np.testing.assert_array_equal(np.asarray(store.lag), [3, 0, 0])
+    # publishing resets the counter
+    store = store_publish(store, _tiny_tree(m), jnp.ones((m,), bool),
+                          jnp.zeros((m,), bool), jnp.int32(3))
+    assert not np.asarray(store.lag).any()
+
+
+def test_pull_staleness_combines_misses_and_events():
+    store = init_peer_store(_tiny_tree(3), 4)
+    store = store._replace(lag=jnp.array([2, 0, 0], jnp.int32))
+    lag = pull_staleness(store, jnp.array([0, 9, 1], jnp.int32), depth=4)
+    np.testing.assert_array_equal(np.asarray(lag), [2, 3, 1])  # 9 clipped
+
+
+def test_pull_staleness_active_columns_carry_no_channel_lag():
+    """A participant exchanges in real time: its column keeps only its
+    value-staleness (deadline misses), never this round's event lag."""
+    store = init_peer_store(_tiny_tree(3), 4)
+    store = store._replace(lag=jnp.array([2, 0, 0], jnp.int32))
+    lag = pull_staleness(store, jnp.array([1, 1, 1], jnp.int32), depth=4,
+                         active=jnp.array([True, True, False]))
+    np.testing.assert_array_equal(np.asarray(lag), [2, 0, 1])
+
+
+# ---------------------------------------------------------------------------
+# staleness-weighted aggregation
+# ---------------------------------------------------------------------------
+
+def test_staleness_weights_zero_lag_bitwise_equals_selection_weights():
+    key = jax.random.PRNGKey(0)
+    mask = jax.random.uniform(key, (6, 6)) > 0.5
+    lag = jnp.zeros((6,), jnp.int32)
+    w0 = selection_to_weights(mask, include_self=True)
+    w1 = staleness_weights(mask, lag, alpha=0.5)
+    np.testing.assert_array_equal(np.asarray(w0), np.asarray(w1))
+
+
+def test_staleness_weights_discount_and_row_stochastic():
+    mask = jnp.ones((3, 3), bool) & ~jnp.eye(3, dtype=bool)
+    lag = jnp.array([0, 3, 0], jnp.int32)
+    w = np.asarray(staleness_weights(mask, lag, alpha=1.0))
+    np.testing.assert_allclose(w.sum(1), 1.0, rtol=1e-6)
+    # stale column 1 is discounted by (1+3)^-1 = 0.25 relative to col 2
+    assert w[0, 1] == pytest.approx(w[0, 2] * 0.25, rel=1e-5)
+    # the self column is never discounted — even the stale client mixes
+    # its own fresh state at full weight
+    assert w[1, 1] == pytest.approx(1.0 / 3.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# deadline gate
+# ---------------------------------------------------------------------------
+
+def _runtime(wall, deadline, depth=4, alpha=0.5):
+    m = len(wall)
+    dv = sample_device_vectors(DeviceProfile(), m)
+    return HeteroRuntime(devices=dv, wall_s=np.asarray(wall, np.float32),
+                         deadline_s=deadline, alpha=alpha, depth=depth)
+
+
+def test_make_hetero_runtime_defaults():
+    fl = FLConfig(num_clients=4, deadline_s=0.0)   # <= 0 ⇒ synchronous
+    rt = make_hetero_runtime(fl, 4, n_steps=2)
+    assert rt.deadline_s == float("inf")
+    assert (rt.devices.speed == 1.0).all()
+    assert rt.depth == fl.version_depth
+    np.testing.assert_allclose(rt.wall_s, 2 * 0.1 + 0.5, rtol=1e-6)
+
+
+def test_completion_schedule_periods():
+    rt = _runtime([1.0, 2.5, 7.9, 1.0], deadline=1.0)
+    periods, offsets = completion_schedule(rt)
+    np.testing.assert_array_equal(periods, [1, 3, 8, 1])
+    assert (offsets == np.arange(4) % periods).all()
+    periods_inf, _ = completion_schedule(
+        _runtime([1.0, 99.0], deadline=float("inf"))
+    )
+    np.testing.assert_array_equal(periods_inf, [1, 1])
+
+
+def test_deadline_gate_blocks_stragglers_and_reports_walltime():
+    from repro.fl.engine import RoundContext
+
+    rt = _runtime([1.0, 4.0, 1.0, 4.0], deadline=1.1)
+    gate = stage_deadline_gate(rt, get_round=lambda s: s["round"])
+    m = 4
+
+    def run_round_idx(r):
+        ctx = RoundContext(
+            m=m, data={}, keys={}, active=jnp.ones((m,), bool),
+            sampled_idx=jnp.arange(m),
+        )
+        gate({"round": jnp.int32(r)}, ctx)
+        return ctx
+
+    # period-4 stragglers complete only when (r - offset) % 4 == 0
+    blocked_per_round = []
+    for r in range(8):
+        ctx = run_round_idx(r)
+        act = np.asarray(ctx.active)
+        assert act[0] and act[2]                      # fast clients always
+        blocked_per_round.append(np.asarray(ctx.aux["deadline_blocked"]))
+        assert float(ctx.metrics["straggler_wall_s"]) == 4.0
+        assert float(ctx.metrics["round_wall_s"]) == pytest.approx(1.1)
+    # each straggler completes exactly twice over 8 rounds
+    blocked = np.stack(blocked_per_round)
+    assert (8 - blocked[:, 1].sum()) == 2
+    assert (8 - blocked[:, 3].sum()) == 2
+
+
+def test_deadline_gate_infinite_deadline_is_identity():
+    from repro.fl.engine import RoundContext
+
+    rt = _runtime([1.0, 50.0, 2.0], deadline=float("inf"))
+    gate = stage_deadline_gate(rt, get_round=lambda s: s["round"])
+    ctx = RoundContext(m=3, data={}, keys={},
+                       active=jnp.array([True, False, True]),
+                       sampled_idx=jnp.arange(3))
+    gate({"round": jnp.int32(5)}, ctx)
+    np.testing.assert_array_equal(np.asarray(ctx.active),
+                                  [True, False, True])
+    assert not np.asarray(ctx.aux["deadline_blocked"]).any()
+    # sync stall: the slowest SAMPLED client (50.0 is offline → excluded)
+    assert float(ctx.metrics["round_wall_s"]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7 kernel routing — use_kernel=True must fall back off-TPU
+# ---------------------------------------------------------------------------
+
+def test_header_distance_kernel_falls_back_off_tpu():
+    """`header_distance_matrix(use_kernel=True)` routes through the
+    Pallas cosine-Gram kernel; off-TPU that kernel auto-selects
+    interpret mode, so the call must still succeed and match the
+    pure-jnp oracle (this is the path pfeddst's score_select takes with
+    use_score_kernel=True on the served headers)."""
+    from repro.core.scoring import header_distance_matrix
+
+    assert jax.default_backend() != "tpu"   # this suite is the CPU tier
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 96), jnp.float32)
+    ref = np.asarray(header_distance_matrix(x))
+    got = np.asarray(header_distance_matrix(x, use_kernel=True))
+    assert got.shape == (8, 8)
+    np.testing.assert_allclose(got, ref, atol=2e-5)
+    np.testing.assert_allclose(np.diag(got), 1.0, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# events: stale_mode="serve" keeps candidate columns
+# ---------------------------------------------------------------------------
+
+def test_stale_mode_typo_raises():
+    with pytest.raises(ValueError, match="stale_mode"):
+        CommsConfig(stale_mode="Serve")
+
+
+def test_stale_mode_serve_keeps_columns():
+    adj = jnp.ones((16, 16), bool) & ~jnp.eye(16, dtype=bool)
+    key = jax.random.PRNGKey(0)
+    drop_cfg = CommsConfig(p_stale=0.5, max_staleness=3)
+    serve_cfg = CommsConfig(p_stale=0.5, max_staleness=3,
+                            stale_mode="serve")
+    cand_d, _, stale_d = events_mod.apply_events(key, adj, drop_cfg)
+    cand_s, _, stale_s = events_mod.apply_events(key, adj, serve_cfg)
+    np.testing.assert_array_equal(np.asarray(stale_d), np.asarray(stale_s))
+    stale = np.asarray(stale_s) > 0
+    assert stale.any()
+    assert not np.asarray(cand_d)[:, stale].any()     # legacy: dropped
+    assert np.asarray(cand_s)[:, stale].any()         # serve: selectable
+
+
+# ---------------------------------------------------------------------------
+# pfeddst_async end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_env(tiny_cnn):
+    fl = FLConfig(num_clients=6, peers_per_round=2, batch_size=8,
+                  client_sample_ratio=0.5, epochs_extractor=1,
+                  epochs_header=1, probe_size=8)
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(0), fl.num_clients, num_classes=10,
+        classes_per_client=2, samples_per_class=10, image_size=8,
+    )
+    train = {"images": data["train_x"], "labels": data["train_y"]}
+    return tiny_cnn, fl, data, train
+
+
+def test_async_spec_declares_store_and_extra_stages(tiny_cnn):
+    fl = FLConfig(num_clients=4, epochs_extractor=1, epochs_header=1)
+    sync = make_spec("pfeddst", tiny_cnn, fl, steps_per_epoch=1)
+    asyn = make_spec("pfeddst_async", tiny_cnn, fl, steps_per_epoch=1)
+    assert len(asyn.stages) == len(sync.stages) + 2   # gate + publish
+    state = asyn.init(jax.random.PRNGKey(0))
+    assert state.store is not None
+    assert jax.tree_util.tree_leaves(state.store.params)[0].shape[0] \
+        == fl.version_depth
+
+
+def test_async_uniform_infinite_deadline_bitwise_equals_sync(tiny_env):
+    """The acceptance guarantee: with uniform device profiles and an
+    infinite deadline, pfeddst_async IS pfeddst, bit for bit."""
+    cfg, fl, data, train = tiny_env
+    sync = make_strategy("pfeddst", cfg, fl, steps_per_epoch=1)
+    asyn = make_strategy("pfeddst_async", cfg, fl, steps_per_epoch=1)
+    s1 = sync.init(jax.random.PRNGKey(1))
+    s2 = asyn.init(jax.random.PRNGKey(1))
+    for r in range(3):
+        k = jax.random.PRNGKey(2 + r)
+        s1, m1 = sync.round(s1, train, k)
+        s2, m2 = asyn.round(s2, train, k)
+    for field in ("extractor", "header", "loss_matrix", "last_selected"):
+        for a, b in zip(jax.tree_util.tree_leaves(getattr(s1, field)),
+                        jax.tree_util.tree_leaves(getattr(s2, field))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(m1["select_mask"]),
+                                  np.asarray(m2["select_mask"]))
+    assert float(m2["eff_lag_mean"]) == 0.0
+    # no DeviceProfile configured → no wall-time metrics, so the async
+    # run reports the same zero device wall-clock the sync run does
+    assert "round_wall_s" not in m2
+    # the store's latest slot equals the live params (publish invariant)
+    served, _ = store_serve(s2.store, s2.round)
+    for a, b in zip(jax.tree_util.tree_leaves(served["e"]),
+                    jax.tree_util.tree_leaves(s2.extractor)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_async_matches_sync_golden_trace(tiny_env):
+    """Same guarantee against the frozen golden fingerprints: the
+    pfeddst_async trace lands on the synchronous pfeddst golden."""
+    import importlib.util
+    import json
+    import os
+
+    golden_dir = os.path.join(os.path.dirname(__file__), "golden")
+    spec = importlib.util.spec_from_file_location(
+        "make_goldens", os.path.join(golden_dir, "make_goldens.py")
+    )
+    mg = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mg)
+    with open(os.path.join(golden_dir, "engine_parity.json")) as f:
+        goldens = json.load(f)
+
+    fl = FLConfig(num_clients=6, peers_per_round=2, batch_size=8,
+                  client_sample_ratio=0.5, epochs_extractor=1,
+                  epochs_header=1, probe_size=8)
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(0), fl.num_clients, num_classes=10,
+        classes_per_client=2, samples_per_class=20, image_size=16,
+    )
+    got = mg.run("pfeddst_async", fl, data)
+    want = goldens["default_comms"]["pfeddst"]
+    g, w = np.asarray(got["params"]), np.asarray(want["params"])
+    np.testing.assert_allclose(g, w, rtol=2e-3, atol=1e-3)
+    assert got["active_sum"] == want["active_sum"]
+
+
+def test_async_active_clients_never_serve_stale_self(tiny_env):
+    """Regression: an active, event-stale client must mix its own LIVE
+    parameters (and be pulled live by other participants), never its
+    stale self-snapshot. With every client active there is nothing left
+    to serve from the store, so pfeddst_async stays bitwise equal to
+    pfeddst under the same serve-mode staleness events — and the
+    serve-mode warning fires only for the non-versioned strategy."""
+    import warnings
+
+    cfg, fl, data, train = tiny_env
+    fl = dataclasses.replace(
+        fl, client_sample_ratio=1.0,
+        comms=CommsConfig(stale_mode="serve", p_stale=0.5),
+    )
+    with pytest.warns(UserWarning, match="serve"):
+        sync = make_strategy("pfeddst", cfg, fl, steps_per_epoch=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        asyn = make_strategy("pfeddst_async", cfg, fl, steps_per_epoch=1)
+    s1 = sync.init(jax.random.PRNGKey(1))
+    s2 = asyn.init(jax.random.PRNGKey(1))
+    for r in range(2):
+        k = jax.random.PRNGKey(5 + r)
+        s1, m1 = sync.round(s1, train, k)
+        s2, m2 = asyn.round(s2, train, k)
+    assert np.asarray(m2["stale"]).any()     # events did fire
+    assert float(m2["eff_lag_mean"]) == 0.0  # ...but nothing stale served
+    for a, b in zip(jax.tree_util.tree_leaves(s1.extractor),
+                    jax.tree_util.tree_leaves(s2.extractor)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_with_stragglers_runs_and_reports_staleness(tiny_env):
+    cfg, fl, data, train = tiny_env
+    prof = DeviceProfile(family="bimodal", straggler_fraction=0.5,
+                         straggler_slowdown=4.0)
+    fl = dataclasses.replace(
+        fl, client_sample_ratio=1.0, device_profile=prof, deadline_s=0.8,
+        comms=CommsConfig(stale_mode="serve", p_stale=0.25),
+    )
+    strat = make_strategy("pfeddst_async", cfg, fl, steps_per_epoch=1)
+    state = strat.init(jax.random.PRNGKey(1))
+    saw_lag = False
+    for r in range(4):
+        state, metrics = strat.round(state, train, jax.random.PRNGKey(2 + r))
+        assert float(metrics["round_wall_s"]) <= 0.8 + 1e-6
+        saw_lag = saw_lag or float(metrics["eff_lag_mean"]) > 0
+        from repro.utils.pytree import tree_any_nan
+
+        assert not bool(tree_any_nan(strat.params_for_eval(state)))
+    assert saw_lag
+    # deadline-truncated exchange: blocked stragglers pull nothing
+    edges = np.asarray(metrics["select_mask"])
+    active = np.asarray(metrics["active"])
+    assert not edges[~active].any()
+
+
+def test_simulator_history_hetero_fields(tiny_env):
+    from repro.fl import run_experiment
+
+    cfg, fl, data, train = tiny_env
+    prof = DeviceProfile(family="bimodal", straggler_fraction=0.5,
+                         straggler_slowdown=4.0)
+    fl_async = dataclasses.replace(
+        fl, device_profile=prof, deadline_s=0.8,
+        comms=CommsConfig(stale_mode="serve"),
+    )
+    fl_sync = dataclasses.replace(fl, device_profile=prof)
+    h_async = run_experiment("pfeddst_async", cfg, fl_async, data,
+                             num_rounds=2, eval_every=2, steps_per_epoch=1,
+                             verbose=False)
+    h_sync = run_experiment("pfeddst", cfg, fl_sync, data,
+                            num_rounds=2, eval_every=2, steps_per_epoch=1,
+                            verbose=False)
+    # async rounds are deadline-capped; sync rounds stall on stragglers
+    assert all(t <= 0.8 + 1e-6 for t in h_async.round_device_wall_s)
+    assert h_sync.device_time_s[-1] > h_async.device_time_s[-1]
+    d = h_async.to_dict()
+    for key in ("round_device_wall_s", "round_straggler_wall_s",
+                "round_eff_lag", "device_time_s", "round_stale_max"):
+        assert len(d[key]) > 0
+
+
+def test_stale_summary_mean_over_stale_only():
+    from repro.fl.simulator import _stale_summary
+
+    mean, mx = _stale_summary(np.array([0, 0, 3, 1, 0, 0, 0, 0]))
+    assert mean == 2.0          # (3+1)/2, NOT (3+1)/8
+    assert mx == 3
+    assert _stale_summary(np.zeros(8, np.int32)) == (0.0, 0)
+    assert _stale_summary(None) == (0.0, 0)
+
+
+# ---------------------------------------------------------------------------
+# genericity: the deadline gate composes onto a non-PFedDST spec
+# ---------------------------------------------------------------------------
+
+def test_deadline_gate_composes_onto_gossip_spec(tiny_env):
+    from repro.fl.engine import StrategySpec, make_round
+    from repro.comms.fabric import make_fabric
+
+    cfg, fl, data, train = tiny_env
+    fl = dataclasses.replace(fl, client_sample_ratio=1.0)
+    base = make_spec("dfedavgm", cfg, fl, steps_per_epoch=1)
+    dv = sample_device_vectors(
+        DeviceProfile(family="bimodal", straggler_fraction=0.5,
+                      straggler_slowdown=4.0), fl.num_clients,
+    )
+    rt = HeteroRuntime(
+        devices=dv,
+        wall_s=local_wall_times(dv, 2, DeviceProfile()),
+        deadline_s=0.8, alpha=0.5, depth=2,
+    )
+    gate = stage_deadline_gate(rt, get_round=lambda s: s["round"])
+    spec = StrategySpec(
+        name="dfedavgm_deadline",
+        init=base.init,
+        stages=(gate,) + base.stages,
+        params_for_eval=base.params_for_eval,
+        key_streams=base.key_streams,
+        payload_kind=base.payload_kind,
+    )
+    fabric = make_fabric(CommsConfig(), fl.num_clients)
+    round_fn = make_round(spec, fl, fabric)
+    state = spec.init(jax.random.PRNGKey(1))
+    state, metrics = round_fn(state, train, jax.random.PRNGKey(2))
+    active = np.asarray(metrics["active"])
+    # at round 0 the stragglers with nonzero offsets are gated out
+    assert 0 < active.sum() < fl.num_clients
+    assert float(metrics["round_wall_s"]) == pytest.approx(0.8)
+    # gated clients exchange nothing — the fabric prices the truncation
+    edges = np.asarray(metrics["comm_edges"])
+    assert not edges[~active].any()

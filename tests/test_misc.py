@@ -46,7 +46,7 @@ def test_unknown_arch_raises():
 def test_strategy_registry():
     assert set(STRATEGIES) == {
         "fedavg", "fedper", "fedbabu", "dfedavgm", "dispfl", "dfedpgp",
-        "pfeddst", "pfeddst_random",
+        "pfeddst", "pfeddst_random", "pfeddst_async",
     }
 
 

@@ -1,0 +1,100 @@
+"""Markdown link checker for README + docs/ (make docs-check, CI).
+
+Validates every inline markdown link `[text](target)` in the given
+files/directories:
+
+  * relative file targets must exist on disk (resolved from the
+    linking file's directory);
+  * `#anchor` fragments (own-file or `file.md#anchor`) must match a
+    heading in the target file, using GitHub's slug rules (lowercase,
+    spaces → dashes, punctuation stripped);
+  * external schemes (http/https/mailto) are recorded but not fetched —
+    CI must not depend on third-party uptime.
+
+Exit code 1 with a per-link report when anything is broken.
+
+    python tools/check_links.py README.md docs
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[([^\]]*)\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, strip punctuation, spaces→dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(md_path: str) -> set:
+    with open(md_path, encoding="utf-8") as f:
+        content = CODE_FENCE_RE.sub("", f.read())
+    return {github_slug(h) for h in HEADING_RE.findall(content)}
+
+
+def check_file(md_path: str) -> list:
+    """→ list of (md_path, target, reason) problems."""
+    with open(md_path, encoding="utf-8") as f:
+        content = CODE_FENCE_RE.sub("", f.read())
+    problems = []
+    base = os.path.dirname(os.path.abspath(md_path))
+    for _, target in LINK_RE.findall(content):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            dest = os.path.normpath(os.path.join(base, path_part))
+            if not os.path.exists(dest):
+                problems.append((md_path, target, "file not found"))
+                continue
+        else:
+            dest = md_path
+        if anchor:
+            if not dest.endswith(".md") or os.path.isdir(dest):
+                continue                                # non-md anchors
+            if github_slug(anchor) not in heading_slugs(dest):
+                problems.append((md_path, target, "anchor not found"))
+    return problems
+
+
+def collect_md(paths) -> list:
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, files in os.walk(p):
+                out.extend(os.path.join(root, f) for f in files
+                           if f.endswith(".md"))
+        elif p.endswith(".md"):
+            out.append(p)
+    return sorted(set(out))
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:]) or ["README.md",
+                                                             "docs"]
+    md_files = collect_md(paths)
+    if not md_files:
+        print("check_links: no markdown files found under", paths)
+        return 1
+    problems = []
+    n_links = 0
+    for md in md_files:
+        with open(md, encoding="utf-8") as f:
+            n_links += len(LINK_RE.findall(CODE_FENCE_RE.sub("", f.read())))
+        problems.extend(check_file(md))
+    for md, target, reason in problems:
+        print(f"BROKEN  {md}: ({target}) — {reason}")
+    print(f"check_links: {len(md_files)} files, {n_links} links, "
+          f"{len(problems)} broken")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
