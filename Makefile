@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify verify-fast test deps bench-comms bench-round bench-async \
-	docs-check
+	bench-select docs-check
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -27,6 +27,10 @@ bench-round:
 # sync vs semi-async accuracy-vs-wall-clock → benchmarks/results/BENCH_async.json
 bench-async:
 	$(PY) benchmarks/async_bench.py
+
+# fused vs unfused Eq. 7–9 selection → benchmarks/results/BENCH_select.json
+bench-select:
+	$(PY) benchmarks/select_bench.py
 
 # markdown link check over README + docs/ (also a CI job)
 docs-check:

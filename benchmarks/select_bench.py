@@ -1,0 +1,168 @@
+"""Fused streaming selection vs the unfused dense path.
+
+Sweeps M × k and times, on this host's backend,
+
+  * unfused — the dense pipeline the repo shipped before the fused
+    selection PR: materialize cosine s_d, recency s_p, and the combined
+    (M, M) Eq. 9 score matrix, then select_peers top-k. Peak transient
+    footprint ≈ 5 (M, M) f32 matrices (raw Gram, cosine, s_p, scores,
+    candidate-masked scores) — and the seed's one-hot mask construction
+    added an (M, k, M) bool on top (replaced by an O(M·k) scatter in the
+    same PR; both estimates are reported).
+  * fused — the streaming pipeline (core.scoring.score_topk →
+    kernels/select_score): Eq. 7–9 combined per column block with a
+    running per-row top-k. Peak transient footprint ≈ one (M, block)
+    score panel; only (M, k) indices/values reach HBM. Off-TPU this runs
+    the jnp column-block scan (`impl="blocked"` — the same algorithm the
+    Pallas kernel runs tile-resident on TPU; the kernel itself executes
+    per-grid-step Python in interpret mode, so timing it on CPU measures
+    the interpreter, not the algorithm).
+
+Both paths include the (M, P) header Gram so the comparison is the full
+scoring+selection stage, not just the top-k. `--smoke` additionally
+checks the interpret-mode Pallas kernel against the dense oracle
+(indices exactly) and keeps the sweep to the smallest M — the CI fast
+tier runs this on every push.
+
+Writes benchmarks/results/BENCH_select.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selection import select_peers, topk_to_mask
+from repro.kernels.ops import select_topk
+from repro.kernels.ref import select_topk_ref
+from repro.kernels.select_score import select_topk as select_topk_pallas
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+OUT = os.path.join(RESULTS, "BENCH_select.json")
+
+P = 64            # flattened header width — selection cost, not Gram cost,
+                  # is the subject; both paths pay the same (M, P) Gram
+ALPHA, LAM = 1.0, 0.5
+
+
+def _inputs(m, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (m, P), jnp.float32)
+    last = jax.random.randint(ks[1], (m, m), -1, 8)
+    s_l = jax.random.uniform(ks[2], (m, m), maxval=3.0)
+    cand = jax.random.bernoulli(ks[3], 0.8, (m, m))
+    return x, last, s_l, cand
+
+
+def _dense_select(x, last, s_l, cand, t, k):
+    """The unfused path: dense Eq. 7–9 matrices, then top-k."""
+    scores, _ = _dense_scores(x, last, s_l, cand, t)
+    return select_peers(scores, k=k, candidate_mask=cand)
+
+
+def _dense_scores(x, last, s_l, cand, t):
+    from repro.core.scoring import header_distance_matrix, recency_scores
+    from repro.core.selection import combined_scores
+
+    s_d = header_distance_matrix(x)
+    s_p = recency_scores(last, t, LAM)
+    return combined_scores(s_l, s_d, s_p, alpha=ALPHA, comm_cost=1.0), s_d
+
+
+def _fused_select(x, last, s_l, cand, t, k):
+    vals, idx, _ = select_topk(
+        x, last, s_l, t, jnp.float32(1.0), cand,
+        k=k, alpha=ALPHA, lam=LAM, impl="blocked",
+    )
+    return topk_to_mask(idx, vals, x.shape[0])
+
+
+def _time(fn, *args, repeats=5):
+    out = fn(*args)                      # compile
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_case(m, k, repeats=5):
+    x, last, s_l, cand = _inputs(m)
+    t = jnp.int32(7)
+    dense = jax.jit(_dense_select, static_argnames=("k",))
+    fused = jax.jit(_fused_select, static_argnames=("k",))
+    mask_d = np.asarray(dense(x, last, s_l, cand, t, k))
+    mask_f = np.asarray(fused(x, last, s_l, cand, t, k))
+    agree = bool((mask_d == mask_f).all())
+    td = _time(dense, x, last, s_l, cand, t, k, repeats=repeats)
+    tf = _time(fused, x, last, s_l, cand, t, k, repeats=repeats)
+    from repro.kernels.select_score import DEFAULT_COL_BLOCK
+
+    blk = min(DEFAULT_COL_BLOCK, m)
+    return {
+        "M": m, "k": k, "backend": jax.default_backend(),
+        "unfused_wall_s": td, "fused_wall_s": tf,
+        "speedup": td / tf,
+        "masks_agree": agree,
+        # peak transient HBM estimates for the selection stage
+        # (excluding the shared (M, P) header read):
+        "unfused_peak_bytes_est": 5 * m * m * 4 + m * m,   # 5×(M,M) f32 + mask
+        "seed_onehot_bytes": m * k * m,                     # the fixed blow-up
+        "fused_peak_bytes_est": 2 * m * blk * 4 + m * (k + blk) * 8,
+    }
+
+
+def smoke_kernel_parity(m=64, k=10):
+    """Interpret-mode fused Pallas kernel vs the dense oracle."""
+    x, last, s_l, cand = _inputs(m, seed=1)
+    t = jnp.int32(3)
+    cost = jax.random.uniform(jax.random.PRNGKey(9), (m, m))
+    rv, ri, _ = select_topk_ref(x, last, s_l, t, cost, cand,
+                                k=k, alpha=ALPHA, lam=LAM)
+    pv, pi, _ = select_topk_pallas(x, last, s_l, t, cost, cand,
+                                   k=k, alpha=ALPHA, lam=LAM,
+                                   block_m=32, block_p=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(pv), np.asarray(rv), atol=1e-5)
+    return {"kernel": "select_score(pallas, interpret)",
+            "M": m, "k": k, "indices_exact": True}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier: smallest M only + kernel parity check")
+    ap.add_argument("--out", default=OUT)
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    ms = [256] if args.smoke else [256, 1024, 4096]
+    ks = [4, 10, 32]
+    rows = [bench_case(m, k, repeats=args.repeats) for m in ms for k in ks]
+    result = {"cases": rows, "kernel_parity": smoke_kernel_parity()}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+
+    print(f"{'M':>6}{'k':>4}{'unfused_s':>12}{'fused_s':>10}{'×':>7}"
+          f"{'unfused_MiB':>13}{'fused_MiB':>11}  agree")
+    for r in rows:
+        print(f"{r['M']:6d}{r['k']:4d}{r['unfused_wall_s']:12.4f}"
+              f"{r['fused_wall_s']:10.4f}{r['speedup']:7.2f}"
+              f"{r['unfused_peak_bytes_est'] / 2**20:13.2f}"
+              f"{r['fused_peak_bytes_est'] / 2**20:11.2f}  "
+              f"{r['masks_agree']}")
+    assert all(r["masks_agree"] for r in rows)
+    print("wrote", args.out)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -292,6 +292,11 @@ class FLConfig:
     recency_lambda: float = 0.5        # λ
     selection: str = "topk"            # "topk" | "threshold" | "random"
     score_threshold: float = 0.0       # s*  (used when selection == "threshold")
+    # route Eq. 7–9 scoring + top-k through the fused streaming pipeline
+    # (kernels/select_score): no (M, M) score matrix in HBM. With
+    # selection="threshold"/"random" the flag falls back to the blocked
+    # Eq. 7 Gram kernel only (see core.rounds.make_pfeddst_stages).
+    use_score_kernel: bool = False
     probe_size: int = 32               # per-client probe batch for s_l (Eq. 6)
     # Dis-PFL baseline (fl/strategies dispfl spec)
     dispfl_sparsity: float = 0.5       # personal-mask sparsity

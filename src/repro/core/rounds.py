@@ -39,8 +39,15 @@ from repro.core.scoring import (
     header_distance_matrix,
     loss_disparity_rows,
     recency_scores,
+    score_topk,
 )
-from repro.core.selection import combined_scores, select_peers, update_recency
+from repro.core.selection import (
+    NEG,
+    combined_scores,
+    select_peers,
+    topk_to_mask,
+    update_recency,
+)
 from repro.data.pipeline import sample_client_batches
 from repro.fl.engine import (
     ExchangePlan,
@@ -67,6 +74,18 @@ def make_pfeddst_stages(
     hetero=None,
 ):
     """Algorithm 1 as engine stages over a PopulationState.
+
+    use_score_kernel: route Eq. 7–9 scoring + top-k selection through the
+    fused streaming pipeline (core.scoring.score_topk →
+    kernels/select_score): per-tile cosine + score combination with a
+    running per-row top-k, so no (M, M) score matrix is materialized in
+    HBM (O(M·k) selection output instead of O(M²)). Applies to the
+    default "topk" selection mode — and to the hetero served-header path,
+    which scores the versions peers actually publish — and changes scores
+    only at fp tolerance vs the dense path. "threshold" selection is
+    inherently dense ((M, M) mask output) and "random" never scores, so
+    both keep the unfused path; for those modes the flag still routes the
+    Eq. 7 Gram through the blocked Pallas kernel as before.
 
     hetero: optional `repro.fl.hetero.HeteroRuntime` — the semi-async
     variant (`pfeddst_async`). It prepends the deadline gate, scores and
@@ -122,36 +141,55 @@ def make_pfeddst_stages(
             header_view = served["h"]
         else:
             header_view = state.header
-        s_d = header_distance_matrix(
-            flatten_headers(header_view), use_kernel=use_score_kernel
-        )                                                        # Eq. 7
-        s_p = recency_scores(
-            state.last_selected, state.round, fl.recency_lambda
-        )                                                        # Eq. 8
         cost = fl.comm_cost if ctx.cost is None else ctx.cost
-        scores = combined_scores(
-            s_l, s_d, s_p, alpha=fl.alpha, comm_cost=cost
-        )                                                        # Eq. 9
-
-        # ---- 2. selection -------------------------------------------------
-        if fl.selection == "threshold":
-            mask = select_peers(
-                scores, threshold=fl.score_threshold,
+        # degenerate populations (M < 2, k < 1) keep the dense path: its
+        # select_peers returns the explicit empty mask for k = 0
+        fused = (use_score_kernel and m > 1 and fl.peers_per_round > 0
+                 and fl.selection not in ("threshold", "random"))
+        if fused:
+            # ---- 1b/2. fused Eq. 7–9 + top-k (streaming pipeline) --------
+            vals, idx, sd_stats = score_topk(
+                flatten_headers(header_view), state.last_selected, s_l,
+                state.round, alpha=fl.alpha, lam=fl.recency_lambda,
+                comm_cost=cost, k=min(fl.peers_per_round, m - 1),
                 candidate_mask=ctx.cand,
             )
-        elif fl.selection == "random":
-            # ablation: identical round structure, uniformly random peers
-            rand = jnp.where(
-                jnp.eye(m, dtype=bool), -1.0,
-                jax.random.uniform(ctx.keys["rand"], (m, m)),
-            )
-            mask = select_peers(
-                rand, k=fl.peers_per_round, candidate_mask=ctx.cand
-            )
+            mask = topk_to_mask(idx, vals, m)
+            ctx.aux.update(s_l=s_l, s_l_rows=s_l_rows,
+                           topk_vals=vals, topk_idx=idx,
+                           sd_stats=sd_stats)
         else:
-            mask = select_peers(
-                scores, k=fl.peers_per_round, candidate_mask=ctx.cand
-            )
+            s_d = header_distance_matrix(
+                flatten_headers(header_view), use_kernel=use_score_kernel
+            )                                                    # Eq. 7
+            s_p = recency_scores(
+                state.last_selected, state.round, fl.recency_lambda
+            )                                                    # Eq. 8
+            scores = combined_scores(
+                s_l, s_d, s_p, alpha=fl.alpha, comm_cost=cost
+            )                                                    # Eq. 9
+
+            # ---- 2. selection --------------------------------------------
+            if fl.selection == "threshold":
+                mask = select_peers(
+                    scores, threshold=fl.score_threshold,
+                    candidate_mask=ctx.cand,
+                )
+            elif fl.selection == "random":
+                # ablation: identical round structure, random peers
+                rand = jnp.where(
+                    jnp.eye(m, dtype=bool), -1.0,
+                    jax.random.uniform(ctx.keys["rand"], (m, m)),
+                )
+                mask = select_peers(
+                    rand, k=fl.peers_per_round, candidate_mask=ctx.cand
+                )
+            else:
+                mask = select_peers(
+                    scores, k=fl.peers_per_round, candidate_mask=ctx.cand
+                )
+            ctx.aux.update(s_l=s_l, s_l_rows=s_l_rows, s_d=s_d,
+                           scores=scores)
         mask = mask & ctx.active[:, None]
 
         if hetero is not None:
@@ -175,7 +213,6 @@ def make_pfeddst_stages(
         ctx.plan = ExchangePlan(
             "p2p", active=ctx.active, edges=mask, weights=weights,
         )
-        ctx.aux.update(s_l=s_l, s_l_rows=s_l_rows, s_d=s_d, scores=scores)
         return state
 
     def aggregate(state: PopulationState, ctx: RoundContext):
@@ -230,19 +267,29 @@ def make_pfeddst_stages(
     def update_context(state: PopulationState, ctx: RoundContext):
         # ---- 7. context arrays --------------------------------------------
         m = ctx.m
-        mask, scores = ctx.plan.edges, ctx.aux["scores"]
+        mask = ctx.plan.edges
         loss_matrix = jnp.where(
             ctx.active[:, None], ctx.aux["s_l"], state.loss_matrix
         )
-        s_d = ctx.aux["s_d"]
+        if "scores" in ctx.aux:
+            scores, s_d = ctx.aux["scores"], ctx.aux["s_d"]
+            sel_sum = jnp.sum(jnp.where(mask, scores, 0.0))
+            sd_sum, sd_trace = jnp.sum(s_d), jnp.trace(s_d)
+        else:
+            # fused pipeline: the selected scores ARE the emitted top-k
+            # values (mask = scatter of the valid indices ∧ active rows),
+            # and the s_d stats come from the kernel's row statistics
+            vals = ctx.aux["topk_vals"]
+            sel = (vals > NEG / 2) & ctx.active[:, None]
+            sel_sum = jnp.sum(jnp.where(sel, vals, 0.0))
+            sd_sum = jnp.sum(ctx.aux["sd_stats"][:, 0])
+            sd_trace = jnp.sum(ctx.aux["sd_stats"][:, 1])
         ctx.metrics.update(
-            mean_selected_score=jnp.sum(jnp.where(mask, scores, 0.0))
-            / jnp.maximum(jnp.sum(mask), 1),
+            mean_selected_score=sel_sum / jnp.maximum(jnp.sum(mask), 1),
             # mean over the rows actually evaluated this round (the
             # sampled clients) — unsampled rows are served from cache
             s_l_mean=jnp.mean(ctx.aux["s_l_rows"]),
-            s_d_offdiag_mean=(jnp.sum(s_d) - jnp.trace(s_d))
-            / (m * (m - 1)),
+            s_d_offdiag_mean=(sd_sum - sd_trace) / (m * (m - 1)),
             select_mask=mask,
         )
         return state._replace(

@@ -20,6 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.peer_score import gram_to_cosine
 from repro.models import model as model_mod
 from repro.utils.pytree import tree_flatten_vector
 
@@ -76,16 +77,17 @@ def header_distance_matrix(headers_flat, *, use_kernel: bool = False):
     """S_d[i, j] = cos(h_i, h_j) ∈ [-1, 1]. headers_flat: (M, P).
 
     use_kernel routes through the Pallas blocked-Gram kernel (TPU path for
-    d_model×vocab LLM headers; interpret-mode on CPU).
+    d_model×vocab LLM headers; interpret-mode on CPU). Both paths share
+    `gram_to_cosine` — Gram first, then diagonal-norm normalization with
+    the zero-norm guard and [-1, 1] clip — so flipping `use_score_kernel`
+    cannot perturb Eq. 9 scores past fp tolerance.
     """
     if use_kernel:
         from repro.kernels.ops import cosine_gram
 
         return cosine_gram(headers_flat)
     x = headers_flat.astype(jnp.float32)
-    norms = jnp.sqrt(jnp.sum(jnp.square(x), axis=1, keepdims=True)) + 1e-12
-    xn = x / norms
-    return xn @ xn.T
+    return gram_to_cosine(x @ x.T)
 
 
 def header_gram_tree(stacked_header):
@@ -103,8 +105,47 @@ def header_gram_tree(stacked_header):
     for leaf in leaves:
         x = leaf.reshape(m, -1).astype(jnp.float32)
         raw = raw + jnp.einsum("ip,jp->ij", x, x)
-    norms = jnp.sqrt(jnp.maximum(jnp.diagonal(raw), 0.0)) + 1e-12
-    return jnp.clip(raw / (norms[:, None] * norms[None, :]), -1.0, 1.0)
+    return gram_to_cosine(raw)
+
+
+# ---------------------------------------------------------------------------
+# fused Eq. 7–9 + top-k — the streaming selection entry point
+# ---------------------------------------------------------------------------
+
+def score_topk(headers_flat, last_selected, loss_matrix, round_t, *,
+               alpha: float, lam: float, comm_cost, k: int,
+               candidate_mask=None, impl: str = "auto"):
+    """Fused Eq. 7–9 scoring + streaming per-row top-k selection.
+
+    The masked/scored-Gram entry point: instead of materializing the
+    (M, M) cosine, recency, and score matrices (header_distance_matrix →
+    recency_scores → combined_scores → select_peers), the whole chain
+    runs tile-resident in the kernels/select_score pipeline.
+
+    headers_flat: (M, P); last_selected: (M, M) int32 context array t;
+    loss_matrix: (M, M) Eq. 6 scores; round_t: scalar round;
+    comm_cost: the Eq. 9 `c` — scalar or per-link (M, M) matrix.
+
+    → (values (M, k), indices (M, k), s_d_stats (M, 2)), where
+    s_d_stats[:, 0] = Σ_j s_d[i, j] and s_d_stats[:, 1] = s_d[i, i]
+    (enough for the round's s_d metrics without the dense matrix).
+    Convert to a selection mask with `selection.topk_to_mask`.
+    """
+    from repro.kernels.ops import select_topk
+
+    m = headers_flat.shape[0]
+    cost = jnp.asarray(comm_cost, jnp.float32)
+    if cost.ndim not in (0, 2) or (cost.ndim == 2
+                                   and cost.shape != (m, m)):
+        raise ValueError(
+            f"comm_cost must be a scalar or ({m}, {m}) matrix, "
+            f"got shape {cost.shape}"
+        )
+    return select_topk(
+        headers_flat, last_selected, loss_matrix,
+        jnp.asarray(round_t, jnp.int32), cost, candidate_mask,
+        k=k, alpha=float(alpha), lam=float(lam), impl=impl,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -61,10 +61,30 @@ def select_peers(
         return scores > threshold
     m = scores.shape[-1]
     k = min(k, m - 1)
-    _, idx = jax.lax.top_k(scores, k)  # (M, k)
-    mask = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
-    # drop peers that were only selected at −inf (fewer than k candidates)
-    return mask & (scores > NEG / 2)
+    if k <= 0:
+        # k = 0 with no threshold is an explicit empty selection —
+        # top_k(·, 0) is a lowering error on some backends
+        return jnp.zeros(scores.shape, bool)
+    vals, idx = jax.lax.top_k(scores, k)  # (M, k)
+    # scatter, NOT one_hot(idx).any(): the one-hot path materializes an
+    # (M, k, M) bool intermediate — O(M²k) HBM at population scale
+    return topk_to_mask(idx, vals, m)
+
+
+def topk_to_mask(indices, values, m: int):
+    """(M, k) top-k indices/values → bool (M, M) selection mask.
+
+    The index-based path of the fused selection pipeline
+    (core.scoring.score_topk): one O(M·k) scatter instead of a dense
+    one-hot. Entries whose value is ≤ NEG/2 were only selected at the
+    masked-score floor (fewer than k real candidates) and are dropped —
+    identical semantics to the dense `select_peers` path.
+    """
+    rows = jnp.arange(indices.shape[0])[:, None]
+    valid = values > NEG / 2
+    return jnp.zeros((indices.shape[0], m), bool).at[rows, indices].set(
+        valid
+    )
 
 
 def update_recency(last_selected, select_mask, t):

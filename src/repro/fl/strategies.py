@@ -342,7 +342,8 @@ def _pfeddst_spec(cfg, fl, steps_per_epoch, random_select: bool,
         init=init,
         stages=make_pfeddst_stages(
             cfg, fl_used, steps, steps_per_epoch=steps_per_epoch,
-            probe_size=fl.probe_size, hetero=hetero,
+            probe_size=fl.probe_size,
+            use_score_kernel=fl.use_score_kernel, hetero=hetero,
         ),
         params_for_eval=eval_params,
         key_streams=PFEDDST_STREAMS,

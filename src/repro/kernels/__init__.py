@@ -2,6 +2,8 @@
 
   flash_attention — blocked online-softmax attention (prefill hot spot)
   peer_score      — blocked cosine Gram over client headers (paper Eq. 7)
+  select_score    — fused Eq. 7–9 scoring + streaming per-row top-k
+                    (selection without the (M, M) score matrix in HBM)
   wkv_chunked     — RWKV6 WKV recurrence as chunked block-parallel scan
 
 Each <name>.py carries the pl.pallas_call + BlockSpec tiling; ops.py the

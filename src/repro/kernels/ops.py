@@ -8,6 +8,7 @@ Mosaic. `interpret=None` (default) auto-detects.
 These are the hooks the model/core layers call:
   * models/attention.py  backend="flash"  → flash_attention
   * core/scoring.py      use_kernel=True  → cosine_gram
+  * core/scoring.py      score_topk       → select_topk (fused Eq. 7–9)
   * models/rwkv.py       wkv_fn=wkv       → wkv_chunked
 """
 from __future__ import annotations
@@ -18,6 +19,7 @@ import jax
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import peer_score as _ps
+from repro.kernels import select_score as _ss
 from repro.kernels import wkv_chunked as _wkv
 
 
@@ -62,6 +64,55 @@ def cosine_gram(
     return _ps.cosine_gram(
         x, block_m=block_m, block_p=block_p, interpret=_interpret(interpret)
     )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "k", "alpha", "lam", "block_m", "block_p", "col_block",
+        "interpret", "impl",
+    ),
+)
+def select_topk(
+    x,
+    last_selected,
+    s_l,
+    t,
+    cost,
+    candidate_mask=None,
+    *,
+    k: int,
+    alpha: float,
+    lam: float,
+    block_m: int = _ps.DEFAULT_BLOCK_M,
+    block_p: int = _ps.DEFAULT_BLOCK_P,
+    col_block: int = _ss.DEFAULT_COL_BLOCK,
+    interpret: bool | None = None,
+    impl: str = "auto",
+):
+    """Streaming selection layer: fused Eq. 7–9 scoring + per-row top-k.
+
+    → (values (M, k) f32, indices (M, k) int32, s_d stats (M, 2) f32),
+    never materializing the (M, M) score matrix in HBM.
+
+    impl: "pallas" (the fused TPU kernel; interpret-mode off-TPU),
+    "blocked" (the jnp column-block scan — same algorithm, fast on any
+    backend), or "auto" (pallas on TPU, blocked elsewhere).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "blocked"
+    if impl == "pallas":
+        return _ss.select_topk(
+            x, last_selected, s_l, t, cost, candidate_mask,
+            k=k, alpha=alpha, lam=lam, block_m=block_m, block_p=block_p,
+            interpret=_interpret(interpret),
+        )
+    if impl == "blocked":
+        return _ss.select_topk_blocked(
+            x, last_selected, s_l, t, cost, candidate_mask,
+            k=k, alpha=alpha, lam=lam, block=col_block,
+        )
+    raise ValueError(f"unknown select_topk impl {impl!r}")
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

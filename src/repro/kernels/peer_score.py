@@ -29,6 +29,37 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK_M = 128
 DEFAULT_BLOCK_P = 512
 
+# TPU f32 tile grid: (sublane, lane) = (8, 128). Block shapes must land on
+# this grid or Mosaic lowering fails — even when the padded array would fit.
+SUBLANE = 8
+LANE = 128
+
+
+def ceil_to(v: int, grain: int) -> int:
+    """Smallest multiple of `grain` ≥ v."""
+    return -(-v // grain) * grain
+
+
+def clamp_blocks(m: int, p: int, block_m: int, block_p: int):
+    """Clamp (block_m, block_p) to the problem size without leaving the
+    TPU tile grid: small M/P shrink the blocks, but only to the next
+    (8, 128)-aligned size (the array is padded up to the block). The old
+    `min(block_m, max(m, 8))` clamp could emit e.g. block_m=5 for M=5 —
+    fine in interpret mode, a Mosaic lowering error on hardware."""
+    block_m = min(block_m, ceil_to(max(m, 1), SUBLANE))
+    block_p = min(block_p, ceil_to(max(p, 1), LANE))
+    return block_m, block_p
+
+
+def gram_to_cosine(raw):
+    """(M, M) raw Gram → cosine matrix: normalize by the diagonal norms,
+    guard zero-norm rows, clip to [-1, 1]. The single definition of the
+    Eq. 7 normalization — the Pallas wrapper and the pure-jnp oracle in
+    core/scoring both use it, so flipping `use_score_kernel` cannot move
+    Eq. 9 scores past fp tolerance."""
+    norms = jnp.sqrt(jnp.maximum(jnp.diagonal(raw), 0.0)) + 1e-12
+    return jnp.clip(raw / (norms[:, None] * norms[None, :]), -1.0, 1.0)
+
 
 def _gram_kernel(x_i_ref, x_j_ref, out_ref, acc_scr, *, num_p_blocks: int):
     pi = pl.program_id(2)
@@ -58,8 +89,7 @@ def raw_gram(
 ):
     """x: (M, P) → (M, M) float32 un-normalized Gram x @ x.T."""
     m, p = x.shape
-    block_m = min(block_m, max(m, 8))
-    block_p = min(block_p, max(p, 128))
+    block_m, block_p = clamp_blocks(m, p, block_m, block_p)
     pm = (-m) % block_m
     pp = (-p) % block_p
     if pm or pp:
@@ -85,6 +115,4 @@ def raw_gram(
 
 def cosine_gram(x, **kw):
     """x: (M, P) → (M, M) f32 cosine-similarity matrix (paper Eq. 7)."""
-    raw = raw_gram(x, **kw)
-    norms = jnp.sqrt(jnp.maximum(jnp.diag(raw), 0.0)) + 1e-12
-    return jnp.clip(raw / (norms[:, None] * norms[None, :]), -1.0, 1.0)
+    return gram_to_cosine(raw_gram(x, **kw))

@@ -58,6 +58,49 @@ def cosine_gram_ref(x):
 
 
 # ---------------------------------------------------------------------------
+# fused-selection oracle — dense Eq. 7–9 scores + top-k (paper §II-B/C)
+# ---------------------------------------------------------------------------
+
+NEG = -1e30   # finite -inf of masked scores (repro.core.selection.NEG)
+
+
+def select_score_ref(x, last_selected, s_l, t, cost, candidate_mask=None,
+                     *, alpha: float, lam: float):
+    """Dense masked Eq. 9 score matrix — the fused pipeline's definition
+    of correctness. → (scores (M, M) f32, cosine s_d (M, M) f32).
+
+    Masked entries (diagonal, non-candidates) are exactly NEG so the
+    tie-break behaviour of top_k matches the streaming implementations.
+    """
+    m = x.shape[0]
+    xf = x.astype(jnp.float32)
+    inv = 1.0 / (jnp.sqrt(jnp.sum(xf * xf, axis=1)) + 1e-12)
+    cos = jnp.clip((xf @ xf.T) * inv[:, None] * inv[None, :], -1.0, 1.0)
+    dt = jnp.maximum(t - last_selected, 0).astype(jnp.float32)
+    s_p = jnp.where(last_selected < 0, 1.0, 1.0 - jnp.exp(-lam * dt))
+    c = jnp.asarray(cost, jnp.float32)
+    if c.ndim == 0:
+        c = jnp.full((m, m), c)
+    s = s_p * (alpha * s_l.astype(jnp.float32) - cos + c)
+    s = jnp.where(jnp.eye(m, dtype=bool), NEG, s)
+    if candidate_mask is not None:
+        s = jnp.where(candidate_mask, s, NEG)
+    return s, cos
+
+
+def select_topk_ref(x, last_selected, s_l, t, cost, candidate_mask=None,
+                    *, k: int, alpha: float, lam: float):
+    """→ (values (M, k), indices (M, k), stats (M, 2)) exactly as the
+    fused kernel emits them: lax.top_k over the dense masked scores,
+    stats = [Σ_j s_d[i, j], s_d[i, i]]."""
+    s, cos = select_score_ref(x, last_selected, s_l, t, cost,
+                              candidate_mask, alpha=alpha, lam=lam)
+    vals, idx = jax.lax.top_k(s, k)
+    stats = jnp.stack([jnp.sum(cos, axis=1), jnp.diagonal(cos)], axis=1)
+    return vals, idx, stats
+
+
+# ---------------------------------------------------------------------------
 # WKV oracle — per-step recurrence (RWKV6 data-dependent decay)
 # ---------------------------------------------------------------------------
 

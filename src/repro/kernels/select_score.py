@@ -1,0 +1,339 @@
+"""Pallas TPU fused selection kernel — Eq. 7–9 scoring + streaming top-k.
+
+PFedDST's peer choice needs, for every client pair (i, j),
+
+    S[i, j] = s_p · (α·s_l − s_d + c)        (paper Eq. 9)
+
+with s_d the header cosine (Eq. 7) and s_p the recency CDF (Eq. 8) —
+followed by a per-row top-k. The unfused path materializes five dense
+(M, M) f32 matrices in HBM (raw Gram, cosine, s_p, scores, masked
+scores); at the ROADMAP's population scale the score matrix alone is
+O(M²) HBM and OOMs long before training does.
+
+TPU adaptation: extend the blocked Gram kernel (kernels/peer_score.py)
+so the score matrix never leaves VMEM. Grid (i, j, p), p innermost:
+
+  * the p axis accumulates the (bm × bm) raw-Gram tile in a VMEM f32
+    scratch (MXU dot per (bm × bp) block pair), exactly like raw_gram;
+  * at the last p block the tile is finalized IN REGISTERS: normalize by
+    the precomputed inverse header norms → cosine, combine with the
+    s_l / last-selected / cost / candidate tiles into Eq. 9 scores, mask
+    the diagonal and out-of-range columns;
+  * the finalized tile folds into a running per-row top-k — values and
+    indices (the row's selection threshold) carried in VMEM scratch
+    across the j axis — via k rounds of masked max-extraction (ties
+    break toward the lowest column index, bit-matching jax.lax.top_k);
+  * at the last (j, p) block the (bm, k) winners are emitted.
+
+Only the (M, k) indices/values and an (M, 2) Eq. 7 row-statistics vector
+(row cosine sum + diagonal, for round metrics) ever touch HBM: per-round
+selection HBM falls from O(M²) to O(M·k).
+
+`select_topk_blocked` is the same streaming algorithm expressed as a
+jnp column-block scan — the fast off-TPU path (the Pallas kernel runs
+interpret-mode per grid step on CPU) and the benchmark's fused
+reference; `kernels.ref.select_topk_ref` is the dense oracle both are
+tested against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.peer_score import (
+    DEFAULT_BLOCK_M,
+    DEFAULT_BLOCK_P,
+    LANE,
+    SUBLANE,
+    ceil_to,
+    clamp_blocks,
+)
+
+# matches repro.core.selection.NEG — the finite -inf of masked scores.
+# True -inf marks the kernel's own padding columns: strictly below NEG,
+# so padding can never displace a real (even fully-masked) candidate.
+NEG = -1e30
+
+DEFAULT_COL_BLOCK = 512   # column-block width of the jnp streaming path
+
+
+def _recency(last_selected, t, lam: float):
+    """Eq. 8 on a tile: 1 − exp(−λ·(t − t0)); never-selected (−1) → 1."""
+    dt = jnp.maximum(t - last_selected, 0).astype(jnp.float32)
+    return jnp.where(last_selected < 0, 1.0, 1.0 - jnp.exp(-lam * dt))
+
+
+def _select_kernel(*refs, num_p_blocks: int, num_j_blocks: int,
+                   block_m: int, kp: int, m: int, k: int,
+                   alpha: float, lam: float,
+                   cost_is_matrix: bool, has_cand: bool):
+    x_i, x_j, inv_i, inv_j, last, sl, t_ref, cost_ref = refs[:8]
+    off = 8 + int(has_cand)
+    cand_ref = refs[8] if has_cand else None
+    vals_o, idx_o, stats_o = refs[off:off + 3]
+    acc, vscr, iscr, sscr = refs[off + 3:]
+
+    i, j, pi = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init_acc():
+        acc[...] = jnp.zeros_like(acc)
+
+    @pl.when((j == 0) & (pi == 0))
+    def _init_carry():
+        vscr[...] = jnp.full_like(vscr, -jnp.inf)
+        iscr[...] = jnp.zeros_like(iscr)
+        sscr[...] = jnp.zeros_like(sscr)
+
+    acc[...] += jax.lax.dot_general(
+        x_i[...].astype(jnp.float32), x_j[...].astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pi == num_p_blocks - 1)
+    def _score_and_merge():
+        bm = block_m
+        # ---- Eq. 7: accumulated Gram tile → cosine tile ------------------
+        cos = acc[...] * inv_i[0, :][:, None] * inv_j[0, :][None, :]
+        cos = jnp.clip(cos, -1.0, 1.0)
+        rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
+        cols = j * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
+        # ---- Eq. 8 + Eq. 9 ----------------------------------------------
+        s_p = _recency(last[...], t_ref[0, 0], lam)
+        c = cost_ref[...] if cost_is_matrix else cost_ref[0, 0]
+        s = s_p * (alpha * sl[...] - cos + c)
+        s = jnp.where(rows == cols, NEG, s)
+        if has_cand:
+            s = jnp.where(cand_ref[...] != 0, s, NEG)
+        col_ok = cols < m
+        s = jnp.where(col_ok, s, -jnp.inf)
+
+        # ---- Eq. 7 row statistics (metrics without the dense matrix) ----
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (bm, LANE), 1)
+        row_sum = jnp.sum(jnp.where(col_ok, cos, 0.0), axis=1,
+                          keepdims=True)
+        diag_v = jnp.sum(jnp.where(rows == cols, cos, 0.0), axis=1,
+                         keepdims=True)
+        sscr[...] += (jnp.where(lanes == 0, row_sum, 0.0)
+                      + jnp.where(lanes == 1, diag_v, 0.0))
+
+        # ---- running top-k: fold the tile into the VMEM carry -----------
+        merged_v = jnp.concatenate([vscr[...], s], axis=1)
+        merged_i = jnp.concatenate([iscr[...], cols], axis=1)
+        width = kp + bm
+        pos_lanes = jax.lax.broadcasted_iota(jnp.int32, (bm, width), 1)
+        k_lanes = jax.lax.broadcasted_iota(jnp.int32, (bm, kp), 1)
+        for slot in range(k):
+            vmax = jnp.max(merged_v, axis=1, keepdims=True)
+            # first occurrence of the max — the carry precedes the tile
+            # and earlier j blocks fill the carry in index order, so ties
+            # resolve to the lowest global column (lax.top_k semantics)
+            pos = jnp.min(jnp.where(merged_v == vmax, pos_lanes, width),
+                          axis=1, keepdims=True)
+            hit = pos_lanes == pos
+            gidx = jnp.sum(jnp.where(hit, merged_i, 0), axis=1,
+                           keepdims=True)
+            vscr[...] = jnp.where(k_lanes == slot, vmax, vscr[...])
+            iscr[...] = jnp.where(k_lanes == slot, gidx, iscr[...])
+            merged_v = jnp.where(hit, -jnp.inf, merged_v)
+
+    @pl.when((j == num_j_blocks - 1) & (pi == num_p_blocks - 1))
+    def _emit():
+        vals_o[...] = vscr[...]
+        idx_o[...] = iscr[...]
+        stats_o[...] = sscr[...]
+
+
+def select_topk(
+    x,
+    last_selected,
+    s_l,
+    t,
+    cost,
+    candidate_mask=None,
+    *,
+    k: int,
+    alpha: float,
+    lam: float,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool = False,
+):
+    """Fused Eq. 7–9 scoring + per-row top-k over (M, P) headers.
+
+    x: (M, P) headers; last_selected: (M, M) int32 (Eq. 8 context array);
+    s_l: (M, M) loss matrix (Eq. 6); t: scalar round; cost: scalar or
+    (M, M) Eq. 9 `c`; candidate_mask: optional (M, M) bool.
+
+    → (values (M, k) f32, indices (M, k) int32, stats (M, 2) f32) where
+    stats[:, 0] = Σ_j s_d[i, j] and stats[:, 1] = s_d[i, i]. Masked
+    entries (diagonal / non-candidates) score exactly NEG, so callers
+    recover the paper's "fewer than k candidates" rule with
+    `values > NEG / 2` — identically to the dense select_peers path.
+    """
+    m, p = x.shape
+    if not 1 <= k <= max(m - 1, 1):
+        raise ValueError(f"k must be in [1, M-1], got k={k} for M={m}")
+    block_m, block_p = clamp_blocks(m, p, block_m, block_p)
+    kp = ceil_to(k, LANE)
+    pm = (-m) % block_m
+    pp = (-p) % block_p
+    mp = m + pm
+
+    xp = jnp.pad(x, ((0, pm), (0, pp))) if (pm or pp) else x
+    xf = xp.astype(jnp.float32)
+    inv = 1.0 / (jnp.sqrt(jnp.sum(xf * xf, axis=1)) + 1e-12)
+    inv2d = jnp.broadcast_to(inv[None, :], (SUBLANE, mp))
+    lastp = jnp.pad(last_selected.astype(jnp.int32), ((0, pm), (0, pm)))
+    slp = jnp.pad(s_l.astype(jnp.float32), ((0, pm), (0, pm)))
+    t2d = jnp.reshape(jnp.asarray(t, jnp.int32), (1, 1))
+
+    cost = jnp.asarray(cost, jnp.float32)
+    cost_is_matrix = cost.ndim == 2
+    nm = mp // block_m
+    np_ = (p + pp) // block_p
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_p), lambda i, j, pk: (i, pk)),
+        pl.BlockSpec((block_m, block_p), lambda i, j, pk: (j, pk)),
+        pl.BlockSpec((SUBLANE, block_m), lambda i, j, pk: (0, i)),
+        pl.BlockSpec((SUBLANE, block_m), lambda i, j, pk: (0, j)),
+        pl.BlockSpec((block_m, block_m), lambda i, j, pk: (i, j)),
+        pl.BlockSpec((block_m, block_m), lambda i, j, pk: (i, j)),
+        pl.BlockSpec((1, 1), lambda i, j, pk: (0, 0),
+                     memory_space=pltpu.SMEM),
+    ]
+    operands = [xp, xp, inv2d, inv2d, lastp, slp, t2d]
+    if cost_is_matrix:
+        in_specs.append(
+            pl.BlockSpec((block_m, block_m), lambda i, j, pk: (i, j))
+        )
+        operands.append(jnp.pad(cost, ((0, pm), (0, pm))))
+    else:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda i, j, pk: (0, 0),
+                         memory_space=pltpu.SMEM)
+        )
+        operands.append(jnp.reshape(cost, (1, 1)))
+    has_cand = candidate_mask is not None
+    if has_cand:
+        in_specs.append(
+            pl.BlockSpec((block_m, block_m), lambda i, j, pk: (i, j))
+        )
+        operands.append(
+            jnp.pad(candidate_mask.astype(jnp.int8), ((0, pm), (0, pm)))
+        )
+
+    kernel = functools.partial(
+        _select_kernel, num_p_blocks=np_, num_j_blocks=nm,
+        block_m=block_m, kp=kp, m=m, k=k, alpha=float(alpha),
+        lam=float(lam), cost_is_matrix=cost_is_matrix, has_cand=has_cand,
+    )
+    vals, idx, stats = pl.pallas_call(
+        kernel,
+        grid=(nm, nm, np_),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_m, kp), lambda i, j, pk: (i, 0)),
+            pl.BlockSpec((block_m, kp), lambda i, j, pk: (i, 0)),
+            pl.BlockSpec((block_m, LANE), lambda i, j, pk: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, kp), jnp.float32),
+            jax.ShapeDtypeStruct((mp, kp), jnp.int32),
+            jax.ShapeDtypeStruct((mp, LANE), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_m), jnp.float32),
+            pltpu.VMEM((block_m, kp), jnp.float32),
+            pltpu.VMEM((block_m, kp), jnp.int32),
+            pltpu.VMEM((block_m, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return vals[:m, :k], idx[:m, :k], stats[:m, :2]
+
+
+# ---------------------------------------------------------------------------
+# streaming jnp path — same algorithm, column-block scan (off-TPU fast path)
+# ---------------------------------------------------------------------------
+
+def select_topk_blocked(
+    x,
+    last_selected,
+    s_l,
+    t,
+    cost,
+    candidate_mask=None,
+    *,
+    k: int,
+    alpha: float,
+    lam: float,
+    block: int = DEFAULT_COL_BLOCK,
+):
+    """Streaming Eq. 7–9 + top-k as a jnp column-block scan.
+
+    Peak live memory is O(M·block) — no (M, M) score matrix — with the
+    same outputs and tie semantics as the Pallas kernel (lax.top_k over
+    [carry | block] is stable, so ties resolve to the lowest column).
+    """
+    m = x.shape[0]
+    if not 1 <= k <= max(m - 1, 1):
+        raise ValueError(f"k must be in [1, M-1], got k={k} for M={m}")
+    xf = x.astype(jnp.float32)
+    inv = 1.0 / (jnp.sqrt(jnp.sum(xf * xf, axis=1)) + 1e-12)
+    block = min(block, m)
+    nb = -(-m // block)
+    pad = nb * block - m
+    xp = jnp.pad(xf, ((0, pad), (0, 0)))
+    invp = jnp.pad(inv, (0, pad))
+    lastp = jnp.pad(last_selected.astype(jnp.int32), ((0, 0), (0, pad)))
+    slp = jnp.pad(s_l.astype(jnp.float32), ((0, 0), (0, pad)))
+    cost = jnp.asarray(cost, jnp.float32)
+    cost_is_matrix = cost.ndim == 2
+    costp = (jnp.pad(cost, ((0, 0), (0, pad))) if cost_is_matrix else cost)
+    candp = (jnp.pad(candidate_mask, ((0, 0), (0, pad)))
+             if candidate_mask is not None else None)
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+    tf = jnp.asarray(t, jnp.int32)
+
+    def body(b, carry):
+        vals, idx, sd_sum, sd_diag = carry
+        j0 = b * block
+        xb = jax.lax.dynamic_slice_in_dim(xp, j0, block, 0)
+        ib = jax.lax.dynamic_slice_in_dim(invp, j0, block, 0)
+        cos = jnp.clip((xf @ xb.T) * inv[:, None] * ib[None, :], -1.0, 1.0)
+        cols = j0 + jnp.arange(block, dtype=jnp.int32)[None, :]
+        last_b = jax.lax.dynamic_slice_in_dim(lastp, j0, block, 1)
+        sl_b = jax.lax.dynamic_slice_in_dim(slp, j0, block, 1)
+        c = (jax.lax.dynamic_slice_in_dim(costp, j0, block, 1)
+             if cost_is_matrix else cost)
+        s = _recency(last_b, tf, lam) * (alpha * sl_b - cos + c)
+        s = jnp.where(rows == cols, NEG, s)
+        if candp is not None:
+            cand_b = jax.lax.dynamic_slice_in_dim(candp, j0, block, 1)
+            s = jnp.where(cand_b, s, NEG)
+        ok = cols < m
+        s = jnp.where(ok, s, -jnp.inf)
+        sd_sum = sd_sum + jnp.sum(jnp.where(ok, cos, 0.0), axis=1)
+        sd_diag = sd_diag + jnp.sum(jnp.where(rows == cols, cos, 0.0),
+                                    axis=1)
+        mv = jnp.concatenate([vals, s], axis=1)
+        mi = jnp.concatenate([idx, jnp.broadcast_to(cols, (m, block))],
+                             axis=1)
+        nv, pos = jax.lax.top_k(mv, k)
+        return (nv, jnp.take_along_axis(mi, pos, axis=1), sd_sum, sd_diag)
+
+    init = (
+        jnp.full((m, k), -jnp.inf, jnp.float32),
+        jnp.zeros((m, k), jnp.int32),
+        jnp.zeros((m,), jnp.float32),
+        jnp.zeros((m,), jnp.float32),
+    )
+    vals, idx, sd_sum, sd_diag = jax.lax.fori_loop(0, nb, body, init)
+    return vals, idx, jnp.stack([sd_sum, sd_diag], axis=1)

@@ -1,0 +1,351 @@
+"""Fused Eq. 7–9 selection pipeline — kernel-vs-oracle parity, the fused
+round path (incl. the hetero served-header variant), and regressions for
+the dense-selection bugfixes (one-hot blow-up / k=0, ragged-M block
+alignment, zero-norm headers)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.selection import NEG, select_peers, topk_to_mask
+from repro.kernels.peer_score import clamp_blocks, cosine_gram, raw_gram
+from repro.kernels.ref import cosine_gram_ref, select_topk_ref
+from repro.kernels.select_score import select_topk, select_topk_blocked
+
+
+def _inputs(m, p, cand, cost_mat, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (m, p), jnp.float32)
+    last = jax.random.randint(ks[1], (m, m), -1, 6)
+    s_l = jax.random.uniform(ks[2], (m, m), maxval=3.0)
+    cm = jax.random.bernoulli(ks[3], 0.7, (m, m)) if cand else None
+    cost = (jax.random.uniform(ks[4], (m, m)) if cost_mat
+            else jnp.float32(1.0))
+    return x, last, s_l, cm, cost
+
+
+def _assert_parity(got, ref, tie_atol=None):
+    """Indices exact, values ≤ 1e-5. tie_atol permits index flips ONLY
+    between fp-tied scores (the blocked jnp path partitions the Gram
+    matmul differently from the dense oracle, so two scores ~1e-7 apart
+    may swap rank); the Pallas kernel is held to exact indices."""
+    (gv, gi, gs), (rv, ri, rs) = got, ref
+    gv, gi, rv, ri = (np.asarray(a) for a in (gv, gi, rv, ri))
+    if tie_atol is None:
+        np.testing.assert_array_equal(gi, ri)
+    else:
+        mism = gi != ri
+        assert np.abs(gv - rv)[mism].max(initial=0.0) < tie_atol, (
+            f"{mism.sum()} index flips exceed the fp-tie tolerance"
+        )
+    np.testing.assert_allclose(gv, rv, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(rs), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs dense oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+PALLAS_CASES = [
+    # (m, p, k, cand, cost_mat, block_m, block_p)
+    (5, 17, 2, False, False, 8, 128),       # ragged tiny M
+    (5, 17, 4, True, True, 8, 128),         # k = M-1, all masks
+    (64, 200, 10, False, False, 32, 128),
+    (64, 200, 10, True, True, 32, 128),
+    (33, 64, 32, True, False, 16, 128),     # k = M-1, ragged blocks
+    (256, 96, 10, True, True, 128, 128),
+    (1024, 64, 10, True, True, 128, 128),   # multi-tile carry across j
+]
+
+
+@pytest.mark.parametrize("case", PALLAS_CASES)
+def test_select_topk_pallas_matches_ref(case):
+    m, p, k, cand, cost_mat, bm, bp = case
+    x, last, s_l, cm, cost = _inputs(m, p, cand, cost_mat, seed=sum(case))
+    t = jnp.int32(5)
+    got = select_topk(x, last, s_l, t, cost, cm, k=k, alpha=1.3, lam=0.5,
+                      block_m=bm, block_p=bp, interpret=True)
+    ref = select_topk_ref(x, last, s_l, t, cost, cm, k=k, alpha=1.3,
+                          lam=0.5)
+    _assert_parity(got, ref)
+
+
+def test_select_topk_pallas_sparse_candidates_hit_neg_floor():
+    """Rows with fewer than k reachable peers: the winners include
+    NEG-floor entries at the lowest column indices — exactly like the
+    dense lax.top_k tie-break — and topk_to_mask drops them."""
+    m, k = 16, 5
+    x, last, s_l, _, cost = _inputs(m, 32, False, False, seed=2)
+    cm = jnp.zeros((m, m), bool).at[:, 3].set(True).at[:, 7].set(True)
+    t = jnp.int32(4)
+    got = select_topk(x, last, s_l, t, cost, cm, k=k, alpha=1.0, lam=0.5,
+                      block_m=8, block_p=128, interpret=True)
+    ref = select_topk_ref(x, last, s_l, t, cost, cm, k=k, alpha=1.0,
+                          lam=0.5)
+    _assert_parity(got, ref)
+    mask = np.asarray(topk_to_mask(got[1], got[0], m))
+    assert (mask.sum(1) <= 2).all()
+    assert not mask[:, [c for c in range(m) if c not in (3, 7)]].any()
+
+
+# ---------------------------------------------------------------------------
+# streaming jnp path vs dense oracle (all backends)
+# ---------------------------------------------------------------------------
+
+BLOCKED_CASES = [
+    # (m, p, k, cand, cost_mat, block)
+    (5, 17, 2, False, False, 64),
+    (5, 17, 4, True, True, 3),              # block not a divisor of M
+    (64, 200, 10, True, True, 48),
+    (256, 96, 32, True, False, 100),
+    (1024, 64, 10, True, True, 512),
+    (1024, 64, 32, False, False, 192),
+]
+
+
+@pytest.mark.parametrize("case", BLOCKED_CASES)
+def test_select_topk_blocked_matches_ref(case):
+    m, p, k, cand, cost_mat, block = case
+    x, last, s_l, cm, cost = _inputs(m, p, cand, cost_mat, seed=sum(case))
+    t = jnp.int32(9)
+    got = select_topk_blocked(x, last, s_l, t, cost, cm, k=k, alpha=0.7,
+                              lam=1.1, block=block)
+    ref = select_topk_ref(x, last, s_l, t, cost, cm, k=k, alpha=0.7,
+                          lam=1.1)
+    _assert_parity(got, ref, tie_atol=1e-5)
+
+
+def test_select_topk_stats_match_dense_s_d():
+    """The (M, 2) row statistics reproduce the dense-path s_d metrics."""
+    from repro.core.scoring import header_distance_matrix
+
+    m = 48
+    x, last, s_l, _, cost = _inputs(m, 80, False, False, seed=4)
+    _, _, stats = select_topk_blocked(x, last, s_l, jnp.int32(2), cost,
+                                      k=10, alpha=1.0, lam=0.5, block=16)
+    s_d = header_distance_matrix(x)
+    np.testing.assert_allclose(np.asarray(stats[:, 0]),
+                               np.asarray(jnp.sum(s_d, axis=1)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(stats[:, 1]),
+                               np.asarray(jnp.diagonal(s_d)), atol=1e-5)
+
+
+def test_select_topk_rejects_bad_k():
+    x, last, s_l, _, cost = _inputs(8, 16, False, False)
+    with pytest.raises(ValueError, match="k must be"):
+        select_topk_blocked(x, last, s_l, 0, cost, k=0, alpha=1.0, lam=0.5)
+    with pytest.raises(ValueError, match="k must be"):
+        select_topk(x, last, s_l, 0, cost, k=8, alpha=1.0, lam=0.5,
+                    interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# regression: select_peers scatter mask + k=0 guard
+# ---------------------------------------------------------------------------
+
+def test_select_peers_k0_no_threshold_is_empty():
+    """k=0 with threshold=None must return an explicit all-false mask
+    (previously called lax.top_k with k=0)."""
+    scores = jax.random.normal(jax.random.PRNGKey(0), (4, 4))
+    mask = np.asarray(select_peers(scores, k=0))
+    assert mask.shape == (4, 4) and not mask.any()
+
+
+def test_select_peers_single_client_is_empty():
+    """M=1 clamps k to 0 — same guard."""
+    mask = np.asarray(select_peers(jnp.zeros((1, 1)), k=3))
+    assert not mask.any()
+
+
+def test_select_peers_k0_with_threshold_unchanged():
+    scores = jnp.array([[NEG, 0.5], [0.9, NEG]])
+    mask = np.asarray(select_peers(scores, k=0, threshold=0.2))
+    assert mask.tolist() == [[False, True], [True, False]]
+
+
+def test_select_peers_scatter_matches_onehot_semantics():
+    """The scatter mask reproduces the legacy one-hot construction,
+    including dropping sub-floor picks when candidates < k."""
+    m, k = 12, 5
+    scores = jax.random.normal(jax.random.PRNGKey(3), (m, m))
+    scores = jnp.where(jnp.eye(m, dtype=bool), NEG, scores)
+    cand = jax.random.bernoulli(jax.random.PRNGKey(4), 0.25, (m, m))
+    got = np.asarray(select_peers(scores, k=k, candidate_mask=cand))
+    masked = jnp.where(cand, scores, NEG)
+    _, idx = jax.lax.top_k(masked, k)
+    legacy = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
+    legacy = np.asarray(legacy & (masked > NEG / 2))
+    np.testing.assert_array_equal(got, legacy)
+
+
+def test_topk_to_mask_drops_floor_values():
+    idx = jnp.array([[1, 2], [0, 2]])
+    vals = jnp.array([[0.5, NEG], [0.1, 0.2]])
+    mask = np.asarray(topk_to_mask(idx, vals, 3))
+    assert mask.tolist() == [[False, True, False], [True, False, True]]
+
+
+# ---------------------------------------------------------------------------
+# regression: ragged-M block clamping stays on the (8, 128) tile grid
+# ---------------------------------------------------------------------------
+
+def test_clamp_blocks_stays_tile_aligned():
+    for m, p in [(5, 17), (3, 100), (100, 300), (1000, 4096)]:
+        bm, bp = clamp_blocks(m, p, 128, 512)
+        assert bm % 8 == 0 and bp % 128 == 0, (m, p, bm, bp)
+        assert bm <= 128 and bp <= 512
+
+
+def test_raw_gram_ragged_m_still_matches_ref():
+    """M=5 used to clamp block_m to 5 (a Mosaic lowering error on TPU);
+    the rounded-up block must keep interpret-mode parity."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (5, 17), jnp.float32)
+    g = raw_gram(x, interpret=True)
+    ref = x @ x.T
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# regression: zero-norm headers — kernel and jnp Eq. 7 paths identical
+# ---------------------------------------------------------------------------
+
+def test_zero_norm_header_paths_identical():
+    from repro.core.scoring import header_distance_matrix
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 32), jnp.float32)
+    x = x.at[2].set(0.0)                      # a client with a zero header
+    jnp_path = np.asarray(header_distance_matrix(x))
+    kern_path = np.asarray(header_distance_matrix(x, use_kernel=True))
+    assert np.isfinite(jnp_path).all() and np.isfinite(kern_path).all()
+    np.testing.assert_allclose(jnp_path, kern_path, atol=2e-5)
+    # the zero row scores 0 against everyone (incl. itself) on BOTH paths
+    np.testing.assert_allclose(jnp_path[2], 0.0, atol=1e-6)
+    assert (np.abs(jnp_path) <= 1.0 + 1e-6).all()
+
+
+def test_zero_norm_header_fused_selection_finite():
+    m = 8
+    x, last, s_l, _, cost = _inputs(m, 24, False, False, seed=6)
+    x = x.at[0].set(0.0)
+    got = select_topk(x, last, s_l, jnp.int32(3), cost, None, k=3,
+                      alpha=1.0, lam=0.5, block_m=8, block_p=128,
+                      interpret=True)
+    ref = select_topk_ref(x, last, s_l, jnp.int32(3), cost, None, k=3,
+                          alpha=1.0, lam=0.5)
+    _assert_parity(got, ref)
+    assert np.isfinite(np.asarray(got[0])).all()
+
+
+def test_cosine_gram_zero_row_matches_ref():
+    x = jnp.zeros((4, 64), jnp.float32).at[1].set(1.0)
+    g = cosine_gram(x, block_m=8, block_p=128, interpret=True)
+    ref = cosine_gram_ref(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the fused round path — pfeddst with use_score_kernel=True
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def round_env(tiny_cnn, tiny_fl):
+    from repro.core import init_population, make_phase_steps
+    from repro.data.synthetic import client_datasets_cifar
+    from repro.optim.sgd import sgd
+
+    cfg, fl = tiny_cnn, dataclasses.replace(tiny_fl, probe_size=8)
+    key = jax.random.PRNGKey(0)
+    data = client_datasets_cifar(
+        key, fl.num_clients, num_classes=10, classes_per_client=2,
+        samples_per_class=10, image_size=8,
+    )
+    train = {"images": data["train_x"], "labels": data["train_y"]}
+    opt = sgd(0.05, momentum=0.9)
+    state = init_population(cfg, key, fl.num_clients, opt, opt)
+    steps = make_phase_steps(cfg, opt)
+    return cfg, fl, state, steps, train, data
+
+
+def test_fused_round_matches_dense_round(round_env):
+    """use_score_kernel=True selects the same peers and lands on the
+    same parameters (fp tolerance) as the dense scoring path."""
+    from repro.core import pfeddst_round
+
+    cfg, fl, state, steps, train, _ = round_env
+    kw = dict(steps_per_epoch=1, probe_size=8)
+    s0, m0 = pfeddst_round(cfg, fl, steps, state, train,
+                           jax.random.PRNGKey(1), **kw)
+    s1, m1 = pfeddst_round(cfg, fl, steps, state, train,
+                           jax.random.PRNGKey(1), use_score_kernel=True,
+                           **kw)
+    np.testing.assert_array_equal(np.asarray(m0["select_mask"]),
+                                  np.asarray(m1["select_mask"]))
+    for name in ("mean_selected_score", "s_d_offdiag_mean", "s_l_mean"):
+        assert abs(float(m0[name]) - float(m1[name])) < 1e-5, name
+    for a, b in zip(jax.tree.leaves(s0.extractor),
+                    jax.tree.leaves(s1.extractor)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_fused_hetero_round_bitwise_equals_fused_sync(round_env):
+    """The hetero served-header path composes with the fused pipeline:
+    pfeddst_async (uniform devices, infinite deadline) with
+    use_score_kernel=True stays bitwise equal to fused pfeddst."""
+    from repro.fl import make_strategy
+
+    cfg, fl, _, _, train, _ = round_env
+    fl_k = dataclasses.replace(fl, use_score_kernel=True)
+    sync = make_strategy("pfeddst", cfg, fl_k, steps_per_epoch=1)
+    asyn = make_strategy("pfeddst_async", cfg, fl_k, steps_per_epoch=1)
+    s1 = sync.init(jax.random.PRNGKey(1))
+    s2 = asyn.init(jax.random.PRNGKey(1))
+    for r in range(2):
+        k = jax.random.PRNGKey(2 + r)
+        s1, m1 = sync.round(s1, train, k)
+        s2, m2 = asyn.round(s2, train, k)
+    np.testing.assert_array_equal(np.asarray(m1["select_mask"]),
+                                  np.asarray(m2["select_mask"]))
+    for field in ("extractor", "header", "loss_matrix", "last_selected"):
+        for a, b in zip(jax.tree.leaves(getattr(s1, field)),
+                        jax.tree.leaves(getattr(s2, field))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_fused_pfeddst_preserves_golden_trace():
+    """pfeddst with use_score_kernel=True must land on the frozen golden
+    fingerprints captured from the dense pre-engine implementation."""
+    import importlib.util
+    import json
+    import os
+
+    golden_dir = os.path.join(os.path.dirname(__file__), "golden")
+    spec = importlib.util.spec_from_file_location(
+        "make_goldens", os.path.join(golden_dir, "make_goldens.py")
+    )
+    mg = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mg)
+    with open(os.path.join(golden_dir, "engine_parity.json")) as f:
+        goldens = json.load(f)
+
+    from repro.configs.base import FLConfig
+    from repro.data.synthetic import client_datasets_cifar
+
+    fl = FLConfig(
+        num_clients=6, peers_per_round=2, batch_size=8,
+        client_sample_ratio=0.5, epochs_extractor=1, epochs_header=1,
+        probe_size=8, use_score_kernel=True,
+    )
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(0), fl.num_clients, num_classes=10,
+        classes_per_client=2, samples_per_class=20, image_size=16,
+    )
+    got = mg.run("pfeddst", fl, data)
+    want = goldens["default_comms"]["pfeddst"]
+    np.testing.assert_allclose(np.asarray(got["params"]),
+                               np.asarray(want["params"]),
+                               rtol=2e-3, atol=1e-3)
+    assert got["active_sum"] == want["active_sum"]
+    assert abs(got["accuracy"] - want["accuracy"]) < 0.05
