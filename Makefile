@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify verify-fast test deps bench-comms bench-round bench-async \
-	bench-select docs-check
+	bench-select docs-check trace-report
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -35,3 +35,10 @@ bench-select:
 # markdown link check over README + docs/ (also a CI job)
 docs-check:
 	$(PY) tools/check_links.py README.md docs
+
+# 3-round traced PFedDST sim → schema-validated report (repro.obs demo)
+TRACE ?= /tmp/repro_trace.jsonl
+trace-report:
+	$(PY) examples/fl_cifar_sim.py --strategies pfeddst --rounds 3 \
+		--trace-out $(TRACE) --trace-stages
+	$(PY) tools/trace_report.py $(TRACE) --validate

@@ -29,6 +29,7 @@ from repro.configs import get_config
 from repro.configs.base import FLConfig
 from repro.data.synthetic import client_datasets_cifar
 from repro.fl import STRATEGIES, make_strategy
+from repro.obs.timers import StageTimes, instrument_stages
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
@@ -60,11 +61,42 @@ def bench_round(name, cfg, fl, data, *, steady_rounds: int, seed: int = 0):
     }
 
 
+def bench_stages(name, cfg, fl, data, *, steady_rounds: int, seed: int = 0):
+    """Per-stage wall breakdown (repro.obs.timers) — eager instrumented
+    rounds, so every stage's host wall is attributable (the jitted round
+    fuses them; see obs/timers docstring). Stage walls therefore do NOT
+    sum to the jitted round's steady_s — they rank stages against each
+    other and track per-stage drift PR-over-PR."""
+    from repro.fl.engine import run_round
+
+    strat = make_strategy(name, cfg, fl, steps_per_epoch=1)
+    times = StageTimes()
+    stages = instrument_stages(strat.spec.stages, times)
+    state = strat.init(jax.random.PRNGKey(seed))
+    train = {"images": data["train_x"], "labels": data["train_y"]}
+    for r in range(1 + steady_rounds):
+        aff = (strat.spec.affinity(state)
+               if strat.fabric is not None and strat.spec.affinity is not None
+               else None)
+        state, _ = run_round(
+            stages, state, train, jax.random.PRNGKey(1 + r),
+            m=fl.num_clients, ratio=fl.client_sample_ratio,
+            key_streams=strat.spec.key_streams,
+            sample_stream=strat.spec.sample_stream,
+            fabric=strat.fabric, affinity=aff,
+        )
+    return times.summary()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, nargs="*", default=[16, 64])
     ap.add_argument("--strategies", nargs="*", default=list(STRATEGIES))
     ap.add_argument("--steady-rounds", type=int, default=3)
+    ap.add_argument("--stage-strategies", nargs="*", default=[],
+                    help="strategies to ALSO profile per-stage (eager "
+                         "instrumented rounds; adds a 'stages' key to "
+                         "their BENCH_round.json entries)")
     ap.add_argument("--sample-ratio", type=float, default=0.25)
     ap.add_argument("--peers", type=int, default=2)
     ap.add_argument("--batch-size", type=int, default=8)
@@ -108,10 +140,18 @@ def main(argv=None):
             r = bench_round(name, cfg, fl, data,
                             steady_rounds=args.steady_rounds,
                             seed=args.seed)
+            if name in args.stage_strategies:
+                r["stages"] = bench_stages(
+                    name, cfg, fl, data,
+                    steady_rounds=args.steady_rounds, seed=args.seed,
+                )
             out["rounds"].setdefault(name, {})[f"M{m}"] = r
             print(f"{name:16s} M={m:3d} first={r['first_s']:7.3f}s "
                   f"compile={r['compile_s']:7.3f}s "
                   f"steady={r['steady_s']:7.3f}s", flush=True)
+            for sname, s in r.get("stages", {}).items():
+                print(f"    stage {sname:18s} steady={s['steady_s']:7.3f}s "
+                      f"compile={s['compile_s']:7.3f}s", flush=True)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

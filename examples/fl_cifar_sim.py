@@ -71,6 +71,20 @@ def main():
                     help="(1+lag)^(-alpha) staleness discount for "
                          "semi-async aggregation")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="override the number of federated rounds "
+                         "(0 = scale default: 30 reduced / 60 paper-scale)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a schema-versioned JSONL round trace "
+                         "(repro.obs) here; with several strategies the "
+                         "strategy name is suffixed onto the filename")
+    ap.add_argument("--trace-stages", action="store_true",
+                    help="prepend an eager per-stage compile/steady "
+                         "profile to the trace (runs 2 extra unjitted "
+                         "rounds on throwaway state)")
+    ap.add_argument("--trace-edges", action="store_true",
+                    help="embed per-round selected-edge lists in the "
+                         "trace's round records")
     args = ap.parse_args()
 
     comms = CommsConfig(
@@ -106,6 +120,8 @@ def main():
                       client_sample_ratio=0.34, probe_size=8, comms=comms,
                       **hetero_kw)
         rounds, img, spc, spe = 30, 16, 80, 1
+    if args.rounds > 0:
+        rounds = args.rounds
 
     data = client_datasets_cifar(
         jax.random.PRNGKey(args.seed), fl.num_clients,
@@ -114,10 +130,18 @@ def main():
     )
     final = {}
     for s in args.strategies:
+        trace = args.trace_out
+        if trace and len(args.strategies) > 1:
+            stem, dot, ext = trace.rpartition(".")
+            trace = f"{stem}.{s}.{ext}" if dot else f"{trace}.{s}"
         hist = run_experiment(
             s, cfg, fl, data, num_rounds=rounds, eval_every=5,
             steps_per_epoch=spe, seed=args.seed,
+            trace=trace, trace_stages=args.trace_stages,
+            trace_edges=args.trace_edges,
         )
+        if trace:
+            print(f"  trace → {trace}")
         final[s] = (hist.accuracy[-1], hist.comm_bytes[-1],
                     hist.net_time_s[-1], hist.device_time_s[-1])
     print(f"\nfinal personalized accuracy ({args.topology} topology, "

@@ -52,6 +52,15 @@ class TrafficStats:
     def total_bytes(self) -> int:
         return self.wire_bytes
 
+    def to_comm_block(self) -> dict:
+        """The round trace's `comm` sub-record (repro.obs.trace
+        COMM_KEYS) — the one shape every trace consumer reads."""
+        return {
+            "bytes": int(self.total_bytes),
+            "net_time_s": float(self.sim_time_s),
+            "energy_j": float(self.energy_j),
+        }
+
     @staticmethod
     def zero(m: int) -> "TrafficStats":
         z = np.zeros((m,), np.int64)

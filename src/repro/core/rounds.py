@@ -40,9 +40,11 @@ from repro.core.scoring import (
     loss_disparity_rows,
     recency_scores,
     score_topk,
+    selected_components,
 )
 from repro.core.selection import (
     NEG,
+    as_cost_matrix,
     combined_scores,
     select_peers,
     topk_to_mask,
@@ -191,6 +193,36 @@ def make_pfeddst_stages(
             ctx.aux.update(s_l=s_l, s_l_rows=s_l_rows, s_d=s_d,
                            scores=scores)
         mask = mask & ctx.active[:, None]
+
+        # ---- Eq. 9 score decomposition over the selected edges ------------
+        # (repro.obs telemetry, through the jit-safe ctx.record channel).
+        # The dense path reduces matrices it already holds; the fused path
+        # re-derives the components for the selected (M, k) pairs only —
+        # O(M·k·P) gathers, never an (M, M) matrix.
+        n_sel = jnp.maximum(jnp.sum(mask), 1).astype(jnp.float32)
+        if fused:
+            comp = selected_components(
+                flatten_headers(header_view), state.last_selected, s_l,
+                state.round, ctx.aux["topk_idx"], alpha=fl.alpha,
+                lam=fl.recency_lambda, comm_cost=cost,
+            )
+            # scatter-valid ∧ active rows — the same entries `mask` keeps,
+            # so the edge count matches the dense reduction exactly
+            valid = ((ctx.aux["topk_vals"] > NEG / 2)
+                     & ctx.active[:, None])
+            for comp_name in ("s_l", "s_d", "s_p", "cost"):
+                ctx.record(
+                    f"sel_{comp_name}_mean",
+                    jnp.sum(jnp.where(valid, comp[comp_name], 0.0)) / n_sel,
+                )
+        else:
+            for comp_name, mat in (("s_l", s_l), ("s_d", s_d),
+                                   ("s_p", s_p),
+                                   ("cost", as_cost_matrix(cost, m))):
+                ctx.record(
+                    f"sel_{comp_name}_mean",
+                    jnp.sum(jnp.where(mask, mat, 0.0)) / n_sel,
+                )
 
         if hetero is not None:
             lag = ctx.aux["pull_lag"]

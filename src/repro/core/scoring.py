@@ -149,6 +149,52 @@ def score_topk(headers_flat, last_selected, loss_matrix, round_t, *,
 
 
 # ---------------------------------------------------------------------------
+# Eq. 9 decomposition over selected pairs — the telemetry side-channel
+# ---------------------------------------------------------------------------
+
+def selected_components(headers_flat, last_selected, loss_matrix, round_t,
+                        idx, *, alpha: float, lam: float, comm_cost):
+    """Eq. 9 score decomposition restricted to the selected pairs.
+
+    For each row i and its selected columns idx[i, :] (the (M, k) output
+    of the fused pipeline, or top-k indices from a dense mask), returns
+    the four components the combined score multiplies/sums — without
+    materializing any (M, M) matrix: O(M·k·P) for the cosine gathers.
+
+    → dict of (M, k) float32 arrays:
+      s_l    Eq. 6 loss disparity        loss_matrix[i, j]
+      s_d    Eq. 7 header cosine         cos(h_i, h_j)
+      s_p    Eq. 8 recency CDF           1 − exp(−λ·Δt) (1 if never)
+      cost   Eq. 9 link cost c           scalar broadcast or c[i, j]
+      score  s_p · (α·s_l − s_d + cost)  — the recombined Eq. 9 value
+
+    This is the channel `core.rounds.score_select` records per-round
+    component summaries through (`sel_*_mean` metrics) and the opt-in
+    dense probe in `repro.obs.selection_probe` parity-tests against the
+    fused kernel. The normalization matches `kernels.ref.select_score_ref`
+    (norm + 1e-12 guard, [-1, 1] clip), so recombined scores agree with
+    both the dense and the fused pipeline at fp tolerance.
+    """
+    x = headers_flat.astype(jnp.float32)
+    inv = 1.0 / (jnp.sqrt(jnp.sum(x * x, axis=1)) + 1e-12)
+    xn = x * inv[:, None]
+    s_d = jnp.clip(
+        jnp.einsum("mp,mkp->mk", xn, xn[idx]), -1.0, 1.0
+    )
+    last = jnp.take_along_axis(last_selected, idx, axis=1)
+    dt = jnp.maximum(round_t - last, 0).astype(jnp.float32)
+    s_p = jnp.where(last < 0, 1.0, 1.0 - jnp.exp(-lam * dt))
+    s_l = jnp.take_along_axis(loss_matrix, idx, axis=1).astype(jnp.float32)
+    c = jnp.asarray(comm_cost, jnp.float32)
+    if c.ndim == 0:
+        c = jnp.broadcast_to(c, idx.shape)
+    else:
+        c = jnp.take_along_axis(c, idx, axis=1)
+    score = s_p * (alpha * s_l - s_d + c)
+    return {"s_l": s_l, "s_d": s_d, "s_p": s_p, "cost": c, "score": score}
+
+
+# ---------------------------------------------------------------------------
 # Eq. 8 — peer recency
 # ---------------------------------------------------------------------------
 

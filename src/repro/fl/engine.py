@@ -59,7 +59,16 @@ from repro.core.partial_freeze import make_full_step
 from repro.core.selection import select_peers
 from repro.data.pipeline import sample_client_batches
 from repro.models.split import merge_params, split_params
+from repro.obs.timers import stage_name
 from repro.utils.sharding import constrain
+
+
+def named_stage(stage, name: str):
+    """Attach a display name to a stage callable (obs: `jax.named_scope`
+    labels in the jitted round, row labels in the per-stage timing of
+    benchmarks/round_bench.py and the trace's stage_profile record)."""
+    stage.stage_name = name
+    return stage
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +209,18 @@ class RoundContext:
     aux: dict = field(default_factory=dict)
     metrics: dict = field(default_factory=dict)
 
+    def record(self, name: str, value):
+        """Jit-safe telemetry channel: emit a named scalar (or array)
+        into the round's metrics. The value is an ordinary traced jax
+        value — it flows out of the jitted round as part of the metrics
+        dict, and host-side consumers (History.extra, the obs trace
+        writer, trace_report) discover it BY NAME: recording a new
+        metric never requires a schema edit. Scalars (ndim 0) are
+        auto-exported per round; arrays need a dedicated consumer.
+        See repro.obs.registry for the catalog of library-emitted names.
+        """
+        self.metrics[name] = value
+
 
 def named_streams(key, streams: tuple) -> dict:
     """Split `key` into the spec's named PRNG streams (order is part of
@@ -314,7 +335,12 @@ def run_round(stages, state, data, key, *, m: int, ratio: float,
         cand=cand, cost=cost, stale=stale,
     )
     for stage in stages:
-        state = stage(state, ctx)
+        # named_scope is pure XLA metadata (numerics untouched): device
+        # profiles collected with jax.profiler group ops by stage even
+        # in the fully-jitted round. Host-side per-stage walls need the
+        # unjitted instrumented path (repro.obs.timers.instrument_stages).
+        with jax.named_scope(f"stage:{stage_name(stage)}"):
+            state = stage(state, ctx)
     metrics = ctx.metrics
     # read ctx.active (not the local) — a stage may have refined it
     # (the hetero deadline gate), and accounting must see the result
@@ -360,7 +386,7 @@ def stage_plan_star():
         ctx.plan = ExchangePlan("star", active=ctx.active)
         return state
 
-    return stage
+    return named_stage(stage, "plan_star")
 
 
 def stage_plan_gossip(fl, *, directed: bool, stream: str = "nbr"):
@@ -379,7 +405,7 @@ def stage_plan_gossip(fl, *, directed: bool, stream: str = "nbr"):
         )
         return state
 
-    return stage
+    return named_stage(stage, "plan_gossip")
 
 
 def stage_train_full(cfg, fl, opt, n_steps: int, *, stream: str = "train"):
@@ -404,7 +430,7 @@ def stage_train_full(cfg, fl, opt, n_steps: int, *, stream: str = "train"):
         ctx.metrics["train_loss"] = jnp.mean(losses[-1])
         return {**state, "params": new_p, "opt": new_o}
 
-    return stage
+    return named_stage(stage, "local_train")
 
 
 def stage_star_average(cfg, *, share: str):
@@ -423,7 +449,7 @@ def stage_star_average(cfg, *, share: str):
             )
         return {**state, "params": keep_if_none_active(active, new, params)}
 
-    return stage
+    return named_stage(stage, "aggregate_star")
 
 
 def stage_mix(cfg, *, share: str):
@@ -442,14 +468,14 @@ def stage_mix(cfg, *, share: str):
             mixed = jax.vmap(merge_params)(mixed_e, h)
         return {**state, "params": mixed}
 
-    return stage
+    return named_stage(stage, "aggregate_mix")
 
 
 def stage_bump_round():
     def stage(state, ctx):
         return {**state, "round": state["round"] + 1}
 
-    return stage
+    return named_stage(stage, "bump_round")
 
 
 # ---------------------------------------------------------------------------

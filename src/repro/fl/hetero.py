@@ -329,6 +329,7 @@ def stage_deadline_gate(runtime: HeteroRuntime, get_round):
                 ctx.metrics["round_wall_s"] = straggler
         return state
 
+    stage.stage_name = "deadline_gate"
     return stage
 
 

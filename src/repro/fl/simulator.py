@@ -33,6 +33,16 @@ from repro.core.partial_freeze import make_phase_steps
 from repro.fl.strategies import Strategy, make_strategy
 from repro.models import model as model_mod
 from repro.models.split import merge_params, split_params
+from repro.obs.registry import scalar_metrics
+from repro.obs.timers import RoundClock, StageTimes, instrument_stages
+from repro.obs.trace import (
+    TraceWriter,
+    header_record,
+    round_record,
+    score_block,
+    stage_profile_record,
+    summary_record,
+)
 from repro.optim.sgd import sgd
 
 
@@ -82,11 +92,20 @@ class History:
     """Experiment trace. Schema documented in docs/architecture.md
     ("History schema"); lengths: per-eval-point lists are appended at
     every eval (every `eval_every` rounds + the last round), per-round
-    lists every round."""
+    lists every round.
+
+    `wall_s` is STEADY wall only — cumulative host time spent in rounds
+    1.. at each eval point. Round 0's wall (trace + XLA compile + one
+    execution) lands in `compile_s` instead, so acc-vs-time curves no
+    longer fold the one-off jit tax into the first eval point.
+    `extra` is the generic obs channel: every scalar a stage `record`s
+    into the round metrics lands here as {name: per-round list}, no
+    simulator change needed per metric (repro.obs.registry)."""
     rounds: list = field(default_factory=list)
     accuracy: list = field(default_factory=list)
     train_loss: list = field(default_factory=list)
     wall_s: list = field(default_factory=list)
+    compile_s: float = 0.0
     # --- communication budget (repro.comms; zeros when fabric disabled) ----
     round_bytes: list = field(default_factory=list)       # per round
     round_net_time_s: list = field(default_factory=list)  # per round
@@ -102,6 +121,8 @@ class History:
     round_straggler_wall_s: list = field(default_factory=list)  # per round
     round_eff_lag: list = field(default_factory=list)           # per round
     device_time_s: list = field(default_factory=list)     # cumulative @ eval
+    # --- generic recorded-scalar channel (repro.obs) -----------------------
+    extra: dict = field(default_factory=dict)             # {name: per round}
 
     def to_dict(self):
         return {
@@ -109,6 +130,7 @@ class History:
             "accuracy": [float(a) for a in self.accuracy],
             "train_loss": [float(x) for x in self.train_loss],
             "wall_s": [float(w) for w in self.wall_s],
+            "compile_s": float(self.compile_s),
             "round_bytes": [int(b) for b in self.round_bytes],
             "round_net_time_s": [float(t) for t in self.round_net_time_s],
             "round_stale_lag": [float(s) for s in self.round_stale_lag],
@@ -124,6 +146,10 @@ class History:
             ],
             "round_eff_lag": [float(s) for s in self.round_eff_lag],
             "device_time_s": [float(t) for t in self.device_time_s],
+            "extra": {
+                name: [float(v) for v in vals]
+                for name, vals in self.extra.items()
+            },
         }
 
     def rounds_to_target(self, target: float):
@@ -157,6 +183,34 @@ def _stale_summary(stale) -> tuple:
     return float(lagging.mean()), int(arr.max())
 
 
+def _profile_stages(strat: Strategy, fl: FLConfig, train_data, key,
+                    *, rounds: int = 2) -> dict:
+    """Eager per-stage compile/steady profile on THROWAWAY state.
+
+    Runs `rounds` unjitted instrumented rounds (obs.timers) from a fresh
+    init so the main (jitted) run's state, PRNG streams, and fabric draws
+    are untouched — profiling is a side-channel, never a perturbation.
+    """
+    from repro.fl.engine import run_round
+
+    times = StageTimes()
+    stages = instrument_stages(strat.spec.stages, times)
+    k_init, k_rounds = jax.random.split(key)
+    state = strat.init(k_init)
+    for r in range(rounds):
+        aff = (strat.spec.affinity(state)
+               if strat.fabric is not None and strat.spec.affinity is not None
+               else None)
+        state, _ = run_round(
+            stages, state, train_data, jax.random.fold_in(k_rounds, r),
+            m=fl.num_clients, ratio=fl.client_sample_ratio,
+            key_streams=strat.spec.key_streams,
+            sample_stream=strat.spec.sample_stream,
+            fabric=strat.fabric, affinity=aff,
+        )
+    return times.summary()
+
+
 def run_experiment(
     strategy_name: str,
     cfg: ModelConfig,
@@ -168,8 +222,21 @@ def run_experiment(
     steps_per_epoch: int = 2,
     seed: int = 0,
     verbose: bool = True,
+    trace: str | None = None,
+    trace_stages: bool = False,
+    trace_edges: bool = False,
 ) -> History:
-    """data: dict(train_x, train_y, test_x, test_y), leading-M stacked."""
+    """data: dict(train_x, train_y, test_x, test_y), leading-M stacked.
+
+    trace: path for a schema-versioned JSONL round trace (repro.obs.trace)
+    — one record per round with wall/comm/device blocks, every recorded
+    scalar metric, and the Eq. 9 score decomposition when the strategy
+    selects; closed with a cumulative selection-graph record + summary.
+    trace_stages additionally runs a 2-round eager stage profile on
+    throwaway state (see `_profile_stages`); trace_edges embeds per-round
+    selected-edge lists in the round records (O(edges) JSON per round).
+    With trace=None the run is byte-identical to the untraced path.
+    """
     strat = make_strategy(strategy_name, cfg, fl, steps_per_epoch)
     key = jax.random.PRNGKey(seed)
     k_init, k_rounds, k_ft = jax.random.split(key, 3)
@@ -209,27 +276,50 @@ def run_experiment(
             fl.device_profile,
         )
 
+    tracer = graph = None
+    if trace is not None:
+        from repro.obs.selection_probe import SelectionGraph
+
+        tracer = TraceWriter(trace)
+        tracer.write(header_record(
+            strategy=strategy_name, num_clients=fl.num_clients,
+            num_rounds=num_rounds, seed=seed, family=cfg.family,
+            eval_every=eval_every,
+        ))
+        graph = SelectionGraph(fl.num_clients)
+        if trace_stages and strat.spec is not None:
+            tracer.write(stage_profile_record(_profile_stages(
+                strat, fl, train_data, jax.random.fold_in(key, 1 << 20),
+            )))
+
     round_jit = strat.round            # engine rounds are already jitted
     hist = History()
+    clock = RoundClock()
     cum_bytes, cum_net_s, cum_energy = 0, 0.0, 0.0
     cum_device_s = 0.0
     t0 = time.time()
     for r in range(num_rounds):
         k_r = jax.random.fold_in(k_rounds, r)
-        state, metrics = round_jit(state, train_data, k_r)
+        with clock.round():
+            state, metrics = round_jit(state, train_data, k_r)
+            # fence so the clock sees execution, not async dispatch
+            jax.block_until_ready((state, metrics))
+        if r == 0:
+            hist.compile_s = clock.compile_s
 
         if strat.fabric is not None:
             stats = strat.fabric.account_round(
                 strat.comm_pattern, metrics, payload, name=strat.name
             )
-            hist.round_bytes.append(stats.total_bytes)
-            hist.round_net_time_s.append(stats.sim_time_s)
-            cum_bytes += stats.total_bytes
-            cum_net_s += stats.sim_time_s
-            cum_energy += stats.energy_j
+            round_bytes, round_net_s = stats.total_bytes, stats.sim_time_s
+            round_energy = stats.energy_j
         else:
-            hist.round_bytes.append(0)
-            hist.round_net_time_s.append(0.0)
+            round_bytes, round_net_s, round_energy = 0, 0.0, 0.0
+        hist.round_bytes.append(round_bytes)
+        hist.round_net_time_s.append(round_net_s)
+        cum_bytes += round_bytes
+        cum_net_s += round_net_s
+        cum_energy += round_energy
 
         mean_lag, max_lag = _stale_summary(metrics.get("stale"))
         hist.round_stale_lag.append(mean_lag)
@@ -254,6 +344,12 @@ def run_experiment(
         hist.round_eff_lag.append(float(eff) if eff is not None else 0.0)
         cum_device_s += round_wall
 
+        # every recorded scalar → the generic History.extra channel
+        scalars = scalar_metrics(metrics)
+        for name, value in scalars.items():
+            hist.extra.setdefault(name, []).append(value)
+
+        eval_point = None
         if (r + 1) % eval_every == 0 or r == num_rounds - 1:
             params = strat.params_for_eval(state)
             if strat.needs_head_finetune:
@@ -272,11 +368,12 @@ def run_experiment(
             hist.rounds.append(r + 1)
             hist.accuracy.append(float(acc))
             hist.train_loss.append(tl)
-            hist.wall_s.append(time.time() - t0)
+            hist.wall_s.append(clock.elapsed())
             hist.comm_bytes.append(cum_bytes)
             hist.net_time_s.append(cum_net_s)
             hist.energy_j.append(cum_energy)
             hist.device_time_s.append(cum_device_s)
+            eval_point = {"accuracy": float(acc), "train_loss": tl}
             if verbose:
                 print(
                     f"[{strategy_name:16s}] round {r + 1:4d} "
@@ -286,4 +383,31 @@ def run_experiment(
                     f"({time.time() - t0:.0f}s)",
                     flush=True,
                 )
+
+        if tracer is not None:
+            mask = metrics.get("select_mask", metrics.get("comm_edges"))
+            edges = graph.observe(mask) if mask is not None else None
+            tracer.write(round_record(
+                rnd=r, wall_s=clock.last_s, compile_round=(r == 0),
+                active=int(np.asarray(metrics["active"]).sum()),
+                stale_mean=mean_lag, stale_max=max_lag,
+                comm={"bytes": round_bytes, "net_time_s": round_net_s,
+                      "energy_j": round_energy},
+                device={"wall_s": round_wall, "straggler_s": straggler,
+                        "eff_lag": hist.round_eff_lag[-1]},
+                metrics=scalars, score=score_block(scalars),
+                edges=sorted(edges) if (trace_edges and edges is not None)
+                else None,
+                eval_point=eval_point,
+            ))
+
+    if tracer is not None:
+        if graph.rounds > 0:
+            tracer.write(graph.to_record())
+        tracer.write(summary_record(
+            rounds=num_rounds, wall_s=clock.elapsed(),
+            compile_s=clock.compile_s,
+            final_accuracy=hist.accuracy[-1] if hist.accuracy else None,
+        ))
+        tracer.close()
     return hist

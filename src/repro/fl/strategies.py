@@ -59,6 +59,7 @@ from repro.core.client_state import init_population
 from repro.core.partial_freeze import make_phase_steps
 from repro.fl.engine import (
     StrategySpec,
+    named_stage,
     gossip_edges,
     make_round,
     stage_bump_round,
@@ -172,7 +173,7 @@ def stage_train_babu(cfg, fl, opt, n_steps: int, *, stream: str = "train"):
         return {**state, "params": jax.vmap(merge_params)(new_e, h),
                 "opt": {"e": opt_e}}
 
-    return stage
+    return named_stage(stage, "local_train_babu")
 
 
 def _central_spec(cfg, fl, steps_per_epoch, kind: str) -> StrategySpec:
@@ -223,7 +224,7 @@ def stage_apply_masks():
         )
         return {**state, "params": params}
 
-    return stage
+    return named_stage(stage, "apply_masks")
 
 
 def stage_evolve_masks(fl, *, stream: str = "grow"):
@@ -258,7 +259,7 @@ def stage_evolve_masks(fl, *, stream: str = "grow"):
         )
         return {**state, "params": params, "mask": new_mask}
 
-    return stage
+    return named_stage(stage, "evolve_masks")
 
 
 def _gossip_spec(cfg, fl, steps_per_epoch, kind: str) -> StrategySpec:

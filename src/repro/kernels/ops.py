@@ -19,6 +19,7 @@ import jax
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import peer_score as _ps
+from repro.kernels import ref as _ref
 from repro.kernels import select_score as _ss
 from repro.kernels import wkv_chunked as _wkv
 
@@ -27,6 +28,24 @@ def _interpret(flag):
     if flag is None:
         return jax.default_backend() != "tpu"
     return flag
+
+
+# select_topk impl="auto" routing: minimum M at which the blocked
+# column-scan beats the dense oracle on each platform. BENCH_select.json
+# shows the blocked path LOSING on CPU at M ≤ 1024 (0.72–0.88× vs
+# unfused) and winning 1.1–2.0× at M = 4096 — the dense path's (M, M)
+# transients only start to hurt once they stop fitting in cache. TPU
+# always takes the fused Pallas kernel (O(M·k) HBM is the point).
+AUTO_MIN_BLOCKED = {"cpu": 2048, "gpu": 1024}
+
+
+def resolve_select_impl(m: int, backend: str | None = None) -> str:
+    """Resolve impl="auto" for a population of M rows on `backend`
+    (default: the current jax backend) → "pallas" | "blocked" | "dense"."""
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        return "pallas"
+    return "blocked" if m >= AUTO_MIN_BLOCKED.get(backend, 2048) else "dense"
 
 
 @partial(
@@ -92,15 +111,22 @@ def select_topk(
 ):
     """Streaming selection layer: fused Eq. 7–9 scoring + per-row top-k.
 
-    → (values (M, k) f32, indices (M, k) int32, s_d stats (M, 2) f32),
-    never materializing the (M, M) score matrix in HBM.
+    → (values (M, k) f32, indices (M, k) int32, s_d stats (M, 2) f32).
+    The pallas/blocked paths never materialize the (M, M) score matrix
+    in HBM; the dense path does (it is the oracle, and the fastest
+    option at small M on CPU where the transients stay cache-resident).
 
     impl: "pallas" (the fused TPU kernel; interpret-mode off-TPU),
-    "blocked" (the jnp column-block scan — same algorithm, fast on any
-    backend), or "auto" (pallas on TPU, blocked elsewhere).
+    "blocked" (the jnp column-block scan — same algorithm on any
+    backend), "dense" (the kernels/ref.py oracle — dense Eq. 7–9 then
+    lax.top_k), or "auto": pallas on TPU, elsewhere per-(M, platform)
+    via `resolve_select_impl` — dense below the AUTO_MIN_BLOCKED
+    threshold where BENCH_select.json shows the blocked scan losing,
+    blocked above it. All three emit identical indices (and values to
+    fp tolerance), so routing never changes selection.
     """
     if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "blocked"
+        impl = resolve_select_impl(x.shape[0])
     if impl == "pallas":
         return _ss.select_topk(
             x, last_selected, s_l, t, cost, candidate_mask,
@@ -111,6 +137,11 @@ def select_topk(
         return _ss.select_topk_blocked(
             x, last_selected, s_l, t, cost, candidate_mask,
             k=k, alpha=alpha, lam=lam, block=col_block,
+        )
+    if impl == "dense":
+        return _ref.select_topk_ref(
+            x, last_selected, s_l, t, cost, candidate_mask,
+            k=k, alpha=alpha, lam=lam,
         )
     raise ValueError(f"unknown select_topk impl {impl!r}")
 

@@ -4,13 +4,20 @@ The serving analogue of train.py: initializes (or restores) a model,
 prefills a batch of prompts, then runs jit'd one-token serve_steps with the
 family-appropriate cache (KV / MLA latent / WKV state / LRU+ring).
 
+Prefill and decode are SEPARATELY jitted (`make_serving_fns`) so the
+driver can attribute per-request latency to each: `serve_requests` times
+every request with the repro.obs first/steady split — request 0 pays
+both compile taxes, later requests measure the serving steady state —
+and `--latency-out` dumps the counters as JSON.
+
 CPU-scale example:
   python -m repro.launch.serve --arch qwen2-1.5b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 --requests 4
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -19,6 +26,26 @@ import jax.numpy as jnp
 from repro.checkpoint.checkpoint import latest_checkpoint, load_checkpoint
 from repro.configs import get_config
 from repro.models import model as model_mod
+from repro.obs.timers import StageTimes
+
+
+def _make_dec_body(cfg, params, greedy):
+    def dec_body(carry, t):
+        cache, logits, key = carry
+        # mask padded-vocab logits; sample/argmax next token
+        valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+        logits = jnp.where(valid[None, None], logits, -1e30)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        else:
+            key, k = jax.random.split(key)
+            nxt = jax.random.categorical(k, logits[:, -1]).astype(jnp.int32)
+        logits, cache = model_mod.decode_step(
+            cfg, params, cache, nxt[:, None], t
+        )
+        return (cache, logits.astype(jnp.float32), key), nxt
+
+    return dec_body
 
 
 def generate(cfg, params, prompts, *, gen_tokens: int, greedy=True, key=None):
@@ -38,27 +65,86 @@ def generate(cfg, params, prompts, *, gen_tokens: int, greedy=True, key=None):
     )
     logits = logits[:, -1:].astype(jnp.float32)
 
-    def dec_body(carry, t):
-        cache, logits, key = carry
-        # mask padded-vocab logits; sample/argmax next token
-        valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
-        logits = jnp.where(valid[None, None], logits, -1e30)
-        if greedy:
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        else:
-            key, k = jax.random.split(key)
-            nxt = jax.random.categorical(k, logits[:, -1]).astype(jnp.int32)
-        logits, cache = model_mod.decode_step(
-            cfg, params, cache, nxt[:, None], t
-        )
-        return (cache, logits.astype(jnp.float32), key), nxt
-
     key = key if key is not None else jax.random.PRNGKey(0)
     (_, _, _), toks = jax.lax.scan(
-        dec_body, (cache, logits.astype(jnp.float32), key),
+        _make_dec_body(cfg, params, greedy),
+        (cache, logits.astype(jnp.float32), key),
         s + jnp.arange(gen_tokens),
     )
     return jnp.concatenate([prompts, toks.T], axis=1)
+
+
+def make_serving_fns(cfg, *, prompt_len: int, gen_tokens: int, greedy=True):
+    """→ (prefill_fn, decode_fn), SEPARATELY jitted.
+
+    prefill_fn(params, prompts) -> (last-position logits, decode cache)
+    decode_fn(params, cache, logits, key) -> (B, gen) generated tokens
+
+    Splitting the jit boundary costs one cache/logits round-trip through
+    HBM per request but makes the prefill/decode latency split real —
+    the whole-`generate` jit fuses them into one XLA program with a
+    single indivisible wall time.
+    """
+    max_seq = prompt_len + gen_tokens
+
+    @jax.jit
+    def prefill_fn(params, prompts):
+        batch = {"tokens": prompts}
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (prompts.shape[0], cfg.encoder_seq, cfg.d_model), cfg.dtype
+            )
+        logits, cache = model_mod.prefill(
+            cfg, params, batch, max_seq=max_seq, backend="naive"
+        )
+        return logits[:, -1:].astype(jnp.float32), cache
+
+    @jax.jit
+    def decode_fn(params, cache, logits, key):
+        (_, _, _), toks = jax.lax.scan(
+            _make_dec_body(cfg, params, greedy),
+            (cache, logits, key),
+            prompt_len + jnp.arange(gen_tokens),
+        )
+        return toks.T
+
+    return prefill_fn, decode_fn
+
+
+def serve_requests(cfg, params, prompts_fn, *, num_requests: int,
+                   prompt_len: int, gen_tokens: int, greedy=True, seed=0):
+    """Serve `num_requests` batches through split prefill/decode jits,
+    timing each phase per request (repro.obs.timers.StageTimes).
+
+    prompts_fn(i) -> (B, prompt_len) int32 prompts for request i.
+    → (last request's (B, prompt+gen) tokens, latency counters dict):
+      stages      {prefill|decode: {first_s, steady_s, compile_s, calls}}
+      requests    per-request total latency list (request 0 = compile)
+    """
+    prefill_fn, decode_fn = make_serving_fns(
+        cfg, prompt_len=prompt_len, gen_tokens=gen_tokens, greedy=greedy
+    )
+    times = StageTimes()
+    request_s, out = [], None
+    for i in range(num_requests):
+        prompts = prompts_fn(i)
+        k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        t0 = time.perf_counter()
+        with times.timed("prefill"):
+            logits, cache = jax.block_until_ready(
+                prefill_fn(params, prompts)
+            )
+        with times.timed("decode"):
+            toks = jax.block_until_ready(
+                decode_fn(params, cache, logits, k)
+            )
+        request_s.append(time.perf_counter() - t0)
+        out = jnp.concatenate([prompts, toks], axis=1)
+    stats = {
+        "stages": times.summary(),
+        "requests": [round(t, 6) for t in request_s],
+    }
+    return out, stats
 
 
 def main(argv=None):
@@ -70,6 +156,13 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=1,
+                    help="number of requests to serve; request 0 pays "
+                         "the prefill+decode compile taxes, later "
+                         "requests measure steady-state latency")
+    ap.add_argument("--latency-out", default=None,
+                    help="write the per-request latency counters "
+                         "(prefill/decode first/steady/compile) as JSON")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -85,21 +178,38 @@ def main(argv=None):
             params, _ = load_checkpoint(path, like=params)
             print(f"restored {path}")
 
-    prompts = jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size
-    )
-    gen = jax.jit(
-        lambda p, t: generate(cfg, p, t, gen_tokens=args.gen)
-    )
+    def prompts_fn(i):
+        return jax.random.randint(
+            jax.random.fold_in(key, i),
+            (args.batch, args.prompt_len), 0, cfg.vocab_size,
+        )
+
     t0 = time.time()
-    out = gen(params, prompts)
-    out.block_until_ready()
+    out, stats = serve_requests(
+        cfg, params, prompts_fn, num_requests=args.requests,
+        prompt_len=args.prompt_len, gen_tokens=args.gen, seed=args.seed,
+    )
     dt = time.time() - t0
     n_new = args.batch * args.gen
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen}")
-    print(f"generated {n_new} tokens in {dt:.2f}s "
-          f"({n_new / dt:.1f} tok/s incl. compile)")
+          f"gen={args.gen} requests={args.requests}")
+    print(f"generated {n_new * args.requests} tokens in {dt:.2f}s "
+          f"({n_new * args.requests / dt:.1f} tok/s incl. compile)")
+    for name, s in stats["stages"].items():
+        print(f"  {name:8s} first={s['first_s']:.3f}s "
+              f"steady={s['steady_s']:.3f}s compile={s['compile_s']:.3f}s "
+              f"calls={s['calls']}")
+    steady_reqs = stats["requests"][1:]
+    if steady_reqs:
+        steady = sum(steady_reqs) / len(steady_reqs)
+        print(f"  steady request latency {steady:.3f}s "
+              f"({n_new / steady:.1f} tok/s)")
+    if args.latency_out:
+        with open(args.latency_out, "w") as fh:
+            json.dump({"arch": cfg.name, "batch": args.batch,
+                       "prompt_len": args.prompt_len, "gen": args.gen,
+                       **stats}, fh, indent=1)
+        print("wrote", args.latency_out)
     print("sample:", out[0, -args.gen:].tolist())
     return out
 

@@ -1,0 +1,169 @@
+"""Selection introspection — dense Eq. 9 decomposition + peer graph.
+
+After the fused selection PR the Eq. 9 score lives in registers: only
+(M, k) top-k values/indices ever reach HBM, so nobody can see *why*
+client i pulled peer j. This module is the opt-in dense side-channel:
+
+* `decompose_scores` — the full (M, M) decomposition of Eq. 9 into its
+  s_l / s_d / s_p / cost components plus the masked combined score
+  matrix, built from the same definitions as the dense oracle
+  (`kernels.ref.select_score_ref`). O(M²) by construction — probe-only.
+* `probe_topk` / `check_fused_parity` — top-k over the probe's score
+  matrix, and the assertion that it matches the fused kernel's (M, k)
+  output exactly (indices) / at fp tolerance (values): probing never
+  changes selection (tests/test_obs.py holds this against
+  `core.scoring.score_topk`).
+* `SelectionGraph` — accumulates the selection-frequency matrix across
+  rounds from the per-round masks/edge lists, tracks round-over-round
+  selection churn (Jaccard), and exports the peer graph as an edge list
+  (JSON / trace record).
+
+The always-on counterpart is `core.scoring.selected_components`, which
+decomposes the *selected* (M, k) pairs only — the `sel_*_mean` metrics
+every PFedDST round records.
+"""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scoring import recency_scores, selected_components
+from repro.core.selection import as_cost_matrix
+from repro.kernels.ref import select_score_ref
+
+
+def decompose_scores(headers_flat, last_selected, loss_matrix, round_t, *,
+                     alpha: float, lam: float, comm_cost,
+                     candidate_mask=None) -> dict:
+    """Full dense Eq. 9 decomposition — the opt-in (M, M) side-channel.
+
+    → dict of (M, M) float32 arrays: s_l, s_d, s_p, cost, and the masked
+    combined `scores` (diagonal and non-candidates at NEG, exactly as
+    the selection pipeline sees them). The combined matrix comes from
+    `select_score_ref`, the fused pipeline's definition of correctness,
+    so top-k over it reproduces the kernel's output bit-for-bit.
+    """
+    m = headers_flat.shape[0]
+    scores, s_d = select_score_ref(
+        headers_flat, last_selected, loss_matrix, round_t,
+        jnp.asarray(comm_cost, jnp.float32), candidate_mask,
+        alpha=alpha, lam=lam,
+    )
+    return {
+        "s_l": jnp.asarray(loss_matrix, jnp.float32),
+        "s_d": s_d,
+        "s_p": recency_scores(last_selected, round_t, lam),
+        "cost": as_cost_matrix(comm_cost, m),
+        "scores": scores,
+    }
+
+
+def probe_topk(decomposition: dict, k: int):
+    """lax.top_k over the probe's dense score matrix → (values, indices),
+    the shape the fused kernel emits."""
+    import jax
+
+    return jax.lax.top_k(decomposition["scores"], k)
+
+
+def check_fused_parity(decomposition: dict, fused_vals, fused_idx, *,
+                       atol: float = 1e-5):
+    """Assert the dense probe reproduces the fused kernel's selection:
+    indices exactly, values to `atol`. Raises AssertionError otherwise —
+    the guarantee that enabling the probe never changes selection."""
+    vals, idx = probe_topk(decomposition, fused_idx.shape[1])
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(fused_idx))
+    np.testing.assert_allclose(
+        np.asarray(vals), np.asarray(fused_vals), atol=atol
+    )
+
+
+def components_of_selected(decomposition: dict, idx, *,
+                           alpha: float) -> dict:
+    """Gather the dense probe's components at the selected (M, k) pairs —
+    same shape/keys as `core.scoring.selected_components`, with the
+    score recombined from the gathered components."""
+    out = {
+        name: jnp.take_along_axis(decomposition[name], idx, axis=1)
+        for name in ("s_l", "s_d", "s_p", "cost")
+    }
+    out["score"] = out["s_p"] * (
+        alpha * out["s_l"] - out["s_d"] + out["cost"]
+    )
+    return out
+
+
+class SelectionGraph:
+    """Cumulative who-selected-whom graph over an experiment.
+
+    observe(mask_or_edges) per round → frequency counts, per-round edge
+    lists, and round-over-round churn (1 − Jaccard of consecutive edge
+    sets; 0.0 recorded for the first observed round).
+    """
+
+    def __init__(self, m: int):
+        self.m = int(m)
+        self.counts = np.zeros((m, m), np.int64)
+        self.rounds = 0
+        self.churn: list = []
+        self._prev: set | None = None
+
+    @staticmethod
+    def _to_edges(mask_or_edges) -> set:
+        arr = np.asarray(mask_or_edges)
+        if arr.ndim == 2 and arr.dtype != bool and arr.shape[1] == 2:
+            return {(int(i), int(j)) for i, j in arr}
+        ii, jj = np.nonzero(np.asarray(arr, bool))
+        return {(int(i), int(j)) for i, j in zip(ii, jj)}
+
+    def observe(self, mask_or_edges) -> set:
+        edges = self._to_edges(mask_or_edges)
+        for i, j in edges:
+            self.counts[i, j] += 1
+        if self._prev is None:
+            self.churn.append(0.0)
+        else:
+            union = self._prev | edges
+            inter = self._prev & edges
+            self.churn.append(
+                1.0 - (len(inter) / len(union)) if union else 0.0
+            )
+        self._prev = edges
+        self.rounds += 1
+        return edges
+
+    def edge_list(self) -> list:
+        """[[i, j, count], ...] for every edge selected at least once,
+        sorted by descending count then (i, j)."""
+        ii, jj = np.nonzero(self.counts)
+        edges = [[int(i), int(j), int(self.counts[i, j])]
+                 for i, j in zip(ii, jj)]
+        return sorted(edges, key=lambda e: (-e[2], e[0], e[1]))
+
+    def frequency(self) -> np.ndarray:
+        """(M, M) float selection frequency (counts / observed rounds)."""
+        return self.counts / max(self.rounds, 1)
+
+    def to_record(self) -> dict:
+        """The trace's `selection_graph` record (obs/trace schema)."""
+        return {
+            "type": "selection_graph", "num_clients": self.m,
+            "rounds": self.rounds, "edges": self.edge_list(),
+            "churn": [round(float(c), 6) for c in self.churn],
+        }
+
+    def export_json(self, path: str):
+        with open(path, "w") as fh:
+            json.dump(self.to_record(), fh, indent=1)
+
+
+__all__ = [
+    "decompose_scores",
+    "probe_topk",
+    "check_fused_parity",
+    "components_of_selected",
+    "selected_components",
+    "SelectionGraph",
+]

@@ -1,0 +1,150 @@
+"""Host-side stage timing — compile/steady split with explicit fencing.
+
+jax dispatch is asynchronous and the engine jits whole rounds, so naive
+`time.time()` deltas attribute everything to whichever call happens to
+block. The helpers here make wall-time attribution explicit:
+
+* `StageTimes` — accumulates per-label wall times, splitting the FIRST
+  call (trace + compile + one execution) from the steady-state mean.
+  This is the split BENCH_round.json reports per stage and the
+  simulator reports per experiment (History.compile_s vs wall_s).
+* `instrument_stages` — wraps engine stages with `block_until_ready`
+  fencing + `jax.named_scope`/`jax.profiler.TraceAnnotation` so an
+  UNJITTED round attributes host wall to individual stages (inside jit
+  the wrappers run once at trace time and measure tracing, not
+  execution — run the round with `jit=False` to profile stages).
+* `RoundClock` — the whole-round variant the simulator threads through
+  `run_experiment`: round 0's wall (compile-dominated) lands in
+  `compile_s`, later rounds accumulate into `steady_s`.
+
+`jax.named_scope` is also applied by the engine itself around every
+stage (jit-compatible: it only attaches XLA metadata), so device
+profiles collected with `jax.profiler` group ops by stage even in the
+fully-jitted path.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+
+
+def stage_name(stage) -> str:
+    """Display name of an engine stage callable: the `stage_name`
+    attribute the stage factories attach, falling back to __name__."""
+    return getattr(stage, "stage_name",
+                   getattr(stage, "__name__", "stage"))
+
+
+@contextmanager
+def annotate(name: str):
+    """named_scope (XLA metadata, jit-safe) + TraceAnnotation (host
+    profiler track) around a block."""
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
+
+
+@dataclass
+class StageTimes:
+    """Per-label wall-time accumulator with a first/steady split.
+
+    first[label]    wall of the label's first observed call — for jitted
+                    or scan-traced code this is compile-dominated
+    steady[label]   list of subsequent call walls
+    """
+    first: dict = field(default_factory=dict)
+    steady: dict = field(default_factory=dict)
+
+    def add(self, label: str, dt: float):
+        if label not in self.first:
+            self.first[label] = dt
+        else:
+            self.steady.setdefault(label, []).append(dt)
+
+    @contextmanager
+    def timed(self, label: str):
+        t0 = time.perf_counter()
+        yield
+        self.add(label, time.perf_counter() - t0)
+
+    def summary(self) -> dict:
+        """{label: {first_s, steady_s, compile_s, calls}} — compile_s is
+        the first-call wall minus the steady mean (floored at 0),
+        the same estimator round_bench.py uses for whole rounds."""
+        out = {}
+        for label, first in self.first.items():
+            steady = self.steady.get(label, [])
+            steady_s = sum(steady) / len(steady) if steady else 0.0
+            out[label] = {
+                "first_s": round(first, 6),
+                "steady_s": round(steady_s, 6),
+                "compile_s": round(max(first - steady_s, 0.0), 6),
+                "calls": 1 + len(steady),
+            }
+        return out
+
+
+def _fence(*trees):
+    """Block until every array in the given pytrees is ready — the
+    boundary that makes host wall attributable to the preceding stage."""
+    jax.block_until_ready([t for t in trees if t is not None])
+
+
+def instrument_stages(stages, times: StageTimes):
+    """Wrap each engine stage with fencing + timing + profiler scopes.
+
+    Returns a stage tuple suitable for `engine.run_round`. Each wrapped
+    stage fences its OUTPUT state and the round context's metrics/aux
+    values before stopping its clock, so async dispatch from stage N
+    cannot leak into stage N+1's measurement. Meaningful on unjitted
+    rounds only (see module docstring).
+    """
+
+    def wrap(stage):
+        name = stage_name(stage)
+
+        def timed(state, ctx):
+            _fence(state)
+            t0 = time.perf_counter()
+            with annotate(f"stage:{name}"):
+                out = stage(state, ctx)
+            _fence(out, list(ctx.metrics.values()), list(ctx.aux.values()))
+            times.add(name, time.perf_counter() - t0)
+            return out
+
+        timed.stage_name = name
+        return timed
+
+    return tuple(wrap(s) for s in stages)
+
+
+@dataclass
+class RoundClock:
+    """Whole-round wall clock with the round-0 compile split.
+
+    The first `round()` context's wall lands in `compile_s` (the first
+    jitted call = trace + XLA compile + one execution); every later
+    round accumulates into `steady_s`. `elapsed()` = steady-only wall,
+    the number acc-vs-time curves should use (pre-obs History folded the
+    compile tax into the first eval point's wall_s).
+    """
+    compile_s: float = 0.0
+    steady_s: float = 0.0
+    rounds: int = 0
+    last_s: float = 0.0
+
+    @contextmanager
+    def round(self):
+        t0 = time.perf_counter()
+        yield
+        self.last_s = time.perf_counter() - t0
+        if self.rounds == 0:
+            self.compile_s = self.last_s
+        else:
+            self.steady_s += self.last_s
+        self.rounds += 1
+
+    def elapsed(self) -> float:
+        return self.steady_s

@@ -1,4 +1,4 @@
-"""Regenerate tests/golden/engine_parity.json.
+"""Regenerate tests/golden/engine_parity.json (and the golden trace).
 
 The fingerprints were captured from the PRE-engine strategy
 implementations (PR 1 tree, commit a495a80) so the engine rewrite in
@@ -7,6 +7,11 @@ this script against the engine tree must reproduce the same file — that
 is exactly what tests/test_engine.py asserts, datum by datum.
 
     PYTHONPATH=src python tests/golden/make_goldens.py
+    PYTHONPATH=src python tests/golden/make_goldens.py --trace
+
+--trace regenerates trace_pfeddst.jsonl instead: the golden repro.obs
+round trace a fixed-seed 3-round PFedDST run must reproduce (host-time
+fields excluded; tests/test_obs.py holds the rest to tolerance).
 """
 from __future__ import annotations
 
@@ -24,6 +29,34 @@ from repro.data.synthetic import client_datasets_cifar
 from repro.fl import STRATEGIES, evaluate_population, make_strategy
 
 OUT = os.path.join(os.path.dirname(__file__), "engine_parity.json")
+TRACE_OUT = os.path.join(os.path.dirname(__file__), "trace_pfeddst.jsonl")
+
+
+def trace_config():
+    """The canonical tiny traced run (shared with tests/test_obs.py)."""
+    cfg = get_config("resnet18-cifar").reduced()
+    fl = FLConfig(
+        num_clients=8, peers_per_round=2, batch_size=8,
+        client_sample_ratio=0.5, epochs_extractor=1, epochs_header=1,
+        probe_size=4, comms=CommsConfig(topology="full"),
+    )
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(0), fl.num_clients, classes_per_client=2,
+        samples_per_class=12, image_size=8,
+    )
+    return cfg, fl, data
+
+
+def make_trace(path: str = TRACE_OUT) -> str:
+    from repro.fl import run_experiment
+
+    cfg, fl, data = trace_config()
+    run_experiment(
+        "pfeddst", cfg, fl, data, num_rounds=3, eval_every=2,
+        steps_per_epoch=1, seed=0, verbose=False,
+        trace=path, trace_edges=True,
+    )
+    return path
 
 
 def fingerprint(tree):
@@ -86,4 +119,9 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    if "--trace" in sys.argv:
+        print("wrote", make_trace())
+    else:
+        main()

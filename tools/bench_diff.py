@@ -1,0 +1,105 @@
+"""Compare two BENCH_*.json artifacts and flag wall-time regressions.
+
+    PYTHONPATH=src python tools/bench_diff.py OLD.json NEW.json
+    PYTHONPATH=src python tools/bench_diff.py OLD.json NEW.json \
+        --threshold 0.15
+
+Walks both files' nested dicts in lockstep and compares every numeric
+leaf whose key names a wall time (`*_s`, `wall_s`, `first_s`, ...; byte
+and count keys are reported but never flagged). A leaf is a REGRESSION
+when new > old × (1 + threshold); exits 1 if any regressed — the CI
+gate that keeps committed benchmark artifacts honest PR-over-PR.
+
+compile_s/first_s leaves are held to a looser 2× threshold: compile
+times are noisy (trace caching, CPU contention) and regressions there
+are tracked, not gating, unless they blow up.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# keys whose numeric leaves are wall times (gating); compile-ish keys
+# get the looser multiplier
+TIME_SUFFIXES = ("_s",)
+COMPILE_KEYS = ("compile_s", "first_s")
+SKIP_KEYS = ("steady_rounds", "calls", "schema")
+
+
+def walk(old, new, path=""):
+    """Yield (path, old_leaf, new_leaf) for numeric leaves present in
+    both trees; missing/extra branches are yielded with None."""
+    if isinstance(old, dict) and isinstance(new, dict):
+        for key in sorted(set(old) | set(new)):
+            sub = f"{path}.{key}" if path else str(key)
+            if key in SKIP_KEYS:
+                continue
+            if key not in old:
+                yield sub, None, new[key]
+            elif key not in new:
+                yield sub, old[key], None
+            else:
+                yield from walk(old[key], new[key], sub)
+        return
+    if isinstance(old, (int, float)) and isinstance(new, (int, float)) \
+            and not isinstance(old, bool) and not isinstance(new, bool):
+        yield path, old, new
+
+
+def diff(old: dict, new: dict, *, threshold: float,
+         compile_factor: float = 2.0):
+    """→ (report lines, regression lines)."""
+    lines, regressions = [], []
+    for path, o, n in walk(old, new):
+        if o is None or n is None:
+            lines.append(f"  {'+' if o is None else '-'} {path}")
+            continue
+        key = path.rsplit(".", 1)[-1]
+        is_time = key.endswith(TIME_SUFFIXES)
+        rel = (n - o) / o if o else (0.0 if n == o else float("inf"))
+        mark = ""
+        if is_time and o > 0:
+            limit = compile_factor - 1.0 if key in COMPILE_KEYS \
+                else threshold
+            if rel > limit:
+                mark = "  << REGRESSION"
+                regressions.append(f"{path}: {o:g} -> {n:g} ({rel:+.1%})")
+        if abs(rel) > 0.01 or mark:
+            lines.append(f"  {path}: {o:g} -> {n:g} ({rel:+.1%}){mark}")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative steady wall-time regression gate "
+                         "(default 0.15 = +15%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.old) as fh:
+        old = json.load(fh)
+    with open(args.new) as fh:
+        new = json.load(fh)
+
+    lines, regressions = diff(old, new, threshold=args.threshold)
+    print(f"bench diff: {args.old} -> {args.new} "
+          f"(gate: steady +{args.threshold:.0%}, compile 2x)")
+    for line in lines:
+        print(line)
+    if not lines:
+        print("  (no changes > 1%)")
+    if regressions:
+        print(f"\n{len(regressions)} wall-time regression(s):",
+              file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print("\nno wall-time regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
