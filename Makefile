@@ -1,8 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-fast test deps bench-comms bench-round bench-async \
-	bench-select docs-check trace-report
+.PHONY: verify verify-fast test deps bench-comms bench-round \
+	bench-round-smoke bench-async bench-select docs-check trace-report
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -22,7 +22,11 @@ bench-comms:
 	$(PY) benchmarks/comms_cost.py
 
 bench-round:
-	$(PY) benchmarks/round_bench.py
+	$(PY) benchmarks/round_bench.py --scan
+
+# CI fast tier: tiny grid + scan-mode chunked execution smoke
+bench-round-smoke:
+	$(PY) benchmarks/round_bench.py --scan --smoke
 
 # sync vs semi-async accuracy-vs-wall-clock → benchmarks/results/BENCH_async.json
 bench-async:

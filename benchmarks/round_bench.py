@@ -11,6 +11,12 @@ engine jitted end-to-end) and splits jit-compile from steady-state:
     PYTHONPATH=src python benchmarks/round_bench.py
     PYTHONPATH=src python benchmarks/round_bench.py \
         --clients 16 64 --strategies pfeddst dispfl --steady-rounds 5
+    PYTHONPATH=src python benchmarks/round_bench.py --scan --smoke
+
+`--scan` additionally times chunked scan-over-rounds execution
+(engine.make_multi_round: one jit compile covering a whole chunk of
+rounds, donated buffers in between) and records the total-wall speedup
+over the per-round jit; `--smoke` shrinks the grid to the CI fast tier.
 
 Defaults keep the paper's round shape (client sampling 0.25, probe-based
 PFedDST scoring restricted to active rows) on the CPU-smoke ResNet so
@@ -61,6 +67,58 @@ def bench_round(name, cfg, fl, data, *, steady_rounds: int, seed: int = 0):
     }
 
 
+def bench_scan(name, cfg, fl, data, *, rounds: int, chunk_rounds: int,
+               seed: int = 0, warm_pass: bool = False):
+    """Scan-mode total wall: `ceil(rounds / chunk_rounds)` chunked jit
+    calls via engine.make_multi_round — ONE compile per distinct chunk
+    size covering the whole chunk, donated buffers between rounds. The
+    number that matters is total_s (compile + every executed round);
+    the per-round path's equivalent is first_s + steady_s*(rounds-1).
+
+    warm_pass (meaningful with --compile-cache) reruns the schedule
+    with FRESH jits after the cold pass: their XLA compiles hit the
+    persistent cache written moments earlier, so warm_total_s is the
+    total wall every process after the first pays."""
+    import jax.numpy as jnp
+
+    from repro.fl.engine import make_multi_round
+
+    strat = make_strategy(name, cfg, fl, steps_per_epoch=1)
+    train = {"images": data["train_x"], "labels": data["train_y"]}
+    key = jax.random.PRNGKey(1)
+
+    def run_schedule():
+        state = strat.init(jax.random.PRNGKey(seed))
+        fns, walls, r0 = {}, [], 0
+        while r0 < rounds:
+            size = min(chunk_rounds, rounds - r0)
+            fn = fns.get(size)
+            if fn is None:
+                # a fresh jit per schedule: in-memory caching never
+                # spans run_schedule calls, the persistent cache does
+                fn = fns[size] = make_multi_round(
+                    strat.spec, fl, strat.fabric, chunk_rounds=size)
+            t0 = time.perf_counter()
+            state, stacked = fn(state, train, key, jnp.int32(r0))
+            jax.block_until_ready(stacked)
+            walls.append(time.perf_counter() - t0)
+            r0 += size
+        return walls
+
+    walls = run_schedule()
+    out = {
+        "rounds": rounds,
+        "chunk_rounds": chunk_rounds,
+        "first_s": round(walls[0], 4),
+        "total_s": round(sum(walls), 4),
+    }
+    if warm_pass:
+        warm = run_schedule()
+        out["warm_first_s"] = round(warm[0], 4)
+        out["warm_total_s"] = round(sum(warm), 4)
+    return out
+
+
 def bench_stages(name, cfg, fl, data, *, steady_rounds: int, seed: int = 0):
     """Per-stage wall breakdown (repro.obs.timers) — eager instrumented
     rounds, so every stage's host wall is attributable (the jitted round
@@ -97,6 +155,25 @@ def main(argv=None):
                     help="strategies to ALSO profile per-stage (eager "
                          "instrumented rounds; adds a 'stages' key to "
                          "their BENCH_round.json entries)")
+    ap.add_argument("--scan", action="store_true",
+                    help="ALSO bench scan-mode chunked execution "
+                         "(engine.make_multi_round) for --scan-strategies; "
+                         "adds a 'scan' key with total_s and the speedup "
+                         "over the per-round-jit total")
+    ap.add_argument("--scan-strategies", nargs="*",
+                    default=["pfeddst", "dispfl"])
+    ap.add_argument("--scan-rounds", type=int, default=10)
+    ap.add_argument("--scan-chunk", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI grid: M=8, pfeddst+dispfl, 1 steady "
+                         "round, 4 scan rounds in chunks of 2; writes "
+                         "BENCH_round_smoke.json unless --out is given")
+    ap.add_argument("--compile-cache", nargs="?", const="", default=None,
+                    metavar="DIR",
+                    help="enable the persistent XLA compilation cache "
+                         "(repro.utils.compile_cache; default dir when "
+                         "given bare) and add warm-start scan entries — "
+                         "the total wall every run after the first pays")
     ap.add_argument("--sample-ratio", type=float, default=0.25)
     ap.add_argument("--peers", type=int, default=2)
     ap.add_argument("--batch-size", type=int, default=8)
@@ -104,9 +181,26 @@ def main(argv=None):
     ap.add_argument("--samples-per-class", type=int, default=10)
     ap.add_argument("--probe-size", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out",
-                    default=os.path.join(RESULTS, "BENCH_round.json"))
+    ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.clients = [8]
+        args.strategies = ["pfeddst", "dispfl"]
+        args.steady_rounds = 1
+        args.scan_rounds = 4
+        args.scan_chunk = 2
+    if args.out is None:
+        args.out = os.path.join(
+            RESULTS,
+            "BENCH_round_smoke.json" if args.smoke else "BENCH_round.json")
+
+    cache_dir = None
+    if args.compile_cache is not None:
+        from repro.utils.compile_cache import enable_compilation_cache
+
+        cache_dir = enable_compilation_cache(args.compile_cache or None)
+        print(f"compilation cache: {cache_dir}", flush=True)
 
     cfg = get_config("resnet18-cifar").reduced()
     out = {
@@ -145,10 +239,35 @@ def main(argv=None):
                     name, cfg, fl, data,
                     steady_rounds=args.steady_rounds, seed=args.seed,
                 )
+            if args.scan and name in args.scan_strategies:
+                s = bench_scan(name, cfg, fl, data,
+                               rounds=args.scan_rounds,
+                               chunk_rounds=args.scan_chunk,
+                               seed=args.seed,
+                               warm_pass=cache_dir is not None)
+                # the per-round jit's wall over the same round count,
+                # from this very run's measurements
+                s["per_round_total_s"] = round(
+                    r["first_s"] + r["steady_s"] * (s["rounds"] - 1), 4)
+                s["speedup"] = round(
+                    s["per_round_total_s"] / s["total_s"], 2) \
+                    if s["total_s"] else 0.0
+                r["scan"] = s
             out["rounds"].setdefault(name, {})[f"M{m}"] = r
             print(f"{name:16s} M={m:3d} first={r['first_s']:7.3f}s "
                   f"compile={r['compile_s']:7.3f}s "
                   f"steady={r['steady_s']:7.3f}s", flush=True)
+            if "scan" in r:
+                s = r["scan"]
+                print(f"    scan chunk={s['chunk_rounds']} "
+                      f"rounds={s['rounds']} total={s['total_s']:7.3f}s "
+                      f"vs per-round {s['per_round_total_s']:7.3f}s "
+                      f"({s['speedup']:.2f}x)", flush=True)
+                if "warm_total_s" in s:
+                    print(f"    scan warm (cached compile) "
+                          f"total={s['warm_total_s']:7.3f}s "
+                          f"({s['per_round_total_s'] / s['warm_total_s']:.2f}x"
+                          f" vs cold per-round)", flush=True)
             for sname, s in r.get("stages", {}).items():
                 print(f"    stage {sname:18s} steady={s['steady_s']:7.3f}s "
                       f"compile={s['compile_s']:7.3f}s", flush=True)

@@ -119,6 +119,46 @@ def bench_case(m, k, repeats=5):
     }
 
 
+def sweep_col_block(ms, blocks, *, k=10, repeats=5):
+    """col_block sweep for the blocked column-scan — the measurements
+    behind kernels/ops.SELECT_COL_BLOCKS (the per-(M, backend) table
+    `select_topk(col_block=None)` resolves through). Rerun with --sweep
+    after kernel changes and update the table when the winner moves."""
+    rows = []
+    for m in ms:
+        x, last, s_l, cand = _inputs(m)
+        t = jnp.int32(7)
+        for blk in blocks:
+            if blk > m:
+                continue
+
+            def run(x, last, s_l, cand, t, k, blk=blk):
+                vals, idx, _ = select_topk(
+                    x, last, s_l, t, jnp.float32(1.0), cand,
+                    k=k, alpha=ALPHA, lam=LAM, impl="blocked",
+                    col_block=blk,
+                )
+                return vals, idx
+
+            fn = jax.jit(run, static_argnames=("k",))
+            wall = _time(fn, x, last, s_l, cand, t, k, repeats=repeats)
+            rows.append({"M": m, "k": k, "col_block": blk,
+                         "wall_s": round(wall, 6),
+                         "backend": jax.default_backend()})
+            print(f"  sweep M={m:5d} col_block={blk:5d} "
+                  f"wall={wall:9.5f}s", flush=True)
+    best = {}
+    for r in rows:
+        cur = best.get(r["M"])
+        if cur is None or r["wall_s"] < cur["wall_s"]:
+            best[r["M"]] = r
+    for m, r in sorted(best.items()):
+        print(f"  best  M={m:5d} col_block={r['col_block']:5d} "
+              f"wall={r['wall_s']:9.5f}s", flush=True)
+    return {"cases": rows,
+            "best": {str(m): r["col_block"] for m, r in best.items()}}
+
+
 def smoke_kernel_parity(m=64, k=10):
     """Interpret-mode fused Pallas kernel vs the dense oracle."""
     x, last, s_l, cand = _inputs(m, seed=1)
@@ -139,6 +179,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI tier: smallest M only + kernel parity check")
+    ap.add_argument("--sweep", action="store_true",
+                    help="ALSO sweep col_block for the blocked scan and "
+                         "record the per-M winners (the data behind "
+                         "kernels/ops.SELECT_COL_BLOCKS)")
     ap.add_argument("--out", default=OUT)
     ap.add_argument("--repeats", type=int, default=5)
     args = ap.parse_args(argv)
@@ -147,6 +191,9 @@ def main(argv=None):
     ks = [4, 10, 32]
     rows = [bench_case(m, k, repeats=args.repeats) for m in ms for k in ks]
     result = {"cases": rows, "kernel_parity": smoke_kernel_parity()}
+    if args.sweep:
+        result["col_block_sweep"] = sweep_col_block(
+            ms, [128, 256, 512, 1024, 2048, 4096], repeats=args.repeats)
     os.makedirs(RESULTS, exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)

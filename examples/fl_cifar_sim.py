@@ -85,7 +85,30 @@ def main():
     ap.add_argument("--trace-edges", action="store_true",
                     help="embed per-round selected-edge lists in the "
                          "trace's round records")
+    ap.add_argument("--compile-cache", nargs="?", const="", default=None,
+                    metavar="DIR",
+                    help="persist XLA compiles across runs "
+                         "(repro.utils.compile_cache): every invocation "
+                         "after the first skips the multi-second round-"
+                         "jit compile")
+    ap.add_argument("--chunk-rounds", type=int, default=None,
+                    help="run up to N rounds per jit via scan-over-rounds "
+                         "(engine.make_multi_round): one compile covers "
+                         "the chunk; fixed-seed results are bitwise "
+                         "identical either way. Default: eval_every (5), "
+                         "or 1 when --trace-stages is set (the eager "
+                         "stage profile implies per-round execution is "
+                         "being inspected)")
     args = ap.parse_args()
+
+    chunk_rounds = args.chunk_rounds
+    if chunk_rounds is None:
+        chunk_rounds = 1 if args.trace_stages else 5
+    if args.compile_cache is not None:
+        from repro.utils.compile_cache import enable_compilation_cache
+
+        print("compilation cache:",
+              enable_compilation_cache(args.compile_cache or None))
 
     comms = CommsConfig(
         topology=args.topology, link_model=args.link_model,
@@ -138,7 +161,7 @@ def main():
             s, cfg, fl, data, num_rounds=rounds, eval_every=5,
             steps_per_epoch=spe, seed=args.seed,
             trace=trace, trace_stages=args.trace_stages,
-            trace_edges=args.trace_edges,
+            trace_edges=args.trace_edges, chunk_rounds=chunk_rounds,
         )
         if trace:
             print(f"  trace → {trace}")

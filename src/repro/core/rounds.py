@@ -54,8 +54,10 @@ from repro.data.pipeline import sample_client_batches
 from repro.fl.engine import (
     ExchangePlan,
     RoundContext,
+    gather_rows,
     run_round,
     scan_train,
+    scatter_rows,
     where_tree,
 )
 from repro.models.split import merge_params
@@ -260,40 +262,65 @@ def make_pfeddst_stages(
 
     def phase_e(state: PopulationState, ctx: RoundContext):
         # ---- 4. phase-e (header frozen) -----------------------------------
+        # Train only the sampled rows (static-size gather → subset vmap →
+        # scatter back). Bit-parity with the dense loop: batch keys stay
+        # positional in the full population (scan_train rows/total), the
+        # subset per-row compute is the same vmapped function, and the
+        # loss metric scatters the subset losses back into an (M,) vector
+        # before the SAME active-masked mean reduction.
         n_e = fl.epochs_extractor * steps_per_epoch
+        idx = ctx.sampled_idx
+        agg_sub, h_sub, oe_sub, e_sub = gather_rows(
+            (ctx.aux["agg_e"], state.header, state.opt_e, state.extractor),
+            idx,
+        )
+        data_sub = gather_rows(ctx.data, idx)
 
         def apply(carry, batch):
             e, o = carry
-            e, o, met = jax.vmap(steps.phase_e)(e, state.header, o, batch)
+            e, o, met = jax.vmap(steps.phase_e)(e, h_sub, o, batch)
             return (e, o), met["loss"]
 
         (new_e, opt_e), loss_e = scan_train(
-            apply, (ctx.aux["agg_e"], state.opt_e), ctx.data,
-            ctx.keys["e"], n_e, fl.batch_size,
+            apply, (agg_sub, oe_sub), data_sub,
+            ctx.keys["e"], n_e, fl.batch_size, rows=idx, total=ctx.m,
         )
-        new_e = where_tree(ctx.active, new_e, state.extractor)
-        opt_e = where_tree(ctx.active, opt_e, state.opt_e)
-        ctx.metrics["train_loss_e"] = _active_mean(loss_e[-1], ctx.active)
+        act_sub = ctx.active[idx]
+        new_e = scatter_rows(state.extractor, idx,
+                             where_tree(act_sub, new_e, e_sub))
+        opt_e = scatter_rows(state.opt_e, idx,
+                             where_tree(act_sub, opt_e, oe_sub))
+        loss_full = jnp.zeros((ctx.m,), loss_e.dtype).at[idx].set(loss_e[-1])
+        ctx.metrics["train_loss_e"] = _active_mean(loss_full, ctx.active)
         return state._replace(extractor=new_e, opt_e=opt_e)
 
     def phase_h(state: PopulationState, ctx: RoundContext):
         # ---- 5/6. phase-h (extractor frozen) ------------------------------
         n_h = fl.epochs_header * steps_per_epoch
+        idx = ctx.sampled_idx
+        h_sub, e_sub, oh_sub = gather_rows(
+            (state.header, state.extractor, state.opt_h), idx
+        )
+        data_sub = gather_rows(ctx.data, idx)
 
         def apply(carry, batch):
             h, o = carry
             h, o, met = jax.vmap(
                 lambda h_, e_, o_, b: steps.phase_h(e_, h_, o_, b)
-            )(h, state.extractor, o, batch)
+            )(h, e_sub, o, batch)
             return (h, o), met["loss"]
 
         (new_h, opt_h), loss_h = scan_train(
-            apply, (state.header, state.opt_h), ctx.data,
-            ctx.keys["h"], n_h, fl.batch_size,
+            apply, (h_sub, oh_sub), data_sub,
+            ctx.keys["h"], n_h, fl.batch_size, rows=idx, total=ctx.m,
         )
-        new_h = where_tree(ctx.active, new_h, state.header)
-        opt_h = where_tree(ctx.active, opt_h, state.opt_h)
-        ctx.metrics["train_loss_h"] = _active_mean(loss_h[-1], ctx.active)
+        act_sub = ctx.active[idx]
+        new_h = scatter_rows(state.header, idx,
+                             where_tree(act_sub, new_h, h_sub))
+        opt_h = scatter_rows(state.opt_h, idx,
+                             where_tree(act_sub, opt_h, oh_sub))
+        loss_full = jnp.zeros((ctx.m,), loss_h.dtype).at[idx].set(loss_h[-1])
+        ctx.metrics["train_loss_h"] = _active_mean(loss_full, ctx.active)
         return state._replace(header=new_h, opt_h=opt_h)
 
     def update_context(state: PopulationState, ctx: RoundContext):

@@ -20,14 +20,25 @@ def take_batch(data, idx):
     return jax.tree_util.tree_map(lambda a: jnp.take(a, idx, axis=0), data)
 
 
-def sample_client_batches(key, stacked, batch_size: int):
+def sample_client_batches(key, stacked, batch_size: int, *, rows=None,
+                          total: int | None = None):
     """stacked: dict of (M, N, ...) arrays → dict of (M, B, ...) batches.
 
     One independent batch per client (vmapped gather).
+
+    rows/total: active-subset mode. `stacked` holds only the gathered
+    rows (`rows`, static-size int array) of a `total`-client population;
+    per-client keys are still derived POSITIONALLY from the full
+    `jax.random.split(key, total)` and then gathered, so client i draws
+    the exact same batch indices it would have drawn in the full
+    population — the bit-parity contract active-subset training relies
+    on (engine.scan_train).
     """
     leaves = jax.tree_util.tree_leaves(stacked)
     m, n = leaves[0].shape[0], leaves[0].shape[1]
-    keys = jax.random.split(key, m)
+    keys = jax.random.split(key, total if rows is not None else m)
+    if rows is not None:
+        keys = keys[rows]
     idx = jax.vmap(lambda k: sample_batch(k, n, batch_size))(keys)  # (M,B)
     return jax.tree_util.tree_map(
         lambda a: jax.vmap(jnp.take, in_axes=(0, 0, None))(a, idx, 0), stacked

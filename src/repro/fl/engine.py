@@ -58,6 +58,11 @@ from repro.core.aggregation import (
 from repro.core.partial_freeze import make_full_step
 from repro.core.selection import select_peers
 from repro.data.pipeline import sample_client_batches
+from repro.kernels import ops as kernel_ops
+from repro.kernels.gossip_mix import (
+    gossip_degree_bound,
+    weights_to_neighbors,
+)
 from repro.models.split import merge_params, split_params
 from repro.obs.timers import stage_name
 from repro.utils.sharding import constrain
@@ -113,16 +118,37 @@ def keep_if_none_active(active, new, old):
     )
 
 
-def scan_train(apply, carry, data, key, n_steps: int, batch_size: int):
+def scan_train(apply, carry, data, key, n_steps: int, batch_size: int,
+               *, rows=None, total: int | None = None):
     """n_steps of `apply(carry, stacked_batch) -> (carry, loss)` with fresh
     per-client batches each step — the one local-training loop every
-    strategy (full-step and phase-freeze alike) runs through."""
+    strategy (full-step and phase-freeze alike) runs through.
+
+    rows/total: active-subset mode — `carry`/`data` hold only the
+    gathered `rows` of a `total`-client population; batch keys stay
+    positional in the FULL population (see
+    pipeline.sample_client_batches), so each trained client computes
+    bit-for-bit what it would have computed in the dense loop.
+    """
 
     def body(c, k):
-        batch = sample_client_batches(k, data, batch_size)
+        batch = sample_client_batches(k, data, batch_size,
+                                      rows=rows, total=total)
         return apply(c, batch)
 
     return jax.lax.scan(body, carry, jax.random.split(key, n_steps))
+
+
+def gather_rows(tree, idx):
+    """Gather the leading-M axis of every leaf at `idx` (static size)."""
+    return jax.tree_util.tree_map(lambda x: x[idx], tree)
+
+
+def scatter_rows(tree, idx, sub):
+    """Scatter subset leaves back into the full population at `idx`."""
+    return jax.tree_util.tree_map(
+        lambda x, s: x.at[idx].set(s), tree, sub
+    )
 
 
 def gossip_edges(key, m: int, k: int, directed: bool, cand=None):
@@ -148,11 +174,21 @@ def gossip_edges(key, m: int, k: int, directed: bool, cand=None):
 @dataclass
 class ExchangePlan:
     """Who exchanges what with whom this round — the value the aggregate
-    stage mixes by and the comms fabric prices (account_round)."""
+    stage mixes by and the comms fabric prices (account_round).
+
+    nbr_idx/nbr_w are the packed sparse form of `weights` (ascending
+    nonzero columns + their weights, zero-padded to the plan's static
+    degree bound — kernels.gossip_mix.weights_to_neighbors). The plan
+    stage attaches them only when the degree bound is meaningfully
+    below M AND the platform's sparse mix wins (ops.resolve_mix_impl);
+    stage_mix routes through the sparse kernel iff they are present.
+    """
     pattern: str                            # "star" | "p2p"
     active: Any                             # (M,) bool participants
     edges: Optional[Any] = None             # (M,M) bool, i pulls j (p2p)
     weights: Optional[Any] = None           # (M,M) row-stochastic mixing
+    nbr_idx: Optional[Any] = None           # (M,D) int32 packed neighbors
+    nbr_w: Optional[Any] = None             # (M,D) f32 packed weights
 
 
 @dataclass
@@ -371,7 +407,57 @@ def make_round(spec: StrategySpec, fl, fabric=None, *, jit: bool = True,
         )
         return constrain_clients(state, m, client_axis), metrics
 
-    return jax.jit(round_fn) if jit else round_fn
+    # the population state is donated: steady rounds update the (M,
+    # params) buffers in place instead of copying them. Callers must
+    # treat the passed-in state as CONSUMED (rebind the return value).
+    return jax.jit(round_fn, donate_argnums=(0,)) if jit else round_fn
+
+
+def make_multi_round(spec: StrategySpec, fl, fabric=None, *,
+                     chunk_rounds: int, jit: bool = True,
+                     client_axis: str = "data"):
+    """Compile a StrategySpec into a CHUNKED round function
+
+        (state, data, key, start) -> (state, stacked_metrics)
+
+    executing `chunk_rounds` rounds inside one jit via lax.scan: one
+    compile covers the whole chunk and the donated population buffers
+    are updated in place between rounds, with no host round-trip.
+
+    Bit-parity contract: round r of the scan derives its key as
+    `fold_in(key, start + r)` — exactly the simulator's per-round
+    `fold_in(k_rounds, r)` — and the body is the same `run_round` the
+    single-round path jits, so a scanned chunk reproduces R sequential
+    `make_round` calls bitwise (tests/test_engine.py asserts this).
+    Per-round metrics come back stacked on a leading (R,) axis; the
+    simulator unstacks them into the per-round History/trace path.
+
+    `start` is a traced scalar: every chunk of the same size reuses one
+    compilation regardless of its position in the schedule.
+    """
+    m = fl.num_clients
+
+    def multi_fn(state, data, key, start):
+        state = constrain_clients(state, m, client_axis)
+
+        def body(st, r):
+            aff = (spec.affinity(st)
+                   if fabric is not None and spec.affinity is not None
+                   else None)
+            st, metrics = run_round(
+                spec.stages, st, data, jax.random.fold_in(key, r), m=m,
+                ratio=fl.client_sample_ratio,
+                key_streams=spec.key_streams,
+                sample_stream=spec.sample_stream, fabric=fabric,
+                affinity=aff,
+            )
+            return constrain_clients(st, m, client_axis), metrics
+
+        rounds = jnp.asarray(start, jnp.int32) + jnp.arange(
+            chunk_rounds, dtype=jnp.int32)
+        return jax.lax.scan(body, state, rounds)
+
+    return jax.jit(multi_fn, donate_argnums=(0,)) if jit else multi_fn
 
 
 # ---------------------------------------------------------------------------
@@ -391,17 +477,30 @@ def stage_plan_star():
 
 def stage_plan_gossip(fl, *, directed: bool, stream: str = "nbr"):
     """Random k-neighbor gossip plan restricted to reachable peers; only
-    active clients pull."""
+    active clients pull.
 
+    When the plan's static degree bound is well below M (directed
+    plans: k+1; undirected symmetrization has no useful bound) and the
+    platform's sparse mix wins (ops.resolve_mix_impl), the weights are
+    additionally packed into neighbor lists so stage_mix can run the
+    O(M·D·F) sparse kernel instead of the dense (M, M) einsum.
+    """
     def stage(state, ctx):
         nbr = gossip_edges(
             ctx.keys[stream], ctx.m, fl.peers_per_round,
             directed=directed, cand=ctx.cand,
         )
         nbr = nbr & ctx.active[:, None]
+        weights = selection_to_weights(nbr, include_self=True)
+        nbr_idx = nbr_w = None
+        d_max = gossip_degree_bound(fl.peers_per_round, ctx.m,
+                                    directed=directed)
+        if kernel_ops.resolve_mix_impl(ctx.m) != "dense" \
+                and 2 * d_max <= ctx.m:
+            nbr_idx, nbr_w = weights_to_neighbors(weights, d_max)
         ctx.plan = ExchangePlan(
-            "p2p", active=ctx.active, edges=nbr,
-            weights=selection_to_weights(nbr, include_self=True),
+            "p2p", active=ctx.active, edges=nbr, weights=weights,
+            nbr_idx=nbr_idx, nbr_w=nbr_w,
         )
         return state
 
@@ -410,11 +509,23 @@ def stage_plan_gossip(fl, *, directed: bool, stream: str = "nbr"):
 
 def stage_train_full(cfg, fl, opt, n_steps: int, *, stream: str = "train"):
     """Full-model local SGD on dict states ({"params", "opt", ...});
-    inactive clients keep params and optimizer state untouched."""
+    inactive clients keep params and optimizer state untouched.
+
+    Trains only the SAMPLED rows (gather → vmap over the static-size
+    subset → scatter back): at client_sample_ratio = 0.1 that is a 10×
+    cut in training FLOPs with bit-identical population state — the
+    per-client batch draws stay positional in the full population
+    (scan_train rows/total) and unsampled rows are never touched.
+    `train_loss` becomes the mean over the trained subset (it used to
+    also average the about-to-be-discarded losses of unsampled rows).
+    """
     step = make_full_step(cfg, opt)
 
     def stage(state, ctx):
+        idx = ctx.sampled_idx
         params, opt_state = state["params"], state["opt"]
+        p_sub, o_sub = gather_rows((params, opt_state), idx)
+        data_sub = gather_rows(ctx.data, idx)
 
         def apply(carry, batch):
             p, o = carry
@@ -422,11 +533,13 @@ def stage_train_full(cfg, fl, opt, n_steps: int, *, stream: str = "train"):
             return (p, o), met["loss"]
 
         (new_p, new_o), losses = scan_train(
-            apply, (params, opt_state), ctx.data, ctx.keys[stream],
-            n_steps, fl.batch_size,
+            apply, (p_sub, o_sub), data_sub, ctx.keys[stream],
+            n_steps, fl.batch_size, rows=idx, total=ctx.m,
         )
-        new_p = where_tree(ctx.active, new_p, params)
-        new_o = where_tree(ctx.active, new_o, opt_state)
+        act_sub = ctx.active[idx]
+        new_p = scatter_rows(params, idx, where_tree(act_sub, new_p, p_sub))
+        new_o = scatter_rows(opt_state, idx,
+                             where_tree(act_sub, new_o, o_sub))
         ctx.metrics["train_loss"] = jnp.mean(losses[-1])
         return {**state, "params": new_p, "opt": new_o}
 
@@ -452,18 +565,52 @@ def stage_star_average(cfg, *, share: str):
     return named_stage(stage, "aggregate_star")
 
 
+def _pack_clients(tree, m: int):
+    """Flatten every (M, ...) leaf to (M, ·) f32 and concat → (M, P)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate(
+        [l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1
+    )
+
+
+def _unpack_clients(flat, tree, m: int):
+    """Inverse of _pack_clients: slice (M, P) back into `tree`'s leaves."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out, off = [], 0
+    for l in leaves:
+        size = l.size // m
+        out.append(
+            flat[:, off:off + size].reshape(l.shape).astype(l.dtype)
+        )
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def mix_tree(tree, plan, m: int):
+    """Row-stochastic mixing of a leading-M pytree by an ExchangePlan:
+    the sparse neighbor-list kernel when the plan carries packed lists
+    (one (M, P) call over all leaves), else the dense per-leaf einsum."""
+    if plan.nbr_idx is not None:
+        flat = _pack_clients(tree, m)
+        mixed = kernel_ops.gossip_mix(flat, plan.nbr_idx, plan.nbr_w)
+        return _unpack_clients(mixed, tree, m)
+    return aggregate_extractors(tree, plan.weights)
+
+
 def stage_mix(cfg, *, share: str):
     """Gossip step: row-stochastic mixing by the plan's weights over the
-    shared partition; inactive clients keep their model."""
+    shared partition; inactive clients keep their model. Mixing runs
+    through `mix_tree` (sparse neighbor kernel or dense einsum per the
+    plan)."""
 
     def stage(state, ctx):
         params, active = state["params"], ctx.plan.active
         if share == "model":
-            mixed = aggregate_extractors(params, ctx.plan.weights)
+            mixed = mix_tree(params, ctx.plan, ctx.m)
             mixed = where_tree(active, mixed, params)
         else:
             e, h = split_params(cfg, params)
-            mixed_e = aggregate_extractors(e, ctx.plan.weights)
+            mixed_e = mix_tree(e, ctx.plan, ctx.m)
             mixed_e = where_tree(active, mixed_e, e)
             mixed = jax.vmap(merge_params)(mixed_e, h)
         return {**state, "params": mixed}

@@ -225,6 +225,7 @@ def run_experiment(
     trace: str | None = None,
     trace_stages: bool = False,
     trace_edges: bool = False,
+    chunk_rounds: int = 1,
 ) -> History:
     """data: dict(train_x, train_y, test_x, test_y), leading-M stacked.
 
@@ -236,6 +237,19 @@ def run_experiment(
     throwaway state (see `_profile_stages`); trace_edges embeds per-round
     selected-edge lists in the round records (O(edges) JSON per round).
     With trace=None the run is byte-identical to the untraced path.
+
+    chunk_rounds > 1 drives CHUNKED execution: `engine.make_multi_round`
+    runs up to `chunk_rounds` rounds inside one jit (lax.scan, donated
+    population buffers) and the stacked per-round metrics are unstacked
+    back into the exact per-round History / JSONL-trace path — records
+    stay per-round and schema-valid. Chunks are scheduled to END at
+    every eval boundary (so evaluation always sees the state after the
+    eval round), which means distinct chunk sizes each compile once.
+    The scanned body derives round r's key as fold_in(k_rounds, r) —
+    identical to the per-round loop — so fixed-seed results are bitwise
+    the same in either mode. `History.compile_s` then covers the first
+    CHUNK (one compile + `chunk_rounds` executed rounds); trace records
+    of that chunk carry compile_round=True.
     """
     strat = make_strategy(strategy_name, cfg, fl, steps_per_epoch)
     key = jax.random.PRNGKey(seed)
@@ -298,15 +312,12 @@ def run_experiment(
     cum_bytes, cum_net_s, cum_energy = 0, 0.0, 0.0
     cum_device_s = 0.0
     t0 = time.time()
-    for r in range(num_rounds):
-        k_r = jax.random.fold_in(k_rounds, r)
-        with clock.round():
-            state, metrics = round_jit(state, train_data, k_r)
-            # fence so the clock sees execution, not async dispatch
-            jax.block_until_ready((state, metrics))
-        if r == 0:
-            hist.compile_s = clock.compile_s
 
+    def consume_round(r, metrics, *, compile_round: bool):
+        """Per-round host-side bookkeeping: fabric accounting, History,
+        eval, trace record — identical for the per-round and the
+        chunked (unstacked) drivers."""
+        nonlocal cum_bytes, cum_net_s, cum_energy, cum_device_s
         if strat.fabric is not None:
             stats = strat.fabric.account_round(
                 strat.comm_pattern, metrics, payload, name=strat.name
@@ -388,7 +399,7 @@ def run_experiment(
             mask = metrics.get("select_mask", metrics.get("comm_edges"))
             edges = graph.observe(mask) if mask is not None else None
             tracer.write(round_record(
-                rnd=r, wall_s=clock.last_s, compile_round=(r == 0),
+                rnd=r, wall_s=clock.last_s, compile_round=compile_round,
                 active=int(np.asarray(metrics["active"]).sum()),
                 stale_mean=mean_lag, stale_max=max_lag,
                 comm={"bytes": round_bytes, "net_time_s": round_net_s,
@@ -400,6 +411,51 @@ def run_experiment(
                 else None,
                 eval_point=eval_point,
             ))
+
+    if chunk_rounds > 1:
+        # chunked driver: scan-over-rounds, one jit per DISTINCT chunk
+        # size (sizes only vary at eval boundaries / the tail), per-round
+        # metrics unstacked from the scan axis into the same consumer
+        from repro.fl.engine import make_multi_round
+
+        multi_fns: dict = {}
+        r0, chunk_i = 0, 0
+        while r0 < num_rounds:
+            # chunks END at eval boundaries so evaluation always sees
+            # the population state right after the eval round
+            boundary = min(((r0 // eval_every) + 1) * eval_every,
+                           num_rounds)
+            size = min(chunk_rounds, boundary - r0)
+            fn = multi_fns.get(size)
+            if fn is None:
+                fn = multi_fns[size] = make_multi_round(
+                    strat.spec, fl, strat.fabric, chunk_rounds=size
+                )
+            with clock.chunk(size):
+                state, stacked = fn(state, train_data, k_rounds,
+                                    jnp.int32(r0))
+                jax.block_until_ready((state, stacked))
+            if chunk_i == 0:
+                hist.compile_s = clock.compile_s
+            stacked = jax.device_get(stacked)
+            for i in range(size):
+                consume_round(
+                    r0 + i,
+                    jax.tree_util.tree_map(lambda v, i=i: v[i], stacked),
+                    compile_round=(chunk_i == 0),
+                )
+            r0 += size
+            chunk_i += 1
+    else:
+        for r in range(num_rounds):
+            k_r = jax.random.fold_in(k_rounds, r)
+            with clock.round():
+                state, metrics = round_jit(state, train_data, k_r)
+                # fence so the clock sees execution, not async dispatch
+                jax.block_until_ready((state, metrics))
+            if r == 0:
+                hist.compile_s = clock.compile_s
+            consume_round(r, metrics, compile_round=(r == 0))
 
     if tracer is not None:
         if graph.rounds > 0:

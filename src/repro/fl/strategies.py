@@ -60,8 +60,10 @@ from repro.core.partial_freeze import make_phase_steps
 from repro.fl.engine import (
     StrategySpec,
     named_stage,
+    gather_rows,
     gossip_edges,
     make_round,
+    scatter_rows,
     stage_bump_round,
     stage_mix,
     stage_plan_gossip,
@@ -71,6 +73,7 @@ from repro.fl.engine import (
     scan_train,
     where_tree,
 )
+from repro.kernels import ops
 from repro.models import model as model_mod
 from repro.models.split import merge_params, split_params
 from repro.optim.sgd import sgd
@@ -152,23 +155,30 @@ def _init_broadcast(cfg, fl):
 
 def stage_train_babu(cfg, fl, opt, n_steps: int, *, stream: str = "train"):
     """FedBABU local training: extractor phase-e steps with the header
-    structurally frozen; optimizer state covers the extractor only."""
+    structurally frozen; optimizer state covers the extractor only.
+    Like stage_train_full, only the sampled rows train (gather →
+    subset vmap → scatter back, bit-identical population state)."""
     phase = make_phase_steps(cfg, opt)
 
     def stage(state, ctx):
+        idx = ctx.sampled_idx
         e, h = split_params(cfg, state["params"])
+        e_sub, h_sub, o_sub = gather_rows((e, h, state["opt"]["e"]), idx)
+        data_sub = gather_rows(ctx.data, idx)
 
         def apply(carry, batch):
             e_c, o_c = carry
-            e2, o2, met = jax.vmap(phase.phase_e)(e_c, h, o_c, batch)
+            e2, o2, met = jax.vmap(phase.phase_e)(e_c, h_sub, o_c, batch)
             return (e2, o2), met["loss"]
 
         (new_e, opt_e), losses = scan_train(
-            apply, (e, state["opt"]["e"]), ctx.data, ctx.keys[stream],
-            n_steps, fl.batch_size,
+            apply, (e_sub, o_sub), data_sub, ctx.keys[stream],
+            n_steps, fl.batch_size, rows=idx, total=ctx.m,
         )
-        new_e = where_tree(ctx.active, new_e, e)
-        opt_e = where_tree(ctx.active, opt_e, state["opt"]["e"])
+        act_sub = ctx.active[idx]
+        new_e = scatter_rows(e, idx, where_tree(act_sub, new_e, e_sub))
+        opt_e = scatter_rows(state["opt"]["e"], idx,
+                             where_tree(act_sub, opt_e, o_sub))
         ctx.metrics["train_loss"] = jnp.mean(losses[-1])
         return {**state, "params": jax.vmap(merge_params)(new_e, h),
                 "opt": {"e": opt_e}}
@@ -228,9 +238,13 @@ def stage_apply_masks():
 
 
 def stage_evolve_masks(fl, *, stream: str = "grow"):
-    """DisPFL mask evolution: magnitude prune back to the target sparsity
-    (threshold via an O(n) partition, not a full sort) + RigL-style
-    random regrow at rate fl.dispfl_regrow, then re-project."""
+    """DisPFL mask evolution: magnitude prune back to the target
+    sparsity + RigL-style random regrow at rate fl.dispfl_regrow, then
+    re-project — fused per leaf through kernels.ops.mask_evolve (exact
+    bit-bisection threshold on TPU/blocked paths: identical masks to
+    the old partition sort, but no O(n log n) sort in the round).
+    The regrow uniforms are drawn here, per leaf, in the exact PRNG
+    order of the original implementation."""
     sparsity, regrow = fl.dispfl_sparsity, fl.dispfl_regrow
 
     def stage(state, ctx):
@@ -238,25 +252,20 @@ def stage_evolve_masks(fl, *, stream: str = "grow"):
 
         def evolve(leaf, mk, kk):
             if leaf.ndim <= 1:
-                return mk
-            flat = jnp.abs(leaf).ravel()
-            keep = max(int(flat.size * (1 - sparsity)), 1)
-            kth = flat.size - keep
-            thr = jnp.partition(flat, kth)[kth]
-            new_mk = jnp.abs(leaf) >= thr
+                return leaf * mk.astype(leaf.dtype), mk
+            keep = max(int(leaf.size * (1 - sparsity)), 1)
             grown = jax.random.uniform(kk, leaf.shape) > (1.0 - regrow)
-            return new_mk | (grown & ~new_mk)
+            return ops.mask_evolve(leaf, grown, keep=keep)
 
         leaves, treedef = jax.tree_util.tree_flatten(mixed)
         mleaves = jax.tree_util.tree_leaves(state["mask"])
         gkeys = jax.random.split(ctx.keys[stream], len(leaves))
+        evolved = [evolve(l, mk, k)
+                   for l, mk, k in zip(leaves, mleaves, gkeys)]
+        params = jax.tree_util.tree_unflatten(
+            treedef, [p for p, _ in evolved])
         new_mask = jax.tree_util.tree_unflatten(
-            treedef,
-            [evolve(l, mk, k) for l, mk, k in zip(leaves, mleaves, gkeys)],
-        )
-        params = jax.tree_util.tree_map(
-            lambda p, mk: p * mk.astype(p.dtype), mixed, new_mask
-        )
+            treedef, [mk for _, mk in evolved])
         return {**state, "params": params, "mask": new_mask}
 
     return named_stage(stage, "evolve_masks")

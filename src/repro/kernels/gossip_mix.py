@@ -1,0 +1,140 @@
+"""Pallas TPU gossip-mix kernel — sparse neighbor aggregation.
+
+Row-stochastic gossip mixing (the dfedavgm/dfedpgp/dispfl aggregate
+step) is `out = W @ X` with W (M, M) row-stochastic but only deg ≤ D
+nonzeros per row (the k gossip pulls + self). The dense einsum in
+`engine.stage_mix` moves O(M²·F) FLOPs plus the whole (M, M) weight
+matrix per leaf; this kernel streams packed neighbor lists instead —
+O(M·D·F) FLOPs and O(M·D) index/weight traffic — using scalar prefetch
+so the row gather `x[idx[i, d]]` is a BlockSpec index map (a DMA from
+the prefetched index, not a gather op inside the kernel).
+
+Grid (M, F/bf, D), d innermost: the (1, bf) output block stays resident
+in VMEM while the D weighted neighbor rows accumulate into it in f32;
+weights ride in SMEM as (1, 1) scalars.
+
+Contract (see `weights_to_neighbors`): `idx` rows hold the column
+indices of the row's nonzero weights in ASCENDING order, padded with
+index 0 / weight 0.0 (adding exact zeros). Every impl here accumulates
+neighbors in that same ascending order in f32, so
+
+    gossip_mix == gossip_mix_blocked == ref.gossip_mix_ref   (bitwise)
+
+and `ops.gossip_mix(impl="auto")` routing never changes round numerics.
+`gossip_mix_dense` (scatter back to dense + the einsum the engine used
+before) is the small-M fast path: on CPU the O(M²·F) GEMM beats the
+bandwidth-bound sparse gathers until M is large (BENCH_select.json's
+select routing found the same crossover shape).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.peer_score import LANE, ceil_to
+
+DEFAULT_BLOCK_F = 1024
+
+
+def weights_to_neighbors(weights, d_max: int):
+    """Pack a dense (M, M) mixing matrix into (idx, w) neighbor lists.
+
+    → (idx (M, d_max) int32 ascending nonzero columns, w (M, d_max) f32),
+    padded with index 0 / weight 0.0. `d_max` must bound the true row
+    degree (k+1 directed, 2k+1 undirected, self included) — overflow
+    rows would silently drop neighbors.
+    """
+    nz = weights != 0.0
+    # stable argsort of ~nz floats the nonzero columns to the front in
+    # ascending column order — the accumulation order of every impl.
+    order = jnp.argsort(~nz, axis=1, stable=True)
+    idx = order[:, :d_max].astype(jnp.int32)
+    w = jnp.take_along_axis(weights, idx, axis=1).astype(jnp.float32)
+    return idx, w
+
+
+def gossip_degree_bound(k: int, m: int, *, directed: bool) -> int:
+    """Static row-degree bound for a k-peer gossip plan incl. self.
+
+    Directed: each row pulls exactly its own k selections → k + 1.
+    Undirected: `mask | mask.T` adds every peer that selected ME, and
+    a row's in-degree is only bounded by M-1 under random selection —
+    there is no useful static bound, so the packed-list layout degrades
+    to D = M (callers should keep the dense mix for undirected plans).
+    """
+    d = k + 1 if directed else m
+    return max(1, min(d, m))
+
+
+def _mix_kernel(idx_ref, w_ref, x_ref, out_ref, *, num_d: int):
+    d = pl.program_id(2)
+    del idx_ref  # consumed by the BlockSpec index maps
+
+    @pl.when(d == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += w_ref[0, 0] * x_ref[...]
+
+
+def gossip_mix(x, idx, w, *, block_f: int = DEFAULT_BLOCK_F,
+               interpret: bool = False):
+    """x: (M, F) f32; idx/w: (M, D) packed neighbor lists → (M, F) f32."""
+    m, f = x.shape
+    d = idx.shape[1]
+    xf = x.astype(jnp.float32)
+    bf = min(block_f, ceil_to(f, LANE))
+    pf = (-f) % bf
+    if pf:
+        xf = jnp.pad(xf, ((0, 0), (0, pf)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m, (f + pf) // bf, d),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, fb, db, idx_s: (i, db),
+                         memory_space=pltpu.SMEM),
+            # the sparse gather: block row = the prefetched neighbor id
+            pl.BlockSpec((1, bf), lambda i, fb, db, idx_s: (idx_s[i, db], fb)),
+        ],
+        out_specs=pl.BlockSpec((1, bf), lambda i, fb, db, idx_s: (i, fb)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_mix_kernel, num_d=d),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, f + pf), jnp.float32),
+        interpret=interpret,
+    )(idx, w.astype(jnp.float32), xf)
+    return out[:, :f].astype(x.dtype)
+
+
+def gossip_mix_blocked(x, idx, w):
+    """jnp fallback: fori over the D neighbor slots (ascending), row
+    gather + fused multiply-add per slot. Bitwise == the Pallas kernel
+    and the dense sequential oracle."""
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+
+    def body(d, acc):
+        ids = jax.lax.dynamic_slice_in_dim(idx, d, 1, axis=1)[:, 0]
+        wd = jax.lax.dynamic_slice_in_dim(wf, d, 1, axis=1)
+        return acc + wd * xf[ids]
+
+    out = jax.lax.fori_loop(0, idx.shape[1], body,
+                            jnp.zeros(xf.shape, jnp.float32))
+    return out.astype(x.dtype)
+
+
+def gossip_mix_dense(x, idx, w):
+    """Small-M fast path: scatter the lists back to dense and run the
+    einsum `aggregate_extractors` always used — numerically the exact
+    mix the engine computed before sparse routing existed."""
+    m = x.shape[0]
+    rows = jnp.arange(m)[:, None]
+    dense = jnp.zeros((m, m), jnp.float32).at[rows, idx].add(
+        w.astype(jnp.float32))
+    out = jnp.einsum("ij,jf->if", dense, x.astype(jnp.float32))
+    return out.astype(x.dtype)

@@ -18,6 +18,8 @@ from functools import partial
 import jax
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import gossip_mix as _gm
+from repro.kernels import mask_evolve as _me
 from repro.kernels import peer_score as _ps
 from repro.kernels import ref as _ref
 from repro.kernels import select_score as _ss
@@ -46,6 +48,29 @@ def resolve_select_impl(m: int, backend: str | None = None) -> str:
     if backend == "tpu":
         return "pallas"
     return "blocked" if m >= AUTO_MIN_BLOCKED.get(backend, 2048) else "dense"
+
+
+# Tuned col_block for the blocked column-scan, per (M, platform): each
+# entry is (max_m, col_block), first match wins, None = no upper bound.
+# Numbers come from the sweep recorded in BENCH_select.json
+# (`select_bench.py --sweep`, cpu host 2026-08): M≤256 wants the whole
+# row in one block (no carry merges: 256 beat 128 by ~11%), larger M
+# settles on 512 (best at both M=1024 and M=4096, where 512 beat 1024
+# by ~7% and 2048 by ~26% — [carry | block] stays cache-resident).
+# gpu rows are the untuned cpu shape — resweep on a gpu host.
+SELECT_COL_BLOCKS = {
+    "cpu": ((256, 256), (None, 512)),
+    "gpu": ((256, 256), (None, 512)),
+}
+
+
+def resolve_select_block(m: int, backend: str | None = None) -> int:
+    """Tuned column-block size for select_topk's blocked impl."""
+    backend = backend or jax.default_backend()
+    for max_m, blk in SELECT_COL_BLOCKS.get(backend, ()):
+        if max_m is None or m <= max_m:
+            return blk
+    return _ss.DEFAULT_COL_BLOCK
 
 
 @partial(
@@ -105,7 +130,7 @@ def select_topk(
     lam: float,
     block_m: int = _ps.DEFAULT_BLOCK_M,
     block_p: int = _ps.DEFAULT_BLOCK_P,
-    col_block: int = _ss.DEFAULT_COL_BLOCK,
+    col_block: int | None = None,
     interpret: bool | None = None,
     impl: str = "auto",
 ):
@@ -134,6 +159,8 @@ def select_topk(
             interpret=_interpret(interpret),
         )
     if impl == "blocked":
+        if col_block is None:
+            col_block = resolve_select_block(x.shape[0])
         return _ss.select_topk_blocked(
             x, last_selected, s_l, t, cost, candidate_mask,
             k=k, alpha=alpha, lam=lam, block=col_block,
@@ -144,6 +171,113 @@ def select_topk(
             k=k, alpha=alpha, lam=lam,
         )
     raise ValueError(f"unknown select_topk impl {impl!r}")
+
+
+# gossip_mix impl="auto" routing: on CPU the dense GEMM beats the
+# bandwidth-bound sparse row gathers until M is well past the population
+# sizes our golden/CI sims run at (measured M=64: einsum 3.6 ms vs
+# sparse fori 22 ms on the CIFAR CNN) — the (M, M) weight matrix only
+# starts to hurt once it stops fitting in cache. TPU always takes the
+# Pallas scalar-prefetch kernel (O(M·D·F) is the point).
+AUTO_MIN_SPARSE_MIX = {"cpu": 1024, "gpu": 512}
+
+
+def resolve_mix_impl(m: int, backend: str | None = None) -> str:
+    """Resolve gossip_mix impl="auto" → "pallas" | "blocked" | "dense"."""
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        return "pallas"
+    return ("blocked" if m >= AUTO_MIN_SPARSE_MIX.get(backend, 1024)
+            else "dense")
+
+
+@partial(jax.jit, static_argnames=("block_f", "interpret", "impl"))
+def gossip_mix(
+    x,
+    idx,
+    w,
+    *,
+    block_f: int = _gm.DEFAULT_BLOCK_F,
+    interpret: bool | None = None,
+    impl: str = "auto",
+):
+    """Row-stochastic gossip mixing over packed neighbor lists.
+
+    x: (M, F); idx/w: (M, D) ascending-index neighbor lists from
+    `kernels.gossip_mix.weights_to_neighbors` → (M, F) mixed rows.
+
+    impl: "pallas" (scalar-prefetch TPU kernel; interpret off-TPU),
+    "blocked" (jnp fori over neighbor slots), "dense" (scatter back to
+    (M, M) + the einsum stage_mix always used), or "auto" via
+    `resolve_mix_impl`. pallas/blocked/the sequential oracle agree
+    BITWISE (same ascending accumulation order); dense is the same mix
+    the engine computed before sparse routing existed.
+    """
+    if impl == "auto":
+        impl = resolve_mix_impl(x.shape[0])
+    if impl == "pallas":
+        return _gm.gossip_mix(
+            x, idx, w, block_f=block_f, interpret=_interpret(interpret)
+        )
+    if impl == "blocked":
+        return _gm.gossip_mix_blocked(x, idx, w)
+    if impl == "dense":
+        return _gm.gossip_mix_dense(x, idx, w)
+    raise ValueError(f"unknown gossip_mix impl {impl!r}")
+
+
+# mask_evolve impl="auto" routing: the 31-pass bisection beats the full
+# partition-sort well before CNN layer sizes (measured on CPU: 0.46 ms
+# vs 7.7 ms at n=50k, 6.8 ms vs 106 ms at n=500k); below the threshold
+# the sort of a tiny leaf is cheap enough that the oracle wins on
+# dispatch count alone.
+AUTO_MIN_BISECT = {"cpu": 2048, "gpu": 2048}
+
+
+def resolve_evolve_impl(n: int, backend: str | None = None) -> str:
+    """Resolve mask_evolve impl="auto" for an n-element leaf."""
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        return "pallas"
+    return ("blocked" if n >= AUTO_MIN_BISECT.get(backend, 2048)
+            else "dense")
+
+
+@partial(jax.jit, static_argnames=("keep", "block_r", "interpret", "impl"))
+def mask_evolve(
+    x,
+    grow,
+    *,
+    keep: int,
+    block_r: int = _me.DEFAULT_BLOCK_R,
+    interpret: bool | None = None,
+    impl: str = "auto",
+):
+    """Fused DisPFL mask evolution: drop to the `keep` largest-|x|
+    entries, regrow where `grow` (bool plane, drawn by the caller so
+    PRNG order is unchanged), re-project params — in one pass, with the
+    magnitude threshold found by exact bit bisection instead of a full
+    sort. → (x·mask, mask bool).
+
+    impl: "pallas" (bisection + fused apply kernels; interpret
+    off-TPU), "blocked" (jnp bisection fori), "dense" (the
+    partition-sort oracle, `ref.mask_evolve_ref`), or "auto" via
+    `resolve_evolve_impl`. All impls emit IDENTICAL masks (the
+    bisection threshold is bitwise-equal to the partition's, ties
+    included).
+    """
+    if impl == "auto":
+        impl = resolve_evolve_impl(x.size)
+    if impl == "pallas":
+        return _me.mask_evolve(
+            x, grow, keep=keep, block_r=block_r,
+            interpret=_interpret(interpret),
+        )
+    if impl == "blocked":
+        return _me.mask_evolve_blocked(x, grow, keep=keep)
+    if impl == "dense":
+        return _ref.mask_evolve_ref(x, grow, keep=keep)
+    raise ValueError(f"unknown mask_evolve impl {impl!r}")
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

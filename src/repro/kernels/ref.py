@@ -101,6 +101,48 @@ def select_topk_ref(x, last_selected, s_l, t, cost, candidate_mask=None,
 
 
 # ---------------------------------------------------------------------------
+# gossip-mix oracle — dense sequential neighbor accumulation
+# ---------------------------------------------------------------------------
+
+def gossip_mix_ref(x, idx, w):
+    """Dense oracle for the sparse gossip mix: scatter the packed
+    (idx, w) neighbor lists back to a dense (M, M) matrix, then
+    accumulate columns j = 0..M-1 SEQUENTIALLY in ascending order —
+    the exact accumulation order the sparse impls replicate (ascending
+    `idx` rows, zero-weight padding), so kernel parity is bitwise, not
+    just allclose."""
+    m = x.shape[0]
+    xf = x.astype(jnp.float32)
+    rows = jnp.arange(m)[:, None]
+    dense = jnp.zeros((m, m), jnp.float32).at[rows, idx].add(
+        w.astype(jnp.float32))
+
+    def body(j, acc):
+        wj = jax.lax.dynamic_slice_in_dim(dense, j, 1, axis=1)   # (M, 1)
+        xj = jax.lax.dynamic_slice_in_dim(xf, j, 1, axis=0)      # (1, F)
+        return acc + wj * xj
+
+    out = jax.lax.fori_loop(0, m, body, jnp.zeros(xf.shape, jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mask-evolution oracle — partition-based drop + regrow (DisPFL)
+# ---------------------------------------------------------------------------
+
+def mask_evolve_ref(x, grow, *, keep: int):
+    """Partition-based oracle for the bisection kernel: threshold =
+    `jnp.partition(|x|, kth)[kth]` (the original stage_evolve_masks
+    sort), mask = (|x| >= thr) | grow, params re-projected. → (x·mask,
+    mask bool)."""
+    flat = jnp.abs(x.astype(jnp.float32)).ravel()
+    kth = flat.size - keep
+    thr = jnp.partition(flat, kth)[kth]
+    mask = (jnp.abs(x) >= thr) | grow
+    return x * mask.astype(x.dtype), mask
+
+
+# ---------------------------------------------------------------------------
 # WKV oracle — per-step recurrence (RWKV6 data-dependent decay)
 # ---------------------------------------------------------------------------
 

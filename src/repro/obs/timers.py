@@ -57,17 +57,26 @@ class StageTimes:
     first: dict = field(default_factory=dict)
     steady: dict = field(default_factory=dict)
 
-    def add(self, label: str, dt: float):
+    def add(self, label: str, dt: float, *, rounds: int = 1):
+        """Record one observed call of `label` taking `dt` seconds.
+
+        rounds > 1 attributes a CHUNKED call (one jit executing `rounds`
+        scanned rounds): the first chunk's whole wall stays the label's
+        first-call entry (one compile covered the chunk), later chunks
+        contribute their per-round wall `dt / rounds` once per round so
+        the steady mean remains per-round comparable across chunk sizes.
+        """
         if label not in self.first:
             self.first[label] = dt
         else:
-            self.steady.setdefault(label, []).append(dt)
+            per_round = dt / rounds
+            self.steady.setdefault(label, []).extend([per_round] * rounds)
 
     @contextmanager
-    def timed(self, label: str):
+    def timed(self, label: str, *, rounds: int = 1):
         t0 = time.perf_counter()
         yield
-        self.add(label, time.perf_counter() - t0)
+        self.add(label, time.perf_counter() - t0, rounds=rounds)
 
     def summary(self) -> dict:
         """{label: {first_s, steady_s, compile_s, calls}} — compile_s is
@@ -129,6 +138,14 @@ class RoundClock:
     round accumulates into `steady_s`. `elapsed()` = steady-only wall,
     the number acc-vs-time curves should use (pre-obs History folded the
     compile tax into the first eval point's wall_s).
+
+    Chunked execution (`chunk(n)`, the scan-over-rounds path) keeps the
+    same attribution contract at chunk granularity: the FIRST chunk's
+    whole wall is `compile_s` — one compile covering trace + XLA + n
+    executed rounds, so it is an upper bound on pure compile — and
+    later chunks accumulate into `steady_s`. `last_s` always holds the
+    PER-ROUND wall of the latest context (chunk wall / n), which is
+    what the trace writer records for each unstacked round.
     """
     compile_s: float = 0.0
     steady_s: float = 0.0
@@ -136,15 +153,21 @@ class RoundClock:
     last_s: float = 0.0
 
     @contextmanager
-    def round(self):
+    def chunk(self, n: int):
         t0 = time.perf_counter()
         yield
-        self.last_s = time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        self.last_s = wall / n
         if self.rounds == 0:
-            self.compile_s = self.last_s
+            self.compile_s = wall
         else:
-            self.steady_s += self.last_s
-        self.rounds += 1
+            self.steady_s += wall
+        self.rounds += n
+
+    @contextmanager
+    def round(self):
+        with self.chunk(1):
+            yield
 
     def elapsed(self) -> float:
         return self.steady_s

@@ -1,0 +1,46 @@
+"""Persistent XLA compilation cache — amortize jit compile across runs.
+
+The round jit (and its scanned chunk variant) pays 5–8 s of XLA
+compile per process on CPU — by far the largest share of a short
+experiment's wall. jax's persistent compilation cache keys compiled
+executables by HLO hash on disk, so every process after the first
+loads the executable in ~0.1 s instead of recompiling:
+
+    from repro.utils.compile_cache import enable_compilation_cache
+    enable_compilation_cache()          # or pass an explicit dir
+
+`benchmarks/round_bench.py --compile-cache DIR` uses this to record
+warm-start scan totals next to the cold ones, and long-lived drivers
+(sweeps, CI re-runs, notebook restarts) get the same win for free.
+
+Opt-in on purpose: the cache directory grows with every distinct
+(program, shape, flags) combination and hides compile regressions if
+enabled while benchmarking compile itself.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+# env override for drivers that cannot thread an argument through
+ENV_DIR = "REPRO_COMPILE_CACHE_DIR"
+DEFAULT_DIR = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro-jax-compile"
+)
+
+
+def enable_compilation_cache(path: str | None = None,
+                             *, min_compile_secs: float = 1.0) -> str:
+    """Enable jax's on-disk compilation cache and return its directory.
+
+    Only compilations slower than `min_compile_secs` are persisted —
+    the sub-second jits (metrics, eval batches) stay out of the cache,
+    the multi-second round/chunk programs are the point.
+    """
+    cache_dir = path or os.environ.get(ENV_DIR) or DEFAULT_DIR
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                      min_compile_secs)
+    return cache_dir

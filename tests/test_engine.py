@@ -252,7 +252,9 @@ def test_round_lowers_under_mesh_and_matches_no_mesh(tiny_cnn):
     from jax.sharding import Mesh
 
     mesh = Mesh(np.array(jax.devices()), ("data",))
-    placed = place_population(state, fl.num_clients, mesh)
+    # re-init (bitwise-identical seed): round() donated the first state
+    placed = place_population(strat.init(jax.random.PRNGKey(1)),
+                              fl.num_clients, mesh)
     with mesh:
         got, _ = strat.round(placed, train, jax.random.PRNGKey(2))
     for a, b in zip(jax.tree_util.tree_leaves(ref["params"]),
@@ -302,3 +304,132 @@ def test_strategy_specs_declare_exchange_metadata(tiny_cnn):
         assert spec.payload_kind in ("model", "extractor")
         assert spec.sample_stream in spec.key_streams
         assert len(spec.stages) >= 3
+
+
+# ---------------------------------------------------------------------------
+# scan-over-rounds: make_multi_round bitwise parity with the per-round jit
+# ---------------------------------------------------------------------------
+
+def _scan_env(m=6, comms=None):
+    fl = FLConfig(num_clients=m, peers_per_round=2, batch_size=8,
+                  client_sample_ratio=0.5, epochs_extractor=1,
+                  epochs_header=1, probe_size=4,
+                  **({"comms": comms} if comms is not None else {}))
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(0), m, num_classes=10, classes_per_client=2,
+        samples_per_class=10, image_size=8,
+    )
+    return fl, {"images": data["train_x"], "labels": data["train_y"]}
+
+
+def _sequential_rounds(strat, train, rounds, key):
+    """`rounds` per-round jitted calls, the simulator's key schedule."""
+    state = strat.init(jax.random.PRNGKey(1))
+    mets = []
+    for r in range(rounds):
+        state, m = strat.round(state, train, jax.random.fold_in(key, r))
+        mets.append(jax.device_get(m))
+    return jax.device_get(state), mets
+
+
+def _scanned_rounds(strat, fl, train, rounds, key, *, chunk):
+    from repro.fl.engine import make_multi_round
+
+    fn = make_multi_round(strat.spec, fl, strat.fabric, chunk_rounds=chunk)
+    state = strat.init(jax.random.PRNGKey(1))
+    stacks = []
+    for r0 in range(0, rounds, chunk):
+        state, stacked = fn(state, train, key, jnp.int32(r0))
+        stacks.append(jax.device_get(stacked))
+    return jax.device_get(state), stacks
+
+
+def _assert_trees_bitwise(a, b, what):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+@pytest.mark.slow
+def test_multi_round_chunk1_matches_single_round(tiny_cnn):
+    fl, train = _scan_env()
+    strat = make_strategy("pfeddst", tiny_cnn, fl, steps_per_epoch=1)
+    key = jax.random.PRNGKey(3)
+    ref_state, ref_mets = _sequential_rounds(strat, train, 1, key)
+    got_state, stacks = _scanned_rounds(strat, fl, train, 1, key, chunk=1)
+    _assert_trees_bitwise(got_state, ref_state, "state (R=1)")
+    first = jax.tree_util.tree_map(lambda v: v[0], stacks[0])
+    _assert_trees_bitwise(first, ref_mets[0], "metrics (R=1)")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name,comms", [
+    ("pfeddst", None),
+    ("dispfl", None),
+    ("pfeddst_async", None),
+    ("pfeddst", CommsConfig(topology="ring", availability=0.9,
+                            p_link_drop=0.1)),
+    ("dfedavgm", CommsConfig(topology="ring", availability=0.9,
+                             p_link_drop=0.1)),
+], ids=["pfeddst", "dispfl", "pfeddst_async", "pfeddst-ring",
+        "dfedavgm-ring"])
+def test_multi_round_chunk_matches_sequential(tiny_cnn, name, comms):
+    """A 4-round scanned chunk == 4 sequential jitted rounds, bitwise —
+    state AND every stacked per-round metric."""
+    fl, train = _scan_env(comms=comms)
+    strat = make_strategy(name, tiny_cnn, fl, steps_per_epoch=1)
+    key = jax.random.PRNGKey(3)
+    rounds = 4
+    ref_state, ref_mets = _sequential_rounds(strat, train, rounds, key)
+    got_state, stacks = _scanned_rounds(strat, fl, train, rounds, key,
+                                        chunk=rounds)
+    _assert_trees_bitwise(got_state, ref_state, f"{name}: state")
+    (stacked,) = stacks
+    for i in range(rounds):
+        got_i = jax.tree_util.tree_map(lambda v, i=i: v[i], stacked)
+        _assert_trees_bitwise(got_i, ref_mets[i], f"{name}: metrics[{i}]")
+
+
+@pytest.mark.slow
+def test_multi_round_resumes_across_chunks(tiny_cnn):
+    """Two R=2 chunks (start=0 then start=2) == one R=4 chunk — the
+    `start` offset drives fold_in exactly like the flat schedule."""
+    fl, train = _scan_env()
+    strat = make_strategy("pfeddst", tiny_cnn, fl, steps_per_epoch=1)
+    key = jax.random.PRNGKey(3)
+    ref_state, _ = _sequential_rounds(strat, train, 4, key)
+    got_state, stacks = _scanned_rounds(strat, fl, train, 4, key, chunk=2)
+    assert len(stacks) == 2
+    _assert_trees_bitwise(got_state, ref_state, "state (2x R=2)")
+
+
+@pytest.mark.slow
+def test_scanned_run_trace_schema_valid(tiny_cnn, tmp_path):
+    """run_experiment(chunk_rounds=4) writes a schema-v1 trace whose
+    `round` records stay per-round and carry the right indices."""
+    from repro.fl import run_experiment
+    from repro.obs.trace import validate_trace
+
+    fl, _ = _scan_env()
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(0), fl.num_clients, num_classes=10,
+        classes_per_client=2, samples_per_class=10, image_size=8,
+    )
+    path = str(tmp_path / "scan_trace.jsonl")
+    hist = run_experiment(
+        "pfeddst", tiny_cnn, fl, data, num_rounds=4, eval_every=2,
+        steps_per_epoch=1, seed=0, verbose=False, trace=path,
+        chunk_rounds=4,
+    )
+    records, errors = validate_trace(path)
+    assert errors == []
+    rounds = [r for r in records if r["type"] == "round"]
+    assert [r["round"] for r in rounds] == [0, 1, 2, 3]
+    # chunks end at eval boundaries: eval_every=2 caps chunks at 2
+    # rounds, so the first chunk (compile) covers rounds 0-1 only
+    assert [bool(r["compile"]) for r in rounds] == [
+        True, True, False, False]
+    assert [("eval" in r) for r in rounds] == [False, True, False, True]
+    assert hist.compile_s > 0 and len(hist.accuracy) == 2

@@ -74,7 +74,10 @@ def test_central_zero_active_round_is_noop(env, name):
     fl0 = dataclasses.replace(fl, comms=CommsConfig(availability=0.0))
     strat = make_strategy(name, cfg, fl0, steps_per_epoch=1)
     state = strat.init(jax.random.PRNGKey(1))
-    before = jax.tree.leaves((state["params"], state["opt"]))
+    # materialize: strat.round donates its input buffers (engine jit
+    # donate_argnums), so live references into `state` become invalid
+    before = [np.asarray(l)
+              for l in jax.tree.leaves((state["params"], state["opt"]))]
     state, metrics = strat.round(state, train, jax.random.PRNGKey(2))
     assert int(jnp.sum(metrics["active"])) == 0
     after = jax.tree.leaves((state["params"], state["opt"]))
@@ -108,10 +111,11 @@ def test_fedbabu_header_frozen(env):
     strat = make_strategy("fedbabu", cfg, fl, steps_per_epoch=1)
     state = strat.init(jax.random.PRNGKey(1))
     _, h0 = split_params(cfg, strat.params_for_eval(state))
+    h0 = [np.asarray(l) for l in jax.tree.leaves(h0)]  # round() donates state
     state, _ = strat.round(state, train, jax.random.PRNGKey(2))
     _, h1 = split_params(cfg, strat.params_for_eval(state))
-    for a, b in zip(jax.tree.leaves(h0), jax.tree.leaves(h1)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(h0, jax.tree.leaves(h1)):
+        np.testing.assert_array_equal(a, np.asarray(b))
 
 
 def test_dispfl_masks_enforced(env):

@@ -1,0 +1,159 @@
+"""Sparse gossip-mix + DisPFL mask-evolution kernels — parity vs the
+dense oracles (bitwise for mixing, identical masks for evolution) and
+the ops-layer impl="auto" routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import selection_to_weights
+from repro.kernels import ops
+from repro.kernels.gossip_mix import (
+    gossip_degree_bound,
+    gossip_mix,
+    gossip_mix_blocked,
+    gossip_mix_dense,
+    weights_to_neighbors,
+)
+from repro.kernels.mask_evolve import magnitude_threshold, mask_evolve_blocked
+from repro.kernels.ref import gossip_mix_ref, mask_evolve_ref
+from repro.kernels import mask_evolve as _me
+
+
+def _gossip_inputs(m, f, k, directed, seed=0):
+    """A real plan-shaped instance: random k-peer selection mask →
+    row-stochastic weights (self included) → packed neighbor lists."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    from repro.core.selection import select_peers
+
+    mask = select_peers(
+        jax.random.uniform(ks[0], (m, m)), k=k,
+        candidate_mask=~jnp.eye(m, dtype=bool),
+    )
+    if not directed:
+        mask = mask | mask.T
+    # random inactive rows, like nbr & active[:, None]
+    mask = mask & jax.random.bernoulli(ks[1], 0.7, (m,))[:, None]
+    w = selection_to_weights(mask, include_self=True)
+    x = jax.random.normal(ks[2], (m, f), jnp.float32)
+    d = gossip_degree_bound(k, m, directed=directed)
+    idx, wl = weights_to_neighbors(w, d)
+    return x, idx, wl, w
+
+
+def test_weights_to_neighbors_roundtrip():
+    x, idx, wl, w = _gossip_inputs(17, 8, 3, directed=True, seed=3)
+    m = w.shape[0]
+    dense = np.zeros((m, m), np.float32)
+    dense[np.arange(m)[:, None], np.asarray(idx)] += np.asarray(wl)
+    np.testing.assert_array_equal(dense, np.asarray(w))
+    # ascending index order within each row's real (nonzero) entries
+    for r in range(m):
+        real = np.asarray(idx[r])[np.asarray(wl[r]) != 0]
+        assert (np.diff(real) > 0).all()
+
+
+@pytest.mark.parametrize("m,f,k,directed", [
+    (8, 16, 2, True),
+    (17, 130, 3, False),       # ragged F (lane padding), undirected
+    (64, 384, 10, True),
+    (33, 257, 5, False),
+])
+def test_gossip_mix_parity(m, f, k, directed):
+    x, idx, wl, _ = _gossip_inputs(m, f, k, directed)
+    ref = gossip_mix_ref(x, idx, wl)
+    # blocked and pallas replicate the oracle's ascending accumulation
+    # order → bitwise equality, the contract stage_mix routing relies on
+    np.testing.assert_array_equal(np.asarray(gossip_mix_blocked(x, idx, wl)),
+                                  np.asarray(ref))
+    np.testing.assert_array_equal(
+        np.asarray(gossip_mix(x, idx, wl, block_f=128, interpret=True)),
+        np.asarray(ref))
+    # the dense scatter+einsum path agrees exactly on CPU at these sizes
+    np.testing.assert_allclose(np.asarray(gossip_mix_dense(x, idx, wl)),
+                               np.asarray(ref), atol=1e-6)
+
+
+def test_gossip_mix_matches_dense_einsum_mix():
+    """Sparse mixing of a real plan == the (M, M) einsum stage_mix used
+    before (aggregate_extractors), on the same weights."""
+    from repro.core.aggregation import aggregate_extractors
+
+    x, idx, wl, w = _gossip_inputs(32, 96, 4, directed=False, seed=7)
+    dense_mix = aggregate_extractors({"p": x}, w)["p"]
+    np.testing.assert_allclose(np.asarray(gossip_mix_blocked(x, idx, wl)),
+                               np.asarray(dense_mix), rtol=1e-6, atol=1e-6)
+
+
+def test_gossip_mix_ops_routing():
+    x, idx, wl, _ = _gossip_inputs(16, 64, 3, directed=True, seed=1)
+    ref = gossip_mix_ref(x, idx, wl)
+    for impl in ("auto", "dense", "blocked", "pallas"):
+        got = ops.gossip_mix(x, idx, wl, impl=impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-6)
+    assert ops.resolve_mix_impl(16, "cpu") == "dense"
+    assert ops.resolve_mix_impl(4096, "cpu") == "blocked"
+    assert ops.resolve_mix_impl(16, "tpu") == "pallas"
+    with pytest.raises(ValueError):
+        ops.gossip_mix(x, idx, wl, impl="nope")
+
+
+# ---------------------------------------------------------------------------
+# mask evolution
+# ---------------------------------------------------------------------------
+
+def _evolve_inputs(shape, sparsity, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], shape, jnp.float32)
+    grow = jax.random.uniform(ks[1], shape) > (1.0 - 0.1)
+    keep = max(int(x.size * (1.0 - sparsity)), 1)
+    return x, grow, keep
+
+
+@pytest.mark.parametrize("n,kth", [(7, 0), (7, 6), (100, 37), (513, 400)])
+def test_magnitude_threshold_exact(n, kth):
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(n), (n,)))
+    # inject exact ties so tie-handling is exercised
+    x = x.at[: n // 3].set(x[n // 2])
+    got = magnitude_threshold(x, kth)
+    want = jnp.partition(x, kth)[kth]
+    assert np.asarray(got).tobytes() == np.asarray(want).tobytes()
+
+
+@pytest.mark.parametrize("shape,sparsity", [
+    ((40,), 0.5),
+    ((33, 7), 0.8),            # ragged flatten
+    ((8, 8, 3, 16), 0.5),      # conv-shaped leaf
+    ((300, 10), 0.0),          # keep everything
+])
+def test_mask_evolve_parity(shape, sparsity):
+    x, grow, keep = _evolve_inputs(shape, sparsity)
+    ref_p, ref_m = mask_evolve_ref(x, grow, keep=keep)
+    for got_p, got_m in (
+        mask_evolve_blocked(x, grow, keep=keep),
+        _me.mask_evolve(x, grow, keep=keep, block_r=8, interpret=True),
+    ):
+        np.testing.assert_array_equal(np.asarray(got_m), np.asarray(ref_m))
+        np.testing.assert_array_equal(np.asarray(got_p), np.asarray(ref_p))
+
+
+def test_mask_evolve_keep_count():
+    x, grow, keep = _evolve_inputs((64, 32), 0.7, seed=5)
+    _, mask = mask_evolve_blocked(x, jnp.zeros_like(grow), keep=keep)
+    # no regrow → exactly the keep largest survive (up to magnitude ties)
+    assert int(mask.sum()) >= keep
+    thr = magnitude_threshold(jnp.abs(x).ravel(), x.size - keep)
+    assert int(mask.sum()) == int((jnp.abs(x) >= thr).sum())
+
+
+def test_mask_evolve_ops_routing():
+    x, grow, keep = _evolve_inputs((50, 41), 0.6, seed=2)
+    ref_p, ref_m = mask_evolve_ref(x, grow, keep=keep)
+    for impl in ("auto", "dense", "blocked", "pallas"):
+        got_p, got_m = ops.mask_evolve(x, grow, keep=keep, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got_m), np.asarray(ref_m))
+        np.testing.assert_array_equal(np.asarray(got_p), np.asarray(ref_p))
+    assert ops.resolve_evolve_impl(100, "cpu") == "dense"
+    assert ops.resolve_evolve_impl(100_000, "cpu") == "blocked"
+    assert ops.resolve_evolve_impl(100, "tpu") == "pallas"

@@ -447,6 +447,38 @@ def test_bench_diff_flags_regressions(tmp_path):
     assert bd.main([po, po]) == 0
 
 
+def test_bench_diff_total_wall_gate(tmp_path):
+    """Compile+steady are gated TOGETHER through the synthetic
+    total_wall_s leaf: a compile blow-up under the loose 2x per-leaf
+    gate still flags once the 10-round total regresses >15%."""
+    bd = _load_module(os.path.join(REPO, "tools", "bench_diff.py"),
+                      "bench_diff")
+    old = {"rounds": {"pfeddst": {"M16": {
+        "steady_s": 1.0, "compile_s": 5.0, "first_s": 6.0, "calls": 3}}}}
+    bd.add_total_wall(old)
+    assert old["rounds"]["pfeddst"]["M16"]["total_wall_s"] == 15.0
+    # compile/first both stay under their own 2x gates (5 -> 9.9,
+    # 6 -> 10.9), but the synthetic total (15 -> 19.9, +33%) is held
+    # to the normal threshold
+    new = {"rounds": {"pfeddst": {"M16": {
+        "steady_s": 1.0, "compile_s": 9.9, "first_s": 10.9, "calls": 3}}}}
+    bd.add_total_wall(new)
+    _, regressions = bd.diff(old, new, threshold=0.15)
+    assert len(regressions) == 1 and "total_wall_s" in regressions[0]
+    # scan entries carry a MEASURED total_s and are left alone
+    scan = {"scan": {"first_s": 5.0, "total_s": 6.0, "rounds": 10,
+                     "chunk_rounds": 10, "speedup": 2.5}}
+    bd.add_total_wall(scan)
+    assert "total_wall_s" not in scan["scan"]
+    # end-to-end: main() exits 1 on the total-wall regression
+    po, pn = str(tmp_path / "o.json"), str(tmp_path / "n.json")
+    json.dump({"rounds": {"x": {"first_s": 6.0, "steady_s": 1.0}}},
+              open(po, "w"))
+    json.dump({"rounds": {"x": {"first_s": 11.9, "steady_s": 1.0}}},
+              open(pn, "w"))
+    assert bd.main([po, pn]) == 1
+
+
 def test_trace_report_renders_and_validates(tmp_path):
     tr = _load_module(os.path.join(REPO, "tools", "trace_report.py"),
                       "trace_report")

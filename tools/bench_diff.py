@@ -13,6 +13,13 @@ gate that keeps committed benchmark artifacts honest PR-over-PR.
 compile_s/first_s leaves are held to a looser 2× threshold: compile
 times are noisy (trace caching, CPU contention) and regressions there
 are tracked, not gating, unless they blow up.
+
+Entries carrying a first/steady split additionally get a SYNTHETIC
+`total_wall_s` leaf — first_s + steady_s × (TOTAL_ROUNDS − 1), the wall
+of a 10-round experiment including its one compile — gated at the
+normal threshold. This keeps compile+steady honest end-to-end: a PR
+cannot buy steady-state speed with an unbounded compile tax (or vice
+versa) without the total flagging it.
 """
 from __future__ import annotations
 
@@ -24,7 +31,26 @@ import sys
 # get the looser multiplier
 TIME_SUFFIXES = ("_s",)
 COMPILE_KEYS = ("compile_s", "first_s")
-SKIP_KEYS = ("steady_rounds", "calls", "schema")
+SKIP_KEYS = ("steady_rounds", "calls", "schema", "rounds", "chunk_rounds",
+             "speedup")
+
+# round count the synthetic total-wall leaf normalizes to
+TOTAL_ROUNDS = 10
+
+
+def add_total_wall(tree):
+    """Recursively augment dicts holding a first/steady split with a
+    synthetic `total_wall_s` = first_s + steady_s × (TOTAL_ROUNDS − 1)
+    leaf, so the compile+steady total is gated as one number. Scan
+    entries already carry a measured total_s and are left alone."""
+    if not isinstance(tree, dict):
+        return
+    first, steady = tree.get("first_s"), tree.get("steady_s")
+    if isinstance(first, (int, float)) and isinstance(steady, (int, float)) \
+            and "total_s" not in tree and "total_wall_s" not in tree:
+        tree["total_wall_s"] = round(first + steady * (TOTAL_ROUNDS - 1), 4)
+    for v in tree.values():
+        add_total_wall(v)
 
 
 def walk(old, new, path=""):
@@ -33,7 +59,10 @@ def walk(old, new, path=""):
     if isinstance(old, dict) and isinstance(new, dict):
         for key in sorted(set(old) | set(new)):
             sub = f"{path}.{key}" if path else str(key)
-            if key in SKIP_KEYS:
+            # skip count/metadata LEAVES only — "rounds" also names the
+            # top-level section dict of BENCH_round.json, which must walk
+            if key in SKIP_KEYS and not isinstance(old.get(key), dict) \
+                    and not isinstance(new.get(key), dict):
                 continue
             if key not in old:
                 yield sub, None, new[key]
@@ -83,6 +112,8 @@ def main(argv=None) -> int:
         old = json.load(fh)
     with open(args.new) as fh:
         new = json.load(fh)
+    add_total_wall(old)
+    add_total_wall(new)
 
     lines, regressions = diff(old, new, threshold=args.threshold)
     print(f"bench diff: {args.old} -> {args.new} "
