@@ -2,7 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify verify-fast test deps bench-comms bench-round \
-	bench-round-smoke bench-async bench-select docs-check trace-report
+	bench-round-smoke bench-async bench-select bench-robust \
+	bench-robust-smoke docs-check trace-report
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -35,6 +36,15 @@ bench-async:
 # fused vs unfused Eq. 7–9 selection → benchmarks/results/BENCH_select.json
 bench-select:
 	$(PY) benchmarks/select_bench.py
+
+# open-world robustness: pfeddst vs gossip baselines under byzantine /
+# score-gaming / churn threats → benchmarks/results/BENCH_robust.json
+bench-robust:
+	$(PY) benchmarks/robust_bench.py
+
+# CI fast tier: control + defended sign-flip attacker at smoke scale
+bench-robust-smoke:
+	$(PY) benchmarks/robust_bench.py --smoke --out /tmp/BENCH_robust_smoke.json
 
 # markdown link check over README + docs/ (also a CI job)
 docs-check:

@@ -1,0 +1,195 @@
+"""Open-world robustness bench — BENCH_robust.json (repro.openworld).
+
+Runs PFedDST against the decentralized baselines (DFedAvgM, DisPFL)
+under matched budgets (same model, data partition, rounds, and seed)
+across a grid of open-world threats:
+
+* clean        — everyone honest, closed population (the control row)
+* sign_flip    — 25% byzantine cast flips its local update sign and
+                 games the Eq. 7/9 scores (spoofed header + claimed
+                 best link cost); no defense
+* sign_flip+tm — same attack, coordinate trimmed-mean aggregation
+* gaussian     — 25% cast replaces its update with N(0, σ²) noise,
+                 median aggregation
+* churn        — honest but open population: 25% of slots dead at
+                 round 0, per-round join/leave schedule
+
+Each run reports the HONEST clients' final personalized accuracy
+(`eval_mask` — adversary accuracy is not a quantity anyone defends)
+plus the attacker-isolation telemetry the selection stages record
+(`adv_isolation` = 1 − adv_edge_frac / adv_base_frac: 1 means the
+honest cast shuns adversaries entirely, 0 means selection is no better
+than the random baseline, < 0 means adversaries are being *preferred*
+— the failure mode score-gaming buys against a similarity-driven
+selector).
+
+    PYTHONPATH=src python benchmarks/robust_bench.py            # full grid
+    PYTHONPATH=src python benchmarks/robust_bench.py --smoke    # CI tier
+
+Output schema (tools/bench_diff.py-compatible: the only wall-time leaf
+is each run's `run_s`):
+
+    {"config": {...}, "sweeps": [
+        {"scenario": "sign_flip", "threat": {...}, "runs": {
+            "pfeddst": {"acc_final": ..., "adv_isolation_mean": ...,
+                        "adv_edge_frac_mean": ..., "run_s": ...}, ...}}
+    ]}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ChurnConfig, FLConfig, ThreatConfig
+from repro.data.synthetic import client_datasets_cifar
+from repro.fl import run_experiment
+from repro.openworld import threat_state
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+STRATEGIES = ("pfeddst", "dfedavgm", "dispfl")
+
+
+def scenarios(*, smoke: bool) -> list:
+    """(name, threat, churn) grid. Smoke keeps the CI-critical pair:
+    control + the sign-flip/score-gaming attacker with a defense up,
+    which exercises every openworld stage (threat, byzantine, robust
+    mix, isolation metrics) in one run."""
+    adv = dict(adversary_fraction=0.25, score_game="both", seed=0)
+    grid = [
+        ("clean", None, None),
+        ("sign_flip",
+         ThreatConfig(attack="sign_flip", attack_scale=1.0, **adv), None),
+        ("sign_flip+tm",
+         ThreatConfig(attack="sign_flip", attack_scale=1.0,
+                      defense="trimmed_mean", trim_fraction=0.25, **adv),
+         None),
+        ("gaussian",
+         ThreatConfig(attack="gaussian", noise_std=0.5, defense="median",
+                      **adv), None),
+        ("churn", None,
+         ChurnConfig(join_rate=0.15, leave_rate=0.1, init_alive=0.75,
+                     seed=0)),
+    ]
+    if smoke:
+        keep = {"clean", "sign_flip+tm"}
+        grid = [g for g in grid if g[0] in keep]
+    return grid
+
+
+def honest_mask(threat, m: int):
+    """(M,) bool honest cast, or None when everyone is honest."""
+    if threat is None:
+        return None
+    ts = threat_state(threat, m)
+    if ts is None:
+        return None
+    return ~np.asarray(ts.adversaries)
+
+
+def extra_mean(hist, name: str):
+    vals = hist.extra.get(name)
+    if not vals:
+        return None
+    return round(float(np.mean(vals)), 4)
+
+
+def run_one(strategy: str, cfg, fl, data, *, rounds: int, eval_every: int,
+            steps_per_epoch: int, seed: int) -> dict:
+    mask = honest_mask(fl.threat, fl.num_clients)
+    t0 = time.perf_counter()
+    hist = run_experiment(
+        strategy, cfg, fl, data, num_rounds=rounds, eval_every=eval_every,
+        steps_per_epoch=steps_per_epoch, seed=seed, verbose=False,
+        chunk_rounds=eval_every, eval_mask=mask,
+    )
+    wall = time.perf_counter() - t0
+    out = {
+        "acc_final": round(float(hist.accuracy[-1]), 4),
+        "acc_best": round(float(max(hist.accuracy)), 4),
+        "run_s": round(wall, 2),
+    }
+    for name in ("adv_isolation", "adv_edge_frac", "adv_base_frac",
+                 "alive_frac"):
+        val = extra_mean(hist, name)
+        if val is not None:
+            out[f"{name}_mean"] = val
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier: 6 clients, 4 rounds, control + "
+                         "defended sign-flip only")
+    ap.add_argument("--out",
+                    default=os.path.join(RESULTS, "BENCH_robust.json"))
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.clients, args.rounds, args.eval_every = 6, 4, 2
+
+    cfg = get_config("resnet18-cifar").reduced()
+    base = dict(
+        num_clients=args.clients, peers_per_round=3, batch_size=16,
+        client_sample_ratio=0.5, probe_size=8,
+    )
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(args.seed), args.clients,
+        classes_per_client=2, samples_per_class=40 if args.smoke else 80,
+        image_size=16,
+    )
+
+    out = {
+        "config": {
+            **base, "rounds": args.rounds, "seed": args.seed,
+            "smoke": bool(args.smoke), "strategies": list(STRATEGIES),
+            "backend": jax.default_backend(),
+        },
+        "sweeps": [],
+    }
+    for name, threat, churn in scenarios(smoke=args.smoke):
+        fl = FLConfig(**base, threat=threat, churn=churn)
+        entry = {"scenario": name, "runs": {}}
+        if threat is not None:
+            entry["threat"] = {
+                "adversary_fraction": threat.adversary_fraction,
+                "attack": threat.attack, "score_game": threat.score_game,
+                "defense": threat.defense,
+            }
+        if churn is not None:
+            entry["churn"] = {
+                "join_rate": churn.join_rate,
+                "leave_rate": churn.leave_rate,
+                "init_alive": churn.init_alive,
+            }
+        for strategy in STRATEGIES:
+            print(f"[{name}] {strategy} ...", flush=True)
+            entry["runs"][strategy] = run_one(
+                strategy, cfg, fl, data, rounds=args.rounds,
+                eval_every=args.eval_every, steps_per_epoch=1,
+                seed=args.seed,
+            )
+            print(f"[{name}] {strategy}: {entry['runs'][strategy]}",
+                  flush=True)
+        out["sweeps"].append(entry)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=1)
+        fh.write("\n")
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,15 @@ reports simulated device wall-clock and effective staleness:
         --strategies pfeddst pfeddst_async \
         --device-profile bimodal --straggler-fraction 0.5 \
         --deadline 1.2 --staleness-alpha 0.5
+
+Open-world robustness (repro.openworld): population churn, byzantine /
+score-gaming adversaries, robust-aggregation defenses — accuracy is
+then reported over the honest clients only:
+
+    PYTHONPATH=src python examples/fl_cifar_sim.py \
+        --strategies pfeddst dfedavgm --adversary-fraction 0.25 \
+        --attack sign_flip --defense trimmed_mean \
+        --churn-join 0.05 --churn-leave 0.05
 """
 import argparse
 
@@ -40,7 +49,13 @@ import jax
 
 from repro.comms.topology import TOPOLOGIES
 from repro.configs import get_config
-from repro.configs.base import CommsConfig, DeviceProfile, FLConfig
+from repro.configs.base import (
+    ChurnConfig,
+    CommsConfig,
+    DeviceProfile,
+    FLConfig,
+    ThreatConfig,
+)
 from repro.data.synthetic import client_datasets_cifar
 from repro.fl import run_experiment
 
@@ -70,6 +85,34 @@ def main():
     ap.add_argument("--staleness-alpha", type=float, default=0.5,
                     help="(1+lag)^(-alpha) staleness discount for "
                          "semi-async aggregation")
+    # --- open world (repro.openworld): adversaries, defenses, churn -------
+    ap.add_argument("--adversary-fraction", type=float, default=0.0,
+                    help="fraction of clients that are adversarial "
+                         "(repro.openworld; 0 = everyone honest)")
+    ap.add_argument("--attack", default="none",
+                    choices=["none", "sign_flip", "gaussian", "scale"],
+                    help="byzantine update corruption the adversaries run")
+    ap.add_argument("--attack-scale", type=float, default=1.0,
+                    help="sign_flip/scale delta multiplier")
+    ap.add_argument("--noise-std", type=float, default=1.0,
+                    help="gaussian attack noise std")
+    ap.add_argument("--score-game", default="none",
+                    choices=["none", "header", "cost", "both"],
+                    help="Eq. 7/9 score-integrity gaming: spoof the "
+                         "published header and/or claim the best link cost")
+    ap.add_argument("--defense", default="none",
+                    choices=["none", "trimmed_mean", "median", "norm_clip"],
+                    help="robust aggregation replacing the mean")
+    ap.add_argument("--trim-fraction", type=float, default=0.2,
+                    help="trimmed_mean: fraction cut from each tail")
+    ap.add_argument("--clip-factor", type=float, default=2.0,
+                    help="norm_clip: clip norms to factor x median")
+    ap.add_argument("--churn-join", type=float, default=0.0,
+                    help="per-round join probability of each dead slot")
+    ap.add_argument("--churn-leave", type=float, default=0.0,
+                    help="per-round leave probability of each alive client")
+    ap.add_argument("--init-alive", type=float, default=1.0,
+                    help="fraction of slots alive at round 0")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rounds", type=int, default=0,
                     help="override the number of federated rounds "
@@ -125,10 +168,24 @@ def main():
             straggler_slowdown=args.straggler_slowdown,
             seed=args.seed,
         )
+    threat = churn = None
+    if (args.adversary_fraction > 0 or args.defense != "none"):
+        threat = ThreatConfig(
+            adversary_fraction=args.adversary_fraction,
+            attack=args.attack, attack_scale=args.attack_scale,
+            noise_std=args.noise_std, score_game=args.score_game,
+            defense=args.defense, trim_fraction=args.trim_fraction,
+            clip_factor=args.clip_factor, seed=args.seed,
+        )
+    if args.churn_join > 0 or args.churn_leave > 0 or args.init_alive < 1:
+        churn = ChurnConfig(join_rate=args.churn_join,
+                            leave_rate=args.churn_leave,
+                            init_alive=args.init_alive, seed=args.seed)
     hetero_kw = dict(
         device_profile=profile,
         deadline_s=args.deadline if args.deadline > 0 else float("inf"),
         staleness_alpha=args.staleness_alpha,
+        threat=threat, churn=churn,
     )
 
     if args.paper_scale:
@@ -151,6 +208,18 @@ def main():
         classes_per_client=fl.classes_per_client,
         samples_per_class=spc, image_size=img,
     )
+    # under attack, report the honest clients' accuracy (what a defense
+    # is supposed to protect); full-M mean otherwise
+    eval_mask = None
+    if threat is not None:
+        from repro.openworld import threat_state
+
+        ts = threat_state(threat, fl.num_clients)
+        if ts is not None:
+            import numpy as np
+
+            eval_mask = ~np.asarray(ts.adversaries)
+
     final = {}
     for s in args.strategies:
         trace = args.trace_out
@@ -162,6 +231,7 @@ def main():
             steps_per_epoch=spe, seed=args.seed,
             trace=trace, trace_stages=args.trace_stages,
             trace_edges=args.trace_edges, chunk_rounds=chunk_rounds,
+            eval_mask=eval_mask,
         )
         if trace:
             print(f"  trace → {trace}")

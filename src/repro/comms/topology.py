@@ -119,6 +119,28 @@ def dynamic_topk(
     return adj & ~eye
 
 
+def topology_degree_bound(cfg, m: int):
+    """Max row degree of a CommsConfig's STATIC adjacency, or None when
+    no useful static bound exists (no comms model, dynamic topology).
+
+    Network events only REMOVE edges (repro.comms.events.apply_events:
+    link drops, offline rows/columns, stale-column drops all AND into
+    the adjacency), so the static graph's max degree bounds every
+    round's candidate row degree — the bound the packed gossip-mix
+    kernel needs to engage for undirected `mask | mask.T` plans
+    (kernels.gossip_mix.gossip_degree_bound). Ring/torus/small-world
+    graphs have small constant degree; ER's bound is the sampled graph's
+    actual max (static, seeded). "full" returns m − 1 — valid but
+    useless, and the 2·D ≤ M packing condition correctly rejects it.
+    """
+    if cfg is None or m <= 0:
+        return None
+    adj = make_topology(cfg.topology, m, cfg=cfg, seed=cfg.graph_seed)
+    if adj is None:          # dynamic: resampled per round, no static bound
+        return None
+    return int(adj.sum(axis=1).max(initial=0))
+
+
 def make_topology(name: str, m: int, *, cfg=None, seed: int = 0) -> np.ndarray:
     """Static adjacency by name. `dynamic` has no static graph (→ None);
     callers resample it per round via `dynamic_topk`."""

@@ -271,6 +271,87 @@ class CommsConfig:
 
 
 # ---------------------------------------------------------------------------
+# Open-world threat + lifecycle config (repro.openworld)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ThreatConfig:
+    """Adversary model for open-world runs (src/repro/openworld).
+
+    A fixed `adversary_fraction` of the population is adversarial
+    (deterministic in `seed`, so every driver — simulator, benches,
+    SelectionGraph annotation — sees the same set). Adversaries can
+    corrupt their local update (byzantine `attack`), game the Eq. 9
+    peer score (`score_game`), or both; `defense` swaps the library
+    aggregation for a robust reducer. With every knob at its default
+    (`adversary_fraction=0`, attacks/defense "none") the composed spec
+    is returned UNCHANGED — fixed-seed runs stay bitwise identical to
+    the closed honest population (tests/test_openworld.py).
+    """
+    adversary_fraction: float = 0.0
+    # --- byzantine update corruption (applied after local training) --------
+    attack: str = "none"        # none | sign_flip | gaussian | scale
+    attack_scale: float = 1.0   # sign_flip / scale: delta multiplier
+    noise_std: float = 1.0      # gaussian: per-param noise stddev
+    # --- Eq. 9 score gaming -------------------------------------------------
+    # "header": publish an anti-aligned header so the Eq. 7 similarity
+    #   term (subtracted in Eq. 9) makes the adversary maximally
+    #   attractive; "cost": under-report the Eq. 9 link cost (claim the
+    #   best link in the fleet × cost_gain); "both": both.
+    score_game: str = "none"    # none | header | cost | both
+    cost_gain: float = 1.0      # cost gaming: claimed c = best link × gain
+    # --- robust aggregation (repro.openworld.defense) -----------------------
+    defense: str = "none"       # none | trimmed_mean | median | norm_clip
+    trim_fraction: float = 0.2  # trimmed_mean: fraction cut from each tail
+    clip_factor: float = 2.0    # norm_clip: allowed multiple of the median
+    seed: int = 0               # adversary-set sampling seed
+
+    def __post_init__(self):
+        if self.attack not in ("none", "sign_flip", "gaussian", "scale"):
+            raise ValueError(f"unknown attack {self.attack!r}")
+        if self.score_game not in ("none", "header", "cost", "both"):
+            raise ValueError(f"unknown score_game {self.score_game!r}")
+        if self.defense not in ("none", "trimmed_mean", "median",
+                                "norm_clip"):
+            raise ValueError(f"unknown defense {self.defense!r}")
+
+    @property
+    def inert(self) -> bool:
+        """True when no knob changes the round — the composition layer
+        then leaves the spec untouched (bitwise-parity guarantee)."""
+        return (self.adversary_fraction <= 0.0
+                or (self.attack == "none" and self.score_game == "none")) \
+            and self.defense == "none"
+
+
+@dataclass(frozen=True)
+class ChurnConfig:
+    """Client join/leave churn on the fixed-capacity (M_max,) population
+    (src/repro/openworld/lifecycle.py).
+
+    Each round, every alive client leaves w.p. `leave_rate` and every
+    dead slot joins w.p. `join_rate`; a round that would leave nobody
+    alive keeps the previous alive mask instead (the zero-alive guard —
+    same failure family as the engine's `keep_if_none_active`).
+    Newcomers bootstrap from the alive peers' snapshots — the versioned
+    PeerStore's SERVED versions on versioned strategies, live params
+    otherwise — instead of fresh init; their optimizer state and
+    PFedDST context rows (loss l, recency t) reset. With both rates 0
+    and `init_alive=1.0` every operation is a bitwise identity and the
+    wrapped run reproduces the closed-population trace exactly.
+    """
+    join_rate: float = 0.0      # per-round P(dead slot joins)
+    leave_rate: float = 0.0     # per-round P(alive client leaves)
+    init_alive: float = 1.0     # fraction of slots alive at round 0 (≥1 slot)
+    seed: int = 0               # initial-alive sampling seed
+
+    @property
+    def inert(self) -> bool:
+        return (self.join_rate <= 0.0 and self.leave_rate <= 0.0
+                and self.init_alive >= 1.0)
+
+
+# ---------------------------------------------------------------------------
 # Federated-learning run config (the paper's Section III setup)
 # ---------------------------------------------------------------------------
 
@@ -319,3 +400,9 @@ class FLConfig:
     staleness_alpha: float = 0.5
     # ring-buffer depth V of the versioned peer store (pfeddst_async)
     version_depth: int = 4
+    # --- open-world population (repro.openworld) ---------------------------
+    # None → closed honest population (the paper's world). Setting either
+    # wraps the strategy spec via openworld.make_open_spec; inert configs
+    # (fraction 0 / rates 0) leave the spec bitwise untouched.
+    threat: Optional[ThreatConfig] = None
+    churn: Optional[ChurnConfig] = None

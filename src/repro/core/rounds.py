@@ -111,6 +111,12 @@ def make_pfeddst_stages(
         )
         from repro.core.aggregation import staleness_weights
 
+    # openworld defense: robust extractor aggregation over the selected
+    # peer set (lazy import, like hetero — the honest path never loads it)
+    defense = fl.threat.defense if fl.threat is not None else "none"
+    if defense != "none":
+        from repro.openworld.defense import robust_row_aggregate
+
     def score_select(state: PopulationState, ctx: RoundContext):
         # ---- 1. scoring — Eq. 6 restricted to the sampled rows ------------
         m = ctx.m
@@ -146,6 +152,12 @@ def make_pfeddst_stages(
         else:
             header_view = state.header
         cost = fl.comm_cost if ctx.cost is None else ctx.cost
+        flat = flatten_headers(header_view)
+        if ctx.threat is not None and ctx.threat.score_game != "none":
+            # score-integrity adversaries spoof the header/cost view the
+            # scorer sees — repro.openworld.attacks.ThreatState (both the
+            # fused and dense branches below read the spoofed `flat`/`cost`)
+            flat, cost = ctx.threat.game_scores(flat, cost, m)
         # degenerate populations (M < 2, k < 1) keep the dense path: its
         # select_peers returns the explicit empty mask for k = 0
         fused = (use_score_kernel and m > 1 and fl.peers_per_round > 0
@@ -153,7 +165,7 @@ def make_pfeddst_stages(
         if fused:
             # ---- 1b/2. fused Eq. 7–9 + top-k (streaming pipeline) --------
             vals, idx, sd_stats = score_topk(
-                flatten_headers(header_view), state.last_selected, s_l,
+                flat, state.last_selected, s_l,
                 state.round, alpha=fl.alpha, lam=fl.recency_lambda,
                 comm_cost=cost, k=min(fl.peers_per_round, m - 1),
                 candidate_mask=ctx.cand,
@@ -164,7 +176,7 @@ def make_pfeddst_stages(
                            sd_stats=sd_stats)
         else:
             s_d = header_distance_matrix(
-                flatten_headers(header_view), use_kernel=use_score_kernel
+                flat, use_kernel=use_score_kernel
             )                                                    # Eq. 7
             s_p = recency_scores(
                 state.last_selected, state.round, fl.recency_lambda
@@ -204,7 +216,7 @@ def make_pfeddst_stages(
         n_sel = jnp.maximum(jnp.sum(mask), 1).astype(jnp.float32)
         if fused:
             comp = selected_components(
-                flatten_headers(header_view), state.last_selected, s_l,
+                flat, state.last_selected, s_l,
                 state.round, ctx.aux["topk_idx"], alpha=fl.alpha,
                 lam=fl.recency_lambda, comm_cost=cost,
             )
@@ -253,7 +265,17 @@ def make_pfeddst_stages(
         # ---- 3. aggregate extractors --------------------------------------
         src_e = ctx.aux["served"]["e"] if hetero is not None \
             else state.extractor
-        agg_e = aggregate_extractors(src_e, ctx.plan.weights)
+        if defense != "none":
+            # robust aggregation over the selected peer set; norm_clip
+            # keeps the plan weights (incl. staleness discounts), the
+            # order-statistic defenses aggregate the set uniformly
+            agg_e = robust_row_aggregate(
+                src_e, ctx.plan.edges, ctx.plan.weights, ctx.m,
+                defense=defense, trim=fl.threat.trim_fraction,
+                clip=fl.threat.clip_factor,
+            )
+        else:
+            agg_e = aggregate_extractors(src_e, ctx.plan.weights)
         ctx.aux["agg_e"] = where_tree(ctx.active, agg_e, state.extractor)
         return state
 

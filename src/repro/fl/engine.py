@@ -217,6 +217,15 @@ class RoundContext:
 
     Fields stages fill in:
 
+    alive        (M,) bool population-membership mask (repro.openworld
+                 lifecycle; None on closed populations). The churn stage
+                 sets it and intersects `active`/`cand` with it; the
+                 openworld metrics stage and custom stages read it.
+    threat       repro.openworld.attacks.ThreatState (None on honest
+                 populations). Set by the threat stage; the PFedDST
+                 score_select stage calls its `game_scores` hook so
+                 score-gaming adversaries can spoof the Eq. 7 header
+                 view / Eq. 9 cost column the scorer sees.
     plan         the ExchangePlan (set by the plan stage — required)
     store        the repro.fl.hetero PeerStore a versioned strategy
                  serves peers from this round (None otherwise). Exposed
@@ -239,6 +248,8 @@ class RoundContext:
     cand: Any = None                        # (M,M) reachable-peer mask
     cost: Any = None                        # (M,M) Eq. 9 c matrix (fabric)
     stale: Any = None                       # (M,) staleness lag
+    alive: Any = None                       # (M,) bool membership (openworld)
+    threat: Any = None                      # openworld ThreatState
     plan: Optional[ExchangePlan] = None
     store: Any = None                       # versioned PeerStore (hetero)
     devices: Any = None                     # DeviceVectors (hetero)
@@ -475,12 +486,16 @@ def stage_plan_star():
     return named_stage(stage, "plan_star")
 
 
-def stage_plan_gossip(fl, *, directed: bool, stream: str = "nbr"):
+def stage_plan_gossip(fl, *, directed: bool, stream: str = "nbr",
+                      topo_degree: int | None = None):
     """Random k-neighbor gossip plan restricted to reachable peers; only
     active clients pull.
 
-    When the plan's static degree bound is well below M (directed
-    plans: k+1; undirected symmetrization has no useful bound) and the
+    When the plan's static degree bound is well below M — directed
+    plans: k+1; undirected `mask | mask.T` plans: the communication
+    topology's max degree + 1 when a static graph bounds it
+    (`topo_degree`, from comms.topology.topology_degree_bound; without
+    one undirected symmetrization has no useful bound) — and the
     platform's sparse mix wins (ops.resolve_mix_impl), the weights are
     additionally packed into neighbor lists so stage_mix can run the
     O(M·D·F) sparse kernel instead of the dense (M, M) einsum.
@@ -493,8 +508,11 @@ def stage_plan_gossip(fl, *, directed: bool, stream: str = "nbr"):
         nbr = nbr & ctx.active[:, None]
         weights = selection_to_weights(nbr, include_self=True)
         nbr_idx = nbr_w = None
+        # the topology bound holds only when the plan was actually cut
+        # to the fabric's candidates (cand ⊆ static adjacency)
+        topo = topo_degree if ctx.cand is not None else None
         d_max = gossip_degree_bound(fl.peers_per_round, ctx.m,
-                                    directed=directed)
+                                    directed=directed, topo_degree=topo)
         if kernel_ops.resolve_mix_impl(ctx.m) != "dense" \
                 and 2 * d_max <= ctx.m:
             nbr_idx, nbr_w = weights_to_neighbors(weights, d_max)
@@ -546,19 +564,27 @@ def stage_train_full(cfg, fl, opt, n_steps: int, *, stream: str = "train"):
     return named_stage(stage, "local_train")
 
 
-def stage_star_average(cfg, *, share: str):
+def stage_star_average(cfg, *, share: str, reducer=None):
     """Server step: average the shared partition ("model" or "extractor")
     over the plan's active clients, broadcast it back, keep the old
-    population when nobody participated."""
+    population when nobody participated.
+
+    reducer: optional drop-in replacement for `mean_over_active` with
+    the same `(tree, active) -> broadcast tree` contract — the hook the
+    robust aggregators in repro.openworld.defense (coordinate
+    trimmed-mean, median, norm-clipped mean) plug into. None keeps the
+    plain mean bit-for-bit.
+    """
+    reduce = mean_over_active if reducer is None else reducer
 
     def stage(state, ctx):
         params, active = state["params"], ctx.plan.active
         if share == "model":
-            new = mean_over_active(params, active)
+            new = reduce(params, active)
         else:
             shared, headers = split_params(cfg, params)
             new = jax.vmap(merge_params)(
-                mean_over_active(shared, active), headers
+                reduce(shared, active), headers
             )
         return {**state, "params": keep_if_none_active(active, new, params)}
 
@@ -597,20 +623,28 @@ def mix_tree(tree, plan, m: int):
     return aggregate_extractors(tree, plan.weights)
 
 
-def stage_mix(cfg, *, share: str):
+def stage_mix(cfg, *, share: str, mixer=None):
     """Gossip step: row-stochastic mixing by the plan's weights over the
     shared partition; inactive clients keep their model. Mixing runs
     through `mix_tree` (sparse neighbor kernel or dense einsum per the
-    plan)."""
+    plan).
+
+    mixer: optional drop-in replacement for `mix_tree` with the same
+    `(tree, plan, m) -> tree` contract — the hook the robust per-row
+    aggregators in repro.openworld.defense plug into (coordinate
+    trimmed-mean/median over each row's peer set, norm-clipped mixing).
+    None keeps the plain mix bit-for-bit.
+    """
+    mix = mix_tree if mixer is None else mixer
 
     def stage(state, ctx):
         params, active = state["params"], ctx.plan.active
         if share == "model":
-            mixed = mix_tree(params, ctx.plan, ctx.m)
+            mixed = mix(params, ctx.plan, ctx.m)
             mixed = where_tree(active, mixed, params)
         else:
             e, h = split_params(cfg, params)
-            mixed_e = mix_tree(e, ctx.plan, ctx.m)
+            mixed_e = mix(e, ctx.plan, ctx.m)
             mixed_e = where_tree(active, mixed_e, e)
             mixed = jax.vmap(merge_params)(mixed_e, h)
         return {**state, "params": mixed}

@@ -226,8 +226,15 @@ def run_experiment(
     trace_stages: bool = False,
     trace_edges: bool = False,
     chunk_rounds: int = 1,
+    eval_mask=None,
 ) -> History:
     """data: dict(train_x, train_y, test_x, test_y), leading-M stacked.
+
+    eval_mask: optional (M,) bool — restrict the reported personalized
+    accuracy to these clients. The open-world benchmarks pass the honest
+    cast (adversary accuracy is not a quantity anyone defends, and churn
+    runs only ever field a subset of slots); None keeps the full-M mean
+    bitwise identical to the closed-world metric.
 
     trace: path for a schema-versioned JSONL round trace (repro.obs.trace)
     — one record per round with wall/comm/device blocks, every recorded
@@ -300,7 +307,13 @@ def run_experiment(
             num_rounds=num_rounds, seed=seed, family=cfg.family,
             eval_every=eval_every,
         ))
-        graph = SelectionGraph(fl.num_clients)
+        adv = None
+        if fl.threat is not None:
+            from repro.openworld import threat_state
+
+            ts = threat_state(fl.threat, fl.num_clients)
+            adv = np.asarray(ts.adversaries) if ts is not None else None
+        graph = SelectionGraph(fl.num_clients, adversaries=adv)
         if trace_stages and strat.spec is not None:
             tracer.write(stage_profile_record(_profile_stages(
                 strat, fl, train_data, jax.random.fold_in(key, 1 << 20),
@@ -370,9 +383,12 @@ def run_experiment(
                     cfg, fl, params, data["train_x"], data["train_y"],
                     jax.random.fold_in(k_ft, r),
                 )
-            acc, _ = evaluate_population(
+            acc, accs = evaluate_population(
                 cfg, params, data["test_x"], data["test_y"]
             )
+            if eval_mask is not None:
+                kept = np.asarray(accs)[np.asarray(eval_mask, bool)]
+                acc = float(kept.mean()) if kept.size else float("nan")
             loss_keys = [k for k in metrics if "loss" in k]
             tl = float(np.mean([float(metrics[k]) for k in loss_keys])) \
                 if loss_keys else float("nan")

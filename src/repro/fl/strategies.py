@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comms.fabric import CommsFabric, make_fabric
+from repro.comms.topology import topology_degree_bound
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.client_state import init_population
 from repro.core.partial_freeze import make_phase_steps
@@ -76,6 +77,7 @@ from repro.fl.engine import (
 from repro.kernels import ops
 from repro.models import model as model_mod
 from repro.models.split import merge_params, split_params
+from repro.openworld import make_open_spec, robust_mixer, star_reducer
 from repro.optim.sgd import sgd
 
 # back-compat alias (pre-engine name; tests/external code import it)
@@ -210,7 +212,9 @@ def _central_spec(cfg, fl, steps_per_epoch, kind: str) -> StrategySpec:
         name=kind,
         init=init,
         stages=(stage_plan_star(), train,
-                stage_star_average(cfg, share=share), stage_bump_round()),
+                stage_star_average(cfg, share=share,
+                                   reducer=star_reducer(fl.threat)),
+                stage_bump_round()),
         params_for_eval=lambda s: s["params"],
         key_streams=("act", "train"),
         comm_pattern="star",
@@ -294,10 +298,18 @@ def _gossip_spec(cfg, fl, steps_per_epoch, kind: str) -> StrategySpec:
             state["mask"] = jax.tree_util.tree_unflatten(treedef, masks)
         return state
 
-    plan = stage_plan_gossip(fl, directed=(kind == "dfedpgp"))
+    # a static comms graph (ring/torus/...) bounds every undirected
+    # plan's row degree, letting stage_plan_gossip pack the weights for
+    # the sparse mix kernel instead of falling back dense (satellite of
+    # the gossip-mix scan work; None without a fabric or under dynamic)
+    plan = stage_plan_gossip(
+        fl, directed=(kind == "dfedpgp"),
+        topo_degree=topology_degree_bound(fl.comms, fl.num_clients),
+    )
     train = stage_train_full(cfg, fl, opt, n_steps)
     share = "model" if kind == "dfedavgm" else "extractor"
-    stages = (plan, train, stage_mix(cfg, share=share))
+    stages = (plan, train,
+              stage_mix(cfg, share=share, mixer=robust_mixer(fl.threat)))
     if kind == "dispfl":
         stages = (stage_apply_masks(),) + stages + (stage_evolve_masks(fl),)
     return StrategySpec(
@@ -376,19 +388,28 @@ STRATEGIES = (
 
 def make_spec(name: str, cfg: ModelConfig, fl: FLConfig,
               steps_per_epoch: int = 2) -> StrategySpec:
-    """The declarative spec for a registered strategy (engine input)."""
+    """The declarative spec for a registered strategy (engine input).
+
+    With fl.threat / fl.churn configured, the spec is wrapped by
+    repro.openworld.make_open_spec (population churn, byzantine /
+    score-gaming adversaries, isolation telemetry); inert or absent
+    configs return the unwrapped spec object itself — the bitwise
+    golden-trace guarantee.
+    """
     if name in ("fedavg", "fedper", "fedbabu"):
-        return _central_spec(cfg, fl, steps_per_epoch, name)
-    if name in ("dfedavgm", "dfedpgp", "dispfl"):
-        return _gossip_spec(cfg, fl, steps_per_epoch, name)
-    if name == "pfeddst":
-        return _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=False)
-    if name == "pfeddst_random":
-        return _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=True)
-    if name == "pfeddst_async":
-        return _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=False,
+        spec = _central_spec(cfg, fl, steps_per_epoch, name)
+    elif name in ("dfedavgm", "dfedpgp", "dispfl"):
+        spec = _gossip_spec(cfg, fl, steps_per_epoch, name)
+    elif name == "pfeddst":
+        spec = _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=False)
+    elif name == "pfeddst_random":
+        spec = _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=True)
+    elif name == "pfeddst_async":
+        spec = _pfeddst_spec(cfg, fl, steps_per_epoch, random_select=False,
                              semi_async=True)
-    raise KeyError(f"unknown strategy {name!r}; available: {STRATEGIES}")
+    else:
+        raise KeyError(f"unknown strategy {name!r}; available: {STRATEGIES}")
+    return make_open_spec(spec, fl)
 
 
 def make_strategy(name: str, cfg: ModelConfig, fl: FLConfig,

@@ -57,16 +57,28 @@ def weights_to_neighbors(weights, d_max: int):
     return idx, w
 
 
-def gossip_degree_bound(k: int, m: int, *, directed: bool) -> int:
+def gossip_degree_bound(k: int, m: int, *, directed: bool,
+                        topo_degree: int | None = None) -> int:
     """Static row-degree bound for a k-peer gossip plan incl. self.
 
     Directed: each row pulls exactly its own k selections → k + 1.
     Undirected: `mask | mask.T` adds every peer that selected ME, and
     a row's in-degree is only bounded by M-1 under random selection —
-    there is no useful static bound, so the packed-list layout degrades
-    to D = M (callers should keep the dense mix for undirected plans).
+    UNLESS the communication topology itself bounds it: the plan is
+    always ANDed with the candidate mask, a subset of the static
+    adjacency (events only remove edges), so with a static graph of max
+    degree `topo_degree` (comms.topology.topology_degree_bound) every
+    row touches ≤ topo_degree peers + itself. That is what lets
+    ring/torus dfedavgm/dispfl plans route through the packed sparse
+    kernel instead of falling back dense. Without a topology bound the
+    undirected layout degrades to D = M (callers keep the dense mix).
     """
-    d = k + 1 if directed else m
+    if directed:
+        d = k + 1 if topo_degree is None else min(k, topo_degree) + 1
+    elif topo_degree is not None:
+        d = topo_degree + 1
+    else:
+        d = m
     return max(1, min(d, m))
 
 

@@ -121,5 +121,18 @@ for _name, _kind, _stage, _doc in (
      "max staleness of versions actually pulled"),
     ("serve_age_mean", SCALAR, "score_select",
      "mean snapshot age over served selected peers"),
+    # open-world lifecycle + threat telemetry (repro.openworld)
+    ("alive_frac", SCALAR, "ow_churn",
+     "fraction of population slots alive after this round's churn"),
+    ("joined_n", SCALAR, "ow_churn", "clients that joined this round"),
+    ("left_n", SCALAR, "ow_churn", "clients that left this round"),
+    ("adv_active_n", SCALAR, "ow_threat",
+     "adversaries in this round's active set"),
+    ("adv_edge_frac", SCALAR, "ow_metrics",
+     "fraction of honest clients' selected edges hitting adversaries"),
+    ("adv_base_frac", SCALAR, "ow_metrics",
+     "honest-random baseline adversary fraction of the candidate set"),
+    ("adv_isolation", SCALAR, "ow_metrics",
+     "1 - adv_edge_frac/adv_base_frac: 1 shunned, 0 random, <0 preferred"),
 ):
     DEFAULT_REGISTRY.register(_name, kind=_kind, stage=_stage, doc=_doc)

@@ -101,14 +101,23 @@ class SelectionGraph:
     observe(mask_or_edges) per round → frequency counts, per-round edge
     lists, and round-over-round churn (1 − Jaccard of consecutive edge
     sets; 0.0 recorded for the first observed round).
+
+    adversaries: optional (M,) bool cast annotation (repro.openworld) —
+    exported in the record so the frequency view can be split into
+    honest→honest vs honest→adversary edges offline; it never affects
+    the counts themselves.
     """
 
-    def __init__(self, m: int):
+    def __init__(self, m: int, adversaries=None):
         self.m = int(m)
         self.counts = np.zeros((m, m), np.int64)
         self.rounds = 0
         self.churn: list = []
         self._prev: set | None = None
+        self.adversaries = (
+            None if adversaries is None
+            else np.asarray(adversaries, bool).reshape(m)
+        )
 
     @staticmethod
     def _to_edges(mask_or_edges) -> set:
@@ -147,12 +156,19 @@ class SelectionGraph:
         return self.counts / max(self.rounds, 1)
 
     def to_record(self) -> dict:
-        """The trace's `selection_graph` record (obs/trace schema)."""
-        return {
+        """The trace's `selection_graph` record (obs/trace schema; the
+        optional `adversaries` key is additive — the validator checks
+        required keys only)."""
+        rec = {
             "type": "selection_graph", "num_clients": self.m,
             "rounds": self.rounds, "edges": self.edge_list(),
             "churn": [round(float(c), 6) for c in self.churn],
         }
+        if self.adversaries is not None:
+            rec["adversaries"] = [
+                int(i) for i in np.flatnonzero(self.adversaries)
+            ]
+        return rec
 
     def export_json(self, path: str):
         with open(path, "w") as fh:

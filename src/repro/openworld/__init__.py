@@ -1,0 +1,47 @@
+"""repro.openworld — population churn, byzantine peers, and
+score-integrity adversaries composable onto any StrategySpec.
+
+Entry point: `make_open_spec(spec, fl)` (see compose). Submodules:
+lifecycle (join/leave churn + newcomer bootstrap), attacks (byzantine
+update corruption + Eq. 7/9 score gaming), defense (robust aggregation
+reducers/mixers for the engine hooks), metrics (attacker isolation).
+Configured through `configs.base.ThreatConfig` / `ChurnConfig` on
+FLConfig; docs/openworld.md documents the threat model.
+"""
+from repro.openworld.attacks import (
+    ATTACKS,
+    SCORE_GAMES,
+    ThreatState,
+    adversary_mask,
+)
+from repro.openworld.compose import make_open_spec, threat_state
+from repro.openworld.defense import (
+    DEFENSES,
+    median_over_active,
+    norm_clip_mean_over_active,
+    robust_mixer,
+    robust_row_aggregate,
+    star_reducer,
+    trimmed_mean_over_active,
+)
+from repro.openworld.lifecycle import init_alive, stage_churn
+from repro.openworld.metrics import isolation_metrics
+
+__all__ = [
+    "ATTACKS",
+    "DEFENSES",
+    "SCORE_GAMES",
+    "ThreatState",
+    "adversary_mask",
+    "init_alive",
+    "isolation_metrics",
+    "make_open_spec",
+    "median_over_active",
+    "norm_clip_mean_over_active",
+    "robust_mixer",
+    "robust_row_aggregate",
+    "stage_churn",
+    "star_reducer",
+    "threat_state",
+    "trimmed_mean_over_active",
+]

@@ -1,0 +1,193 @@
+"""Adversary models — byzantine updates and score-integrity gaming.
+
+Two jit-safe attack families, both keyed to a static per-client
+adversary mask (`adversary_mask`, sampled once from ThreatConfig.seed so
+the cast is a reproducible, jit-capturable constant):
+
+* BYZANTINE UPDATE CORRUPTION — an engine stage pair inserted around a
+  spec's training stages by `compose.make_open_spec`: `stage_snapshot`
+  records the round-start parameters into `ctx.aux["ow_pre"]`, and
+  `stage_byzantine` (placed directly AFTER the last train-like stage,
+  so corruption hits what peers aggregate, not what the adversary
+  trains on next) replaces each active adversary's honest update
+  `delta = post − pre` with
+
+      sign_flip   pre − scale·delta        (gradient ascent proxy)
+      scale       pre + scale·delta        (model-boost / scaled update)
+      gaussian    post + noise_std·N(0,I)  (random corruption)
+
+  The corrupted parameters persist in the adversary's OWN row too — the
+  standard FL-sim shortcut (a real attacker keeps honest weights
+  privately; simulating that would fork per-client state for no
+  measurable difference in what honest clients receive).
+
+* SCORE GAMING — `ThreatState.game_scores`, a hook the PFedDST scorer
+  (core.rounds.score_select) applies to the header view and cost matrix
+  BEFORE Eq. 7–9 run. Eq. 9 scores peers by
+  `s_p · (α·s_l − s_d + c)` where s_d is header cosine SIMILARITY
+  (dissimilar peers rank higher — they hold complementary information)
+  and `c = scale·t_min/t_ij` rewards fast links. A score-gaming
+  adversary therefore makes itself maximally ATTRACTIVE by
+
+      header  publishing the anti-aligned header −mean(honest headers)
+              (cosine normalization downstream makes the magnitude
+              irrelevant — direction is everything)
+      cost    claiming the best link cost in the system × cost_gain
+              (its COLUMN of c, i.e. what everyone believes pulling
+              from it costs)
+
+  ISSUE wording says "inflate header similarity"; under the Eq. 9 sign
+  convention similarity is SUBTRACTED, so the attractive spoof is
+  anti-alignment — that is what's implemented (see ThreatConfig).
+
+Randomness: the gaussian attack folds a constant into the spec's
+existing "act" stream (`fold_in(ctx.keys["act"], _BYZ_SALT)`) — no new
+key stream, so a spec's key layout (and with it seed-for-seed parity of
+every honest run) is untouched.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.engine import named_stage, where_tree
+
+ATTACKS = ("none", "sign_flip", "gaussian", "scale")
+SCORE_GAMES = ("none", "header", "cost", "both")
+
+# stages whose output is "a finished local update" — the byzantine
+# corruption point is after the LAST of these in the wrapped spec
+TRAIN_STAGE_NAMES = ("local_train", "local_train_babu", "phase_h")
+
+_BYZ_SALT = 0x627A                       # 'bz' — gaussian noise sub-draw
+
+
+def adversary_mask(m: int, fraction: float, seed: int = 0) -> np.ndarray:
+    """(M,) bool — round(fraction·M) adversaries at uniform positions.
+
+    Host-side numpy draw from a dedicated seed: the cast is static for a
+    run (adversaries don't migrate), reproducible, and enters the jitted
+    round as a baked constant rather than a traced input.
+    """
+    k = int(round(m * max(0.0, min(1.0, fraction))))
+    mask = np.zeros((m,), dtype=bool)
+    if k > 0:
+        rng = np.random.default_rng(seed)
+        mask[rng.permutation(m)[:k]] = True
+    return mask
+
+
+@dataclass(frozen=True)
+class ThreatState:
+    """The per-run threat cast: who is adversarial and how they lie.
+
+    Built once per strategy by `compose.make_open_spec` and published
+    into `ctx.threat` by `stage_threat`; the PFedDST scorer calls
+    `game_scores` when present. `adversaries` is the (M,) bool device
+    constant from `adversary_mask`.
+    """
+    adversaries: Any                     # (M,) bool
+    attack: str = "none"
+    attack_scale: float = 1.0
+    noise_std: float = 1.0
+    score_game: str = "none"
+    cost_gain: float = 1.0
+
+    def game_scores(self, flat, cost, m: int):
+        """Spoof the scorer's inputs: → (flat', cost').
+
+        flat  (M, D) flattened header view (pre-normalization — both the
+              fused score_topk path and the dense header_distance_matrix
+              path normalize downstream, so spoofing rows here covers
+              both bitwise-identically).
+        cost  scalar or (M, M) Eq. 9 `c`. Untouched (same object, scalar
+              stays scalar) unless cost gaming is on, in which case it
+              is materialized to (M, M) with adversary COLUMNS claiming
+              `max(c)·cost_gain`.
+        """
+        adv = self.adversaries
+        if self.score_game in ("header", "both"):
+            honest = ~adv
+            n_h = jnp.maximum(jnp.sum(honest), 1)
+            mean_h = jnp.sum(
+                jnp.where(honest[:, None], flat.astype(jnp.float32), 0.0),
+                axis=0,
+            ) / n_h
+            spoof = (-mean_h).astype(flat.dtype)
+            flat = jnp.where(adv[:, None], spoof[None], flat)
+        if self.score_game in ("cost", "both"):
+            cmat = jnp.broadcast_to(
+                jnp.asarray(cost, jnp.float32), (m, m)
+            )
+            best = jnp.max(cmat)
+            cost = jnp.where(adv[None, :], best * self.cost_gain, cmat)
+        return flat, cost
+
+
+def stage_threat(tstate: ThreatState):
+    """Publish the threat cast into the round context (first wrapped
+    stage, before the inner spec runs) and record how many adversaries
+    made this round's active set."""
+
+    def stage(state, ctx):
+        ctx.threat = tstate
+        ctx.record(
+            "adv_active_n",
+            jnp.sum(tstate.adversaries & ctx.active).astype(jnp.int32),
+        )
+        return state
+
+    return named_stage(stage, "ow_threat")
+
+
+def stage_snapshot(get_params):
+    """Record the round-start parameter view into `ctx.aux["ow_pre"]` —
+    the `pre` of the byzantine delta. Runs before the inner stages."""
+
+    def stage(state, ctx):
+        ctx.aux["ow_pre"] = get_params(state)
+        return state
+
+    return named_stage(stage, "ow_snapshot")
+
+
+def stage_byzantine(tstate: ThreatState, get_params, set_params):
+    """Corrupt each ACTIVE adversary's finished local update (see module
+    docstring for the three attack transforms). Inserted directly after
+    the wrapped spec's last train-like stage; honest rows (and inactive
+    adversaries) pass through bitwise."""
+    attack = tstate.attack
+    if attack not in ATTACKS or attack == "none":
+        raise ValueError(f"stage_byzantine needs an attack in "
+                         f"{ATTACKS[1:]}, got {attack!r}")
+
+    def stage(state, ctx):
+        pre = ctx.aux.pop("ow_pre")
+        post = get_params(state)
+        if attack == "gaussian":
+            key = jax.random.fold_in(ctx.keys["act"], _BYZ_SALT)
+            leaves, treedef = jax.tree_util.tree_flatten(post)
+            keys = jax.random.split(key, len(leaves))
+            corrupted = jax.tree_util.tree_unflatten(treedef, [
+                leaf + (tstate.noise_std
+                        * jax.random.normal(k, leaf.shape, jnp.float32)
+                        ).astype(leaf.dtype)
+                for leaf, k in zip(leaves, keys)
+            ])
+        else:
+            sgn = -tstate.attack_scale if attack == "sign_flip" \
+                else tstate.attack_scale
+
+            def corrupt(p, q):
+                delta = q.astype(jnp.float32) - p.astype(jnp.float32)
+                return (p.astype(jnp.float32) + sgn * delta).astype(p.dtype)
+
+            corrupted = jax.tree_util.tree_map(corrupt, pre, post)
+        mask = tstate.adversaries & ctx.active
+        return set_params(state, where_tree(mask, corrupted, post))
+
+    return named_stage(stage, "ow_byzantine")

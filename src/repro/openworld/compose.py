@@ -1,0 +1,133 @@
+"""make_open_spec — wrap any StrategySpec with churn + adversaries.
+
+The open-world subsystem composes onto a strategy WITHOUT the strategy
+knowing: the wrapped spec's state is `{"inner": <original state>,
+"alive": (M,) bool}`, every original stage is lifted to act on
+`state["inner"]` (keeping its stage_name, so obs stage profiles and the
+byzantine insertion point still see the original names), and the
+open-world stages slot around them:
+
+    ow_churn        membership update + newcomer bootstrap (lifecycle)
+    ow_threat       publish the ThreatState into ctx.threat (attacks) —
+                    the PFedDST scorer reads it for score gaming
+    ow_snapshot     record pre-round params (lifted; byzantine only)
+    <inner stages>  ... with ow_byzantine inserted directly after the
+                    LAST train-like stage (attacks.TRAIN_STAGE_NAMES)
+    ow_metrics      attacker-isolation telemetry from the emitted plan
+
+THE IDENTITY GUARANTEE: when neither churn nor an adversary cast is
+configured (configs absent, or present but inert — zero rates, zero
+adversaries, no attack/score game) `make_open_spec` returns the spec
+object UNCHANGED — same stages, same init, same key layout — so every
+existing run stays bitwise-identical to its golden trace. Defenses
+(ThreatConfig.defense) do not wrap either: they are wired at spec build
+time through the engine's reducer/mixer hooks and the PFedDST aggregate
+stage (fl/strategies.py, core/rounds.py), because a defense changes an
+aggregation operator, not the stage list.
+
+Key-stream discipline: the wrapper adds NO streams — churn and the
+gaussian attack fold constants into the spec's existing sampling
+stream — so the spec's key_streams tuple (part of its seed contract)
+is untouched.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax.numpy as jnp
+
+from repro.obs.timers import stage_name
+from repro.openworld.attacks import (
+    TRAIN_STAGE_NAMES,
+    ThreatState,
+    adversary_mask,
+    stage_byzantine,
+    stage_snapshot,
+    stage_threat,
+)
+from repro.openworld.lifecycle import (
+    init_alive,
+    population_params,
+    stage_churn,
+    with_population_params,
+)
+from repro.openworld.metrics import stage_openworld_metrics
+
+
+def _lift(stage):
+    """Run an inner-state stage against the wrapper's "inner" entry."""
+
+    def lifted(state, ctx):
+        return {**state, "inner": stage(state["inner"], ctx)}
+
+    lifted.stage_name = stage_name(stage)
+    return lifted
+
+
+def threat_state(threat, m: int):
+    """ThreatConfig → ThreatState, or None when there is no adversary
+    cast (zero fraction, or nothing for the cast to do)."""
+    if threat is None or threat.adversary_fraction <= 0.0:
+        return None
+    if threat.attack == "none" and threat.score_game == "none":
+        return None
+    return ThreatState(
+        adversaries=jnp.asarray(
+            adversary_mask(m, threat.adversary_fraction, threat.seed)
+        ),
+        attack=threat.attack,
+        attack_scale=threat.attack_scale,
+        noise_std=threat.noise_std,
+        score_game=threat.score_game,
+        cost_gain=threat.cost_gain,
+    )
+
+
+def make_open_spec(spec, fl):
+    """Wrap `spec` per fl.threat / fl.churn (see module docstring).
+    Returns `spec` itself — not a copy — when there is nothing to do."""
+    churn = fl.churn if fl.churn is not None and not fl.churn.inert \
+        else None
+    tstate = threat_state(fl.threat, fl.num_clients)
+    if churn is None and tstate is None:
+        return spec
+
+    byz = tstate is not None and tstate.attack != "none"
+    lifted = [_lift(s) for s in spec.stages]
+    if byz:
+        train_at = [i for i, s in enumerate(spec.stages)
+                    if stage_name(s) in TRAIN_STAGE_NAMES]
+        if not train_at:
+            raise ValueError(
+                f"spec {spec.name!r} has no train-like stage "
+                f"({TRAIN_STAGE_NAMES}) to corrupt after"
+            )
+        lifted.insert(
+            train_at[-1] + 1,
+            _lift(stage_byzantine(tstate, population_params,
+                                  with_population_params)),
+        )
+        lifted.insert(0, _lift(stage_snapshot(population_params)))
+    if tstate is not None:
+        lifted.insert(0, stage_threat(tstate))
+        lifted.append(stage_openworld_metrics(tstate))
+    if churn is not None:
+        lifted.insert(0, stage_churn(churn,
+                                     sample_stream=spec.sample_stream))
+
+    inner_init = spec.init
+    inner_eval = spec.params_for_eval
+    inner_affinity = spec.affinity
+    alive0 = init_alive(fl.num_clients, churn)
+
+    def open_init(key):
+        return {"inner": inner_init(key), "alive": jnp.asarray(alive0)}
+
+    kwargs = dict(
+        init=open_init,
+        stages=tuple(lifted),
+        params_for_eval=lambda state: inner_eval(state["inner"]),
+    )
+    if inner_affinity is not None:
+        kwargs["affinity"] = lambda state: inner_affinity(state["inner"])
+    return replace(spec, **kwargs)

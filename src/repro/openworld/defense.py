@@ -1,0 +1,285 @@
+"""Robust aggregation — byzantine-tolerant replacements for the mean.
+
+The engine's two aggregation primitives are `mean_over_active` (star:
+uniform mean of the active clients, broadcast back) and `mix_tree`
+(p2p: row-stochastic mixing over the plan's weights). Both are exactly
+what a byzantine client exploits: one corrupted update moves the mean
+by `scale/n` per unit of corruption, unboundedly.
+
+This module provides the classical robust statistics as drop-in
+replacements wired through the engine's hooks:
+
+  star (client↔server)            p2p (per-row over the peer set)
+  ------------------------------  ------------------------------------
+  trimmed_mean_over_active        robust_row_aggregate("trimmed_mean")
+  median_over_active              robust_row_aggregate("median")
+  norm_clip_mean_over_active      robust_row_aggregate("norm_clip")
+
+`star_reducer(threat)` / `robust_mixer(threat)` map a
+`configs.base.ThreatConfig` onto the matching hook of
+`engine.stage_star_average(reducer=...)` / `engine.stage_mix(mixer=...)`;
+the PFedDST aggregate stage calls `robust_row_aggregate` directly over
+its selection mask (core/rounds.py).
+
+Semantics and costs:
+
+* trimmed mean / median are COORDINATE-WISE order statistics computed
+  jit-safely under a dynamic active count: inactive rows are pushed to
+  +inf, one sort orders each coordinate, and rank-window weights select
+  the surviving entries. The p2p variants sort along a broadcast
+  (M, M, ...) peer axis — O(M²·P·log M), fine at benchmark scale,
+  deliberately NOT the large-M path (the star variants are O(M·P·log M)).
+* per-row trimmed mean / median aggregate the peer SET uniformly — the
+  plan's mixing weights (including staleness discounts) are ignored,
+  because a weighted order statistic has no clean jit-safe form. The
+  norm-clip defense keeps the exact plan weights: it only rescales
+  peers whose parameter norm exceeds `clip × median norm` (the
+  row-client's own contribution is never clipped — you cannot lie to
+  yourself about your own parameters).
+* with everything honest these reducers are NOT bitwise equal to the
+  mean (a median isn't a mean); defenses are opt-in via
+  ThreatConfig.defense and never touch the defense="none" path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import mean_over_active
+
+DEFENSES = ("none", "trimmed_mean", "median", "norm_clip")
+
+
+def _bcast(mask, x):
+    """(M,) mask broadcast over the leading axis of leaf x."""
+    return mask.reshape((-1,) + (1,) * (x.ndim - 1))
+
+
+def _rank_window_mean(sorted_x, lo, hi, axis: int):
+    """Mean of ranks [lo, hi) of a pre-sorted array along `axis`; lo/hi
+    may be traced scalars or per-row vectors broadcastable to the rank
+    axis. Empty windows return 0 (callers guard)."""
+    m = sorted_x.shape[axis]
+    shape = [1] * sorted_x.ndim
+    shape[axis] = m
+    r = jnp.arange(m).reshape(shape)
+    w = (r >= lo) & (r < hi)
+    total = jnp.sum(jnp.where(w, sorted_x, 0.0), axis=axis)
+    count = jnp.maximum(hi - lo, 1).astype(jnp.float32)
+    return total / jnp.squeeze(count, axis=axis) if count.ndim \
+        else total / count
+
+
+def _pick_rank(sorted_x, k, axis: int):
+    """sorted_x[..., k, ...] with a traced (possibly per-row) rank k."""
+    m = sorted_x.shape[axis]
+    shape = [1] * sorted_x.ndim
+    shape[axis] = m
+    r = jnp.arange(m).reshape(shape)
+    return jnp.sum(jnp.where(r == k, sorted_x, 0.0), axis=axis)
+
+
+def _median_ranks(n):
+    """(lo, hi) ranks whose midpoint is the median of n sorted entries
+    (equal when n is odd). n = 0 degenerates to (0, 0) — guard upstream."""
+    lo = jnp.maximum((n - 1) // 2, 0)
+    return lo, n // 2
+
+
+# ---------------------------------------------------------------------------
+# star reducers — the mean_over_active contract: (tree, active) -> broadcast
+# ---------------------------------------------------------------------------
+
+def trimmed_mean_over_active(tree, active, *, trim: float = 0.2):
+    """Coordinate-wise trimmed mean over the active rows, broadcast to
+    all M rows: per coordinate, drop floor(trim·n) entries from each
+    tail of the active values and average the rest. With no active row
+    the result is all-zero (callers guard with `keep_if_none_active`,
+    exactly as for `mean_over_active`)."""
+    n = jnp.sum(active).astype(jnp.int32)
+    lo = jnp.minimum(jnp.floor(trim * n).astype(jnp.int32),
+                     jnp.maximum((n - 1) // 2, 0))
+    hi = n - lo
+
+    def red(x):
+        s = jnp.sort(
+            jnp.where(_bcast(active, x), x.astype(jnp.float32), jnp.inf),
+            axis=0,
+        )
+        out = _rank_window_mean(s, lo, hi, axis=0)
+        out = jnp.where(n > 0, out, 0.0)
+        return jnp.broadcast_to(out[None].astype(x.dtype), x.shape)
+
+    return jax.tree_util.tree_map(red, tree)
+
+
+def median_over_active(tree, active):
+    """Coordinate-wise median over the active rows, broadcast to all M
+    rows (even counts average the two middle entries). All-zero with no
+    active row — guard with `keep_if_none_active`."""
+    n = jnp.sum(active).astype(jnp.int32)
+    lo_r, hi_r = _median_ranks(n)
+
+    def red(x):
+        s = jnp.sort(
+            jnp.where(_bcast(active, x), x.astype(jnp.float32), jnp.inf),
+            axis=0,
+        )
+        out = 0.5 * (_pick_rank(s, lo_r, axis=0)
+                     + _pick_rank(s, hi_r, axis=0))
+        out = jnp.where(n > 0, out, 0.0)
+        return jnp.broadcast_to(out[None].astype(x.dtype), x.shape)
+
+    return jax.tree_util.tree_map(red, tree)
+
+
+def client_norms(tree):
+    """(M,) f32 global parameter norm per client across the whole tree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    sq = jnp.zeros((m,), jnp.float32)
+    for leaf in leaves:
+        sq = sq + jnp.sum(
+            jnp.square(leaf.reshape(m, -1).astype(jnp.float32)), axis=1
+        )
+    return jnp.sqrt(sq)
+
+
+def _masked_median_vec(v, mask):
+    """Median of v's masked entries (scalar); 0 when mask is empty."""
+    n = jnp.sum(mask).astype(jnp.int32)
+    lo_r, hi_r = _median_ranks(n)
+    s = jnp.sort(jnp.where(mask, v, jnp.inf))
+    med = 0.5 * (_pick_rank(s[None], lo_r, axis=1)
+                 + _pick_rank(s[None], hi_r, axis=1))[0]
+    return jnp.where(n > 0, med, 0.0)
+
+
+def clip_scales(tree, reference_mask, *, clip: float):
+    """(M,) per-client down-scales bounding every client's global norm
+    to `clip ×` the median norm over `reference_mask` rows (1.0 for
+    clients already inside the bound — honest clients are untouched as
+    long as the attack inflates norms, the gaussian/scale signature)."""
+    norms = client_norms(tree)
+    ref = _masked_median_vec(norms, reference_mask)
+    limit = clip * ref
+    return jnp.minimum(1.0, limit / jnp.maximum(norms, 1e-12))
+
+
+def norm_clip_mean_over_active(tree, active, *, clip: float = 2.0):
+    """Mean over active rows after clipping each client's global
+    parameter norm to `clip ×` the active median norm. Same broadcast /
+    none-active contract as `mean_over_active`."""
+    scale = clip_scales(tree, active, clip=clip)
+    clipped = jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32)
+                   * _bcast(scale, x)).astype(x.dtype),
+        tree,
+    )
+    return mean_over_active(clipped, active)
+
+
+# ---------------------------------------------------------------------------
+# p2p — per-row robust aggregation over each client's peer set
+# ---------------------------------------------------------------------------
+
+def robust_row_aggregate(tree, edges, weights, m: int, *, defense: str,
+                         trim: float = 0.2, clip: float = 2.0):
+    """Per-row robust aggregation over each client's selected peer set.
+
+    edges    (M, M) bool — i pulls j (self NOT required; it is added)
+    weights  (M, M) row-stochastic plan weights — used by "norm_clip"
+             (which preserves them exactly, clipping only oversized
+             peer columns); the order-statistic defenses aggregate the
+             peer set uniformly instead (see module docstring).
+
+    Coordinate defenses materialize a broadcast (M, M, ...) peer axis
+    per leaf — O(M²·P) memory, the probe/benchmark-scale path.
+    """
+    if defense not in DEFENSES or defense == "none":
+        raise ValueError(f"robust_row_aggregate needs a defense in "
+                         f"{DEFENSES[1:]}, got {defense!r}")
+    eye = jnp.eye(m, dtype=bool)
+    peers = edges | eye
+
+    if defense == "norm_clip":
+        scale = clip_scales(tree, jnp.ones((m,), bool), clip=clip)
+        wf = weights.astype(jnp.float32)
+        # peers' columns are clipped; the diagonal (self) never is
+        w_self = jnp.diagonal(wf)
+        w_off = jnp.where(eye, 0.0, wf)
+
+        def agg(x):
+            xf = x.astype(jnp.float32)
+            clipped = _bcast(scale, x) * xf
+            out = jnp.einsum("ij,j...->i...", w_off, clipped)
+            out = out + _bcast(w_self, x) * xf
+            return out.astype(x.dtype)
+
+        return jax.tree_util.tree_map(agg, tree)
+
+    n_i = jnp.sum(peers, axis=1).astype(jnp.int32)        # ≥ 1 (self)
+    if defense == "trimmed_mean":
+        lo = jnp.minimum(jnp.floor(trim * n_i).astype(jnp.int32),
+                         jnp.maximum((n_i - 1) // 2, 0))
+        hi = n_i - lo
+    else:                                                 # median
+        lo, hi = _median_ranks(n_i)
+
+    def agg(x):
+        xf = x.astype(jnp.float32)
+        # (M, M, ...) peer axis: row i holds peer j's value where peers
+        vals = jnp.where(
+            peers.reshape((m, m) + (1,) * (xf.ndim - 1)),
+            xf[None], jnp.inf,
+        )
+        s = jnp.sort(vals, axis=1)
+        shape = (m,) + (1,) * (xf.ndim - 1)
+        lo_b, hi_b = lo.reshape(shape), hi.reshape(shape)
+        if defense == "trimmed_mean":
+            r = jnp.arange(m).reshape((1, m) + (1,) * (xf.ndim - 1))
+            w = (r >= lo_b[:, None]) & (r < hi_b[:, None])
+            total = jnp.sum(jnp.where(w, s, 0.0), axis=1)
+            out = total / jnp.maximum(hi_b - lo_b, 1).astype(jnp.float32)
+        else:
+            out = 0.5 * (_pick_rank(s, lo_b[:, None], axis=1)
+                         + _pick_rank(s, hi_b[:, None], axis=1))
+        return out.astype(x.dtype)
+
+    return jax.tree_util.tree_map(agg, tree)
+
+
+# ---------------------------------------------------------------------------
+# ThreatConfig → engine hooks
+# ---------------------------------------------------------------------------
+
+def star_reducer(threat):
+    """ThreatConfig → the `reducer` hook of engine.stage_star_average
+    (None when no defense is configured — the stage then keeps the
+    plain mean bit-for-bit)."""
+    if threat is None or threat.defense == "none":
+        return None
+    if threat.defense == "trimmed_mean":
+        return functools.partial(trimmed_mean_over_active,
+                                 trim=threat.trim_fraction)
+    if threat.defense == "median":
+        return median_over_active
+    return functools.partial(norm_clip_mean_over_active,
+                             clip=threat.clip_factor)
+
+
+def robust_mixer(threat):
+    """ThreatConfig → the `mixer` hook of engine.stage_mix (None when
+    no defense is configured)."""
+    if threat is None or threat.defense == "none":
+        return None
+
+    def mixer(tree, plan, m):
+        return robust_row_aggregate(
+            tree, plan.edges, plan.weights, m, defense=threat.defense,
+            trim=threat.trim_fraction, clip=threat.clip_factor,
+        )
+
+    return mixer

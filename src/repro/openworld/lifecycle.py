@@ -1,0 +1,172 @@
+"""Population churn — join/leave dynamics on a fixed-capacity slot array.
+
+The engine's population is a static (M, ...) stack (jit needs static
+shapes), so an OPEN population is modeled as M slots plus an `alive`
+membership mask: `leave` marks a slot dead (its parameters stay in
+place — the slot is recycled, never zeroed), `join` revives a dead slot
+as a NEWCOMER. The churn stage runs FIRST in a wrapped spec
+(compose.make_open_spec), so everything downstream sees membership
+through the round context:
+
+    ctx.alive    the post-churn (M,) mask
+    ctx.active   intersected with it — dead clients never train
+    ctx.cand     intersected with alive⊗alive — dead peers are
+                 unreachable (not selectable, not scoreable, not mixed)
+
+Newcomer bootstrap: a joiner does not restart from a fresh random init —
+it pulls the mean of the parameters the pre-churn alive peers SERVE
+(the versioned PeerStore snapshot view for versioned strategies,
+mirroring fl/hetero's serving semantics; live parameters otherwise) —
+and resets the rest of its row to init values: optimizer state to zeros
+(bitwise what `optim.sgd.init` returns), its Eq. 6 loss-array row to 0
+and its recency row to −1 (a newcomer has probed and selected nobody).
+DisPFL sparsity masks deliberately persist — slot recycling keeps the
+per-slot sparsity pattern, matching how a departing client's mask would
+be reassigned.
+
+Zero-alive guard (the `keep_if_none_active` rule extended to
+membership): if a leave draw would empty the population the churn is
+rolled back for the round — `alive` never goes all-False, so the
+bootstrap mean and every downstream active-guard stay well-defined.
+
+Randomness folds a constant into the spec's existing sampling stream
+(no new key stream → the spec's key layout and seed-for-seed parity
+are untouched), and a zero-rate ChurnConfig reduces to the closed
+population bitwise: the Bernoulli masks are all-False, so every
+`where` returns its old branch and the candidate intersection is with
+all-True.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import mean_over_active
+from repro.core.client_state import PopulationState
+from repro.fl.engine import named_stage, where_tree
+
+_CHURN_SALT = 0x6F77                     # 'ow' — join/leave sub-draw
+
+
+# ---------------------------------------------------------------------------
+# duck-typed state accessors — every strategy state in the repo is either
+# a PopulationState (pfeddst*) or a dict with a "params" entry (baselines)
+# ---------------------------------------------------------------------------
+
+def population_params(inner):
+    """The peer-visible parameter view of a strategy state — what a
+    byzantine adversary corrupts and a newcomer bootstraps from."""
+    if isinstance(inner, PopulationState):
+        return {"e": inner.extractor, "h": inner.header}
+    return inner["params"]
+
+
+def with_population_params(inner, tree):
+    """Inverse of `population_params` — write the view back."""
+    if isinstance(inner, PopulationState):
+        return inner._replace(extractor=tree["e"], header=tree["h"])
+    return {**inner, "params": tree}
+
+
+def serving_params(inner, ctx):
+    """What peers would actually PULL this round: the versioned store's
+    served snapshots for versioned strategies (fl.hetero.store_serve
+    under the round's channel lag), live parameters otherwise. Same
+    tree structure as `population_params`."""
+    if isinstance(inner, PopulationState) and inner.store is not None:
+        from repro.fl.hetero import store_serve
+        served, _ = store_serve(inner.store, inner.round, ctx.stale)
+        return served
+    return population_params(inner)
+
+
+def reset_joined_rows(inner, joined):
+    """Reset a newcomer's non-parameter row state to init values:
+    optimizer accumulators to zeros (== optim.sgd.init bitwise), the
+    Eq. 6 loss-array row to 0, the recency row to −1. Rows outside
+    `joined` are untouched bitwise."""
+
+    def zeros(tree):
+        return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+    if isinstance(inner, PopulationState):
+        return inner._replace(
+            opt_e=where_tree(joined, zeros(inner.opt_e), inner.opt_e),
+            opt_h=where_tree(joined, zeros(inner.opt_h), inner.opt_h),
+            loss_matrix=jnp.where(joined[:, None], 0.0, inner.loss_matrix),
+            last_selected=jnp.where(joined[:, None], -1,
+                                    inner.last_selected),
+        )
+    out = dict(inner)
+    if "opt" in out:
+        out["opt"] = where_tree(joined, zeros(out["opt"]), out["opt"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+# ---------------------------------------------------------------------------
+
+def init_alive(m: int, churn) -> np.ndarray:
+    """Initial (M,) membership: the first max(1, round(init_alive·M))
+    slots start alive (a deterministic prefix — slot ids are arbitrary
+    labels, so randomizing placement buys nothing and the prefix keeps
+    tests and adversary-overlap reasoning simple)."""
+    if churn is None:
+        return np.ones((m,), dtype=bool)
+    frac = min(max(float(churn.init_alive), 0.0), 1.0)
+    k = max(1, int(round(m * frac))) if m > 0 else 0
+    alive = np.zeros((m,), dtype=bool)
+    alive[:k] = True
+    return alive
+
+
+def stage_churn(churn, *, sample_stream: str = "act"):
+    """The membership stage — first stage of an open-population spec,
+    over the wrapper state `{"inner": strategy state, "alive": (M,)}`.
+
+    Per round: iid Bernoulli(leave_rate) departures among the alive,
+    Bernoulli(join_rate) arrivals among the dead (zero-alive guard, see
+    module docstring), newcomer bootstrap + row resets, then the
+    membership intersections into ctx.active / ctx.cand and the
+    alive_frac / joined_n / left_n telemetry.
+    """
+
+    def stage(state, ctx):
+        alive, inner = state["alive"], state["inner"]
+        key = jax.random.fold_in(ctx.keys[sample_stream], _CHURN_SALT)
+        k_leave, k_join = jax.random.split(key)
+        leave = (jax.random.uniform(k_leave, (ctx.m,))
+                 < churn.leave_rate) & alive
+        join = (jax.random.uniform(k_join, (ctx.m,))
+                < churn.join_rate) & ~alive
+        new_alive = (alive & ~leave) | join
+        # zero-alive guard: a churn that would empty the population is
+        # rolled back for the round (keep_if_none_active, for membership)
+        new_alive = jnp.where(jnp.any(new_alive), new_alive, alive)
+        joined = new_alive & ~alive
+        left = alive & ~new_alive
+
+        # newcomers bootstrap from the PRE-churn alive peers' served view
+        src = serving_params(inner, ctx)
+        boot = mean_over_active(src, alive)
+        params = population_params(inner)
+        inner = with_population_params(
+            inner, where_tree(joined, boot, params)
+        )
+        inner = reset_joined_rows(inner, joined)
+
+        ctx.alive = new_alive
+        ctx.active = ctx.active & new_alive
+        pair = new_alive[:, None] & new_alive[None, :]
+        if ctx.cand is None:
+            ctx.cand = pair & ~jnp.eye(ctx.m, dtype=bool)
+        else:
+            ctx.cand = ctx.cand & pair
+        ctx.record("alive_frac", jnp.mean(new_alive.astype(jnp.float32)))
+        ctx.record("joined_n", jnp.sum(joined).astype(jnp.int32))
+        ctx.record("left_n", jnp.sum(left).astype(jnp.int32))
+        return {**state, "inner": inner, "alive": new_alive}
+
+    return named_stage(stage, "ow_churn")

@@ -1,0 +1,76 @@
+"""Attacker-isolation telemetry — does selection route around adversaries?
+
+PFedDST's claim under attack is that its Eq. 9 peer scoring should
+LEARN to avoid adversarial peers (their corrupted updates raise the
+loss-disparity term's view of them, recency decays them slowly), where
+a topology-random baseline (dfedavgm/dispfl gossip) keeps pulling from
+them at the candidate base rate. The isolation score makes that
+comparable across strategies:
+
+    adv_edge_frac   fraction of HONEST ACTIVE clients' selected edges
+                    that point at an adversary this round
+    adv_base_frac   the honest-random baseline: fraction of those same
+                    clients' CANDIDATE peers that are adversaries (what
+                    uniform selection over the reachable set would hit)
+    adv_isolation   1 − adv_edge_frac / adv_base_frac
+                    1 → adversaries fully shunned; 0 → no better than
+                    random; < 0 → adversaries are being PREFERRED (the
+                    score-gaming attacks aim exactly here)
+
+Adversary rows are excluded on both sides (an adversary "selecting"
+its accomplices is not a defense property), and star plans have no
+selection to judge — the stage records nothing for them. Everything
+flows through the jit-safe `ctx.record` channel into History.extra and
+the repro.obs trace (names registered in obs.registry), and the
+simulator annotates the exported SelectionGraph with the adversary cast
+so the per-edge frequency view can be split honest/adversarial.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.fl.engine import named_stage
+
+
+def isolation_metrics(edges, cand, adversaries, active, m: int):
+    """→ dict of the three isolation scalars (f32), jit-safe.
+
+    edges  (M, M) bool selected pulls (row i pulls column j)
+    cand   (M, M) bool reachable-peer mask (None → all but self)
+    """
+    if cand is None:
+        cand = ~jnp.eye(m, dtype=bool)
+    honest_rows = (~adversaries) & active
+    sel = edges & honest_rows[:, None]
+    n_sel = jnp.sum(sel).astype(jnp.float32)
+    frac = jnp.sum(sel & adversaries[None, :]) / jnp.maximum(n_sel, 1.0)
+    reach = cand & honest_rows[:, None]
+    n_reach = jnp.sum(reach).astype(jnp.float32)
+    base = (jnp.sum(reach & adversaries[None, :])
+            / jnp.maximum(n_reach, 1.0))
+    isolation = jnp.where(base > 0.0, 1.0 - frac / jnp.maximum(base, 1e-8),
+                          0.0)
+    return {
+        "adv_edge_frac": frac.astype(jnp.float32),
+        "adv_base_frac": base.astype(jnp.float32),
+        "adv_isolation": isolation.astype(jnp.float32),
+    }
+
+
+def stage_openworld_metrics(tstate):
+    """Record the isolation scalars from the round's emitted plan (last
+    wrapped stage — it sees the plan every strategy's plan/selection
+    stage produced). No-op on star plans."""
+    adv = tstate.adversaries
+
+    def stage(state, ctx):
+        plan = ctx.plan
+        if plan is None or plan.pattern != "p2p" or plan.edges is None:
+            return state
+        for name, val in isolation_metrics(
+            plan.edges, ctx.cand, adv, ctx.active, ctx.m
+        ).items():
+            ctx.record(name, val)
+        return state
+
+    return named_stage(stage, "ow_metrics")

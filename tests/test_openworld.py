@@ -1,0 +1,534 @@
+"""repro.openworld — churn, byzantine peers, score gaming, defenses.
+
+Fast tier: pure-function checks (adversary cast, score-gaming spoof,
+robust reducers vs numpy oracles, isolation metrics, topology degree
+bounds, packed-plan routing) plus the spec-identity guarantee. Slow
+tier: full population-simulator rounds (bitwise-parity of inert wraps,
+zero-alive churn guard, end-to-end defended rounds).
+
+The threat-OFF golden-trace parity itself lives in tests/test_engine.py
+(test_parity_with_pre_engine_strategies runs through make_strategy,
+i.e. through the make_open_spec wrap, against fingerprints captured
+before repro.openworld existed).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms.topology import topology_degree_bound
+from repro.configs.base import ChurnConfig, CommsConfig, FLConfig
+from repro.fl.engine import RoundContext
+from repro.fl.strategies import make_spec
+from repro.kernels.gossip_mix import gossip_degree_bound
+from repro.openworld import (
+    adversary_mask,
+    init_alive,
+    isolation_metrics,
+    median_over_active,
+    norm_clip_mean_over_active,
+    robust_row_aggregate,
+    threat_state,
+    trimmed_mean_over_active,
+)
+from repro.openworld.attacks import (
+    ThreatState,
+    stage_byzantine,
+    stage_snapshot,
+)
+
+try:  # ThreatConfig ships in the same PR; guard keeps collection robust
+    from repro.configs.base import ThreatConfig
+except ImportError:  # pragma: no cover
+    ThreatConfig = None
+
+
+def _ctx(m, key=None, active=None, cand=None):
+    """Minimal RoundContext for stage-level tests."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if active is None:
+        active = jnp.ones((m,), bool)
+    return RoundContext(
+        m=m, data={}, keys={"act": key, "nbr": jax.random.fold_in(key, 1)},
+        active=active, sampled_idx=jnp.arange(m), cand=cand,
+    )
+
+
+# ---------------------------------------------------------------------------
+# adversary cast + score gaming
+# ---------------------------------------------------------------------------
+
+def test_adversary_mask_size_and_determinism():
+    a = adversary_mask(12, 0.25, seed=3)
+    b = adversary_mask(12, 0.25, seed=3)
+    assert a.dtype == bool and a.shape == (12,)
+    assert a.sum() == 3
+    np.testing.assert_array_equal(a, b)
+    assert adversary_mask(12, 0.0).sum() == 0
+    # a different seed draws a different cast (overwhelmingly likely)
+    assert not np.array_equal(a, adversary_mask(12, 0.25, seed=4)) \
+        or a.sum() == 0
+
+
+def test_game_scores_header_spoof_is_anti_aligned():
+    m, d = 6, 4
+    adv = jnp.asarray([False, False, False, False, True, True])
+    ts = ThreatState(adversaries=adv, score_game="header")
+    flat = jax.random.normal(jax.random.PRNGKey(0), (m, d))
+    out, cost = ts.game_scores(flat, 0.1, m)
+    # honest rows untouched, adversary rows = -mean(honest rows)
+    np.testing.assert_array_equal(np.asarray(out[:4]), np.asarray(flat[:4]))
+    want = -np.asarray(flat[:4]).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(out[4]), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[5]), want, rtol=1e-6)
+    # header-only gaming leaves the cost object alone (scalar stays scalar)
+    assert cost == 0.1
+
+
+def test_game_scores_cost_claims_best_link():
+    m = 5
+    adv = jnp.asarray([True, False, False, False, False])
+    ts = ThreatState(adversaries=adv, score_game="cost", cost_gain=1.5)
+    cmat = jnp.arange(m * m, dtype=jnp.float32).reshape(m, m) / 10.0
+    flat = jnp.zeros((m, 3))
+    out_flat, out_cost = ts.game_scores(flat, cmat, m)
+    np.testing.assert_array_equal(np.asarray(out_flat), np.asarray(flat))
+    got = np.asarray(out_cost)
+    best = float(np.asarray(cmat).max())
+    np.testing.assert_allclose(got[:, 0], best * 1.5, rtol=1e-6)
+    np.testing.assert_array_equal(got[:, 1:], np.asarray(cmat)[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# byzantine corruption (stage-level: honest rows bitwise-invariant)
+# ---------------------------------------------------------------------------
+
+def _dict_state(m, key):
+    w = jax.random.normal(key, (m, 3, 2))
+    return {"params": {"w": w}}
+
+
+@pytest.mark.parametrize("attack", ["sign_flip", "scale", "gaussian"])
+def test_byzantine_corrupts_only_active_adversaries(attack):
+    m = 6
+    adv = jnp.asarray([True, True, False, False, False, False])
+    active = jnp.asarray([True, False, True, True, True, True])
+    ts = ThreatState(adversaries=adv, attack=attack, attack_scale=2.0,
+                     noise_std=0.5)
+    get_p = lambda s: s["params"]
+    set_p = lambda s, p: {**s, "params": p}
+    snap = stage_snapshot(get_p)
+    byz = stage_byzantine(ts, get_p, set_p)
+
+    state = _dict_state(m, jax.random.PRNGKey(1))
+    ctx = _ctx(m, active=active)
+    state = snap(state, ctx)
+    pre = np.asarray(state["params"]["w"])
+    # "local training" moves every row by +1
+    state = {"params": {"w": state["params"]["w"] + 1.0}}
+    out = byz(state, ctx)["params"]["w"]
+    out = np.asarray(out)
+
+    # honest rows and the INACTIVE adversary keep the trained update
+    np.testing.assert_array_equal(out[1:], pre[1:] + 1.0)
+    # the active adversary's row was corrupted away from it
+    assert not np.allclose(out[0], pre[0] + 1.0)
+    if attack == "sign_flip":    # pre - scale * delta
+        np.testing.assert_allclose(out[0], pre[0] - 2.0, rtol=1e-6)
+    elif attack == "scale":      # pre + scale * delta
+        np.testing.assert_allclose(out[0], pre[0] + 2.0, rtol=1e-6)
+
+
+def test_byzantine_requires_an_attack():
+    ts = ThreatState(adversaries=jnp.ones((4,), bool), attack="none")
+    with pytest.raises(ValueError):
+        stage_byzantine(ts, lambda s: s, lambda s, p: p)
+
+
+# ---------------------------------------------------------------------------
+# robust reducers vs numpy oracles
+# ---------------------------------------------------------------------------
+
+def test_trimmed_mean_matches_numpy_and_resists_outlier():
+    m = 8
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(m, 5)).astype(np.float32)
+    x[0] = 1e6                                   # planted byzantine row
+    active = np.ones(m, bool)
+    active[-1] = False                           # and one inactive row
+    got = trimmed_mean_over_active(
+        {"w": jnp.asarray(x)}, jnp.asarray(active), trim=0.2
+    )["w"]
+    # oracle: sort the 7 active values per coordinate, cut 1 per tail
+    act = x[active]
+    s = np.sort(act, axis=0)
+    want = s[1:-1].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(got[0]), want, rtol=1e-5)
+    # broadcast to every row, outlier nowhere near the result
+    np.testing.assert_allclose(np.asarray(got[-1]), want, rtol=1e-5)
+    assert np.abs(np.asarray(got)).max() < 1e3
+
+
+@pytest.mark.parametrize("n_active", [5, 6])    # odd + even medians
+def test_median_matches_numpy(n_active):
+    m = 7
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(m, 4)).astype(np.float32)
+    active = np.zeros(m, bool)
+    active[:n_active] = True
+    got = median_over_active({"w": jnp.asarray(x)}, jnp.asarray(active))["w"]
+    want = np.median(x[:n_active], axis=0)
+    np.testing.assert_allclose(np.asarray(got[0]), want, rtol=1e-5)
+
+
+def test_norm_clip_is_mean_when_norms_are_tame():
+    m = 6
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(m, 4)).astype(np.float32)     # comparable norms
+    active = jnp.ones(m, bool)
+    got = norm_clip_mean_over_active(
+        {"w": jnp.asarray(x)}, active, clip=10.0
+    )["w"]
+    np.testing.assert_allclose(np.asarray(got[0]), x.mean(axis=0),
+                               rtol=1e-5)
+
+
+def test_norm_clip_shrinks_the_outlier():
+    m = 6
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(m, 4)).astype(np.float32)
+    x[0] *= 1e4
+    active = jnp.ones(m, bool)
+    got = np.asarray(norm_clip_mean_over_active(
+        {"w": jnp.asarray(x)}, active, clip=2.0
+    )["w"])
+    plain = x.mean(axis=0)
+    assert np.linalg.norm(got[0]) < np.linalg.norm(plain)
+    assert np.isfinite(got).all()
+
+
+def test_robust_row_aggregate_median_oracle():
+    m = 5
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(m, 3)).astype(np.float32)
+    edges = ~np.eye(m, dtype=bool)                      # everyone pulls all
+    got = np.asarray(robust_row_aggregate(
+        {"w": jnp.asarray(x)}, jnp.asarray(edges), None, m,
+        defense="median",
+    )["w"])
+    want = np.stack([np.median(x, axis=0)] * m)         # peer set ∪ self = all
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_robust_row_aggregate_trimmed_per_row_peer_set():
+    m = 6
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(m, 2)).astype(np.float32)
+    x[3] = 1e5                                          # byzantine peer
+    edges = np.zeros((m, m), bool)
+    edges[0, [1, 2, 3, 4]] = True                       # row 0 pulls 4 peers
+    got = np.asarray(robust_row_aggregate(
+        {"w": jnp.asarray(x)}, jnp.asarray(edges), None, m,
+        defense="trimmed_mean", trim=0.2,
+    )["w"])
+    # row 0's set = {0,1,2,3,4}: trim 1 per tail → outlier row 3 cut
+    s = np.sort(x[[0, 1, 2, 3, 4]], axis=0)
+    np.testing.assert_allclose(got[0], s[1:-1].mean(axis=0), rtol=1e-4)
+    # row 5 pulled nobody → its set is just itself
+    np.testing.assert_allclose(got[5], x[5], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# isolation metrics
+# ---------------------------------------------------------------------------
+
+def test_isolation_metrics_extremes():
+    m = 6
+    adv = jnp.asarray([False] * 4 + [True] * 2)
+    active = jnp.ones(m, bool)
+    shun = np.zeros((m, m), bool)
+    shun[:4, :4] = ~np.eye(4, dtype=bool)          # honest pull only honest
+    got = {k: float(v) for k, v in isolation_metrics(
+        jnp.asarray(shun), None, adv, active, m).items()}
+    assert got["adv_edge_frac"] == 0.0
+    assert got["adv_isolation"] == pytest.approx(1.0)
+    assert got["adv_base_frac"] == pytest.approx(2 / 5)
+
+    prefer = np.zeros((m, m), bool)
+    prefer[:4, 4:] = True                          # honest pull only advs
+    got = {k: float(v) for k, v in isolation_metrics(
+        jnp.asarray(prefer), None, adv, active, m).items()}
+    assert got["adv_edge_frac"] == 1.0
+    assert got["adv_isolation"] < 0.0
+
+
+def test_isolation_metrics_no_adversaries_is_zero():
+    m = 4
+    got = isolation_metrics(
+        jnp.ones((m, m), bool), None, jnp.zeros(m, bool),
+        jnp.ones(m, bool), m,
+    )
+    assert float(got["adv_isolation"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# topology-aware packed gossip (satellite: ring/torus route sparse)
+# ---------------------------------------------------------------------------
+
+def test_topology_degree_bounds():
+    assert topology_degree_bound(CommsConfig(topology="ring"), 8) == 2
+    assert topology_degree_bound(CommsConfig(topology="torus"), 16) == 4
+    assert topology_degree_bound(CommsConfig(topology="full"), 8) == 7
+    assert topology_degree_bound(None, 8) is None
+    assert topology_degree_bound(CommsConfig(topology="dynamic"), 8) is None
+
+
+def test_gossip_degree_bound_combos():
+    # directed: own k pulls + self, tightened by the topology
+    assert gossip_degree_bound(3, 100, directed=True) == 4
+    assert gossip_degree_bound(3, 100, directed=True, topo_degree=2) == 3
+    # undirected without a static graph: no useful bound → M
+    assert gossip_degree_bound(3, 100, directed=False) == 100
+    # undirected + ring: topo degree + self
+    assert gossip_degree_bound(3, 100, directed=False, topo_degree=2) == 3
+    assert gossip_degree_bound(3, 4, directed=True, topo_degree=99) == 4
+
+
+def test_ring_undirected_plan_packs_and_matches_dense(monkeypatch):
+    """The satellite end-to-end: an undirected (dfedavgm-style) plan on
+    a ring topology carries packed neighbor lists once the platform
+    threshold allows sparse, and the sparse mix reproduces the dense
+    einsum."""
+    from repro.fl.engine import mix_tree, stage_plan_gossip
+    from repro.comms.topology import make_topology
+    from repro.core.aggregation import aggregate_extractors
+    from repro.kernels import ops
+
+    m = 8
+    fl = FLConfig(num_clients=m, peers_per_round=2,
+                  comms=CommsConfig(topology="ring"))
+    cand = jnp.asarray(make_topology("ring", m, cfg=fl.comms), bool)
+    topo = topology_degree_bound(fl.comms, m)
+    stage = stage_plan_gossip(fl, directed=False, topo_degree=topo)
+
+    # default CPU threshold (1024) keeps M=8 dense: no packed lists
+    ctx = _ctx(m, cand=cand)
+    stage({}, ctx)
+    assert ctx.plan.nbr_idx is None
+
+    # force the sparse path and check routing + numerical parity
+    monkeypatch.setattr(ops, "AUTO_MIN_SPARSE_MIX", {"cpu": 1, "gpu": 1})
+    ctx2 = _ctx(m, cand=cand)
+    stage({}, ctx2)
+    assert ctx2.plan.nbr_idx is not None
+    assert ctx2.plan.nbr_idx.shape[1] == topo + 1
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(3), (m, 6))}
+    sparse = mix_tree(tree, ctx2.plan, m)["w"]
+    dense = aggregate_extractors(tree, ctx2.plan.weights)["w"]
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# spec identity + lifecycle primitives
+# ---------------------------------------------------------------------------
+
+def test_init_alive():
+    np.testing.assert_array_equal(init_alive(4, None), np.ones(4, bool))
+    churn = ChurnConfig(join_rate=0.1, leave_rate=0.1, init_alive=0.5)
+    a = init_alive(8, churn)
+    assert a.sum() == 4
+    # at least one slot always starts alive
+    assert init_alive(4, dataclasses.replace(churn, init_alive=0.0)).sum() == 1
+
+
+def test_threat_state_inert_forms():
+    assert threat_state(None, 6) is None
+    assert threat_state(ThreatConfig(), 6) is None
+    assert threat_state(
+        ThreatConfig(adversary_fraction=0.5, attack="none",
+                     score_game="none"), 6,
+    ) is None
+    ts = threat_state(
+        ThreatConfig(adversary_fraction=0.5, attack="sign_flip"), 6
+    )
+    assert ts is not None and int(np.asarray(ts.adversaries).sum()) == 3
+    # defense-only configs stay inert: defenses are engine hooks, not stages
+    assert threat_state(ThreatConfig(defense="median"), 6) is None
+
+
+def test_make_open_spec_identity_when_inert(tiny_cnn, tiny_fl):
+    from repro.openworld import make_open_spec
+
+    spec = make_spec("pfeddst", tiny_cnn, tiny_fl, steps_per_epoch=1)
+    assert make_open_spec(spec, tiny_fl) is spec
+    fl2 = dataclasses.replace(
+        tiny_fl,
+        threat=ThreatConfig(),                       # all knobs at default
+        churn=ChurnConfig(join_rate=0.0, leave_rate=0.0, init_alive=1.0),
+    )
+    assert make_open_spec(spec, fl2) is spec
+
+
+def test_make_spec_wraps_when_threatened(tiny_cnn, tiny_fl):
+    fl = dataclasses.replace(
+        tiny_fl, threat=ThreatConfig(adversary_fraction=0.34,
+                                     attack="sign_flip"),
+    )
+    spec = make_spec("pfeddst", tiny_cnn, fl, steps_per_epoch=1)
+    names = [getattr(s, "stage_name", "?") for s in spec.stages]
+    assert "ow_threat" in names and "ow_byzantine" in names
+    assert "ow_metrics" in names
+    # byzantine lands directly after the train-like stage
+    i_train = max(i for i, n in enumerate(names)
+                  if n in ("local_train", "local_train_babu", "phase_h"))
+    assert names[i_train + 1] == "ow_byzantine"
+
+
+# ---------------------------------------------------------------------------
+# full rounds — slow tier
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ow_env(tiny_cnn):
+    from repro.data.synthetic import client_datasets_cifar
+
+    fl = FLConfig(
+        num_clients=6, peers_per_round=2, batch_size=8,
+        client_sample_ratio=1.0, epochs_extractor=1, epochs_header=1,
+        probe_size=8,
+    )
+    data = client_datasets_cifar(
+        jax.random.PRNGKey(0), fl.num_clients, num_classes=10,
+        classes_per_client=2, samples_per_class=20, image_size=16,
+    )
+    train = {"images": data["train_x"], "labels": data["train_y"]}
+    return tiny_cnn, fl, train
+
+
+def _run_rounds(cfg, fl, train, name, rounds=2):
+    from repro.fl import make_strategy
+
+    strat = make_strategy(name, cfg, fl, steps_per_epoch=1)
+    state = strat.init(jax.random.PRNGKey(1))
+    metrics = None
+    for r in range(rounds):
+        state, metrics = strat.round(state, train, jax.random.PRNGKey(2 + r))
+    return strat.params_for_eval(state), metrics, state
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["pfeddst", "dfedavgm"])
+def test_zero_rate_churn_is_bitwise_closed_population(ow_env, name):
+    """Open-population wrap with zero join/leave rates (init_alive just
+    below 1 forces the wrap but still wakes every slot) reduces bitwise
+    to the closed-population run: the churn stage draws from a salted
+    fold of the existing act stream, so no downstream key moves."""
+    cfg, fl, train = ow_env
+    base_params, _, _ = _run_rounds(cfg, fl, train, name)
+    fl_churn = dataclasses.replace(
+        fl, churn=ChurnConfig(join_rate=0.0, leave_rate=0.0,
+                              init_alive=0.99),
+    )
+    # round(0.99 * 6) = 6 → every slot alive, but the spec IS wrapped
+    open_params, metrics, state = _run_rounds(cfg, fl_churn, train, name)
+    assert "alive_frac" in metrics
+    assert float(metrics["alive_frac"]) == 1.0
+    assert set(state.keys()) == {"inner", "alive"}
+    for a, b in zip(jax.tree.leaves(base_params),
+                    jax.tree.leaves(open_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_zero_alive_guard_keeps_population(ow_env):
+    """leave_rate=1.0 with no joins would empty the population every
+    round — the keep-if-none-alive guard must roll the mask back
+    instead of wiping state (satellite regression)."""
+    cfg, fl, train = ow_env
+    fl_churn = dataclasses.replace(
+        fl, churn=ChurnConfig(join_rate=0.0, leave_rate=1.0,
+                              init_alive=1.0),
+    )
+    params, metrics, state = _run_rounds(cfg, fl_churn, train, "pfeddst")
+    assert float(metrics["alive_frac"]) == 1.0
+    assert bool(np.asarray(state["alive"]).all())
+    from repro.utils.pytree import tree_any_nan
+
+    assert not bool(tree_any_nan(params))
+
+
+@pytest.mark.slow
+def test_gaussian_zero_std_is_bitwise_noop(ow_env):
+    """σ=0 gaussian corruption adds exactly zero: the wrapped spec (the
+    threat/snapshot/byzantine/metrics stages all run) must reproduce
+    the clean run's parameters bitwise — the wrapper itself never
+    perturbs training, key streams, or aggregation."""
+    cfg, fl, train = ow_env
+    clean, _, _ = _run_rounds(cfg, fl, train, "pfeddst")
+    fl_t = dataclasses.replace(
+        fl, threat=ThreatConfig(adversary_fraction=0.34, attack="gaussian",
+                                noise_std=0.0),
+    )
+    attacked, metrics, _ = _run_rounds(cfg, fl_t, train, "pfeddst")
+    assert "adv_active_n" in metrics and "adv_isolation" in metrics
+    for a, b in zip(jax.tree.leaves(clean), jax.tree.leaves(attacked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_sign_flip_moves_params_and_defense_round_runs(ow_env):
+    cfg, fl, train = ow_env
+    clean, _, _ = _run_rounds(cfg, fl, train, "pfeddst")
+    fl_t = dataclasses.replace(
+        fl, threat=ThreatConfig(adversary_fraction=0.34, attack="sign_flip",
+                                score_game="both",
+                                defense="trimmed_mean"),
+    )
+    attacked, metrics, _ = _run_rounds(cfg, fl_t, train, "pfeddst")
+    from repro.utils.pytree import tree_any_nan
+
+    assert not bool(tree_any_nan(attacked))
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(clean), jax.tree.leaves(attacked))
+    )
+    assert "adv_edge_frac" in metrics
+
+
+@pytest.mark.slow
+def test_churn_round_runs_open_population(ow_env):
+    cfg, fl, train = ow_env
+    fl_churn = dataclasses.replace(
+        fl, churn=ChurnConfig(join_rate=0.3, leave_rate=0.2,
+                              init_alive=0.5),
+    )
+    params, metrics, state = _run_rounds(
+        cfg, fl_churn, train, "dispfl", rounds=3
+    )
+    assert {"alive_frac", "joined_n", "left_n"} <= set(metrics)
+    assert 0.0 < float(metrics["alive_frac"]) <= 1.0
+    from repro.utils.pytree import tree_any_nan
+
+    assert not bool(tree_any_nan(params))
+
+
+@pytest.mark.slow
+def test_packed_ring_round_matches_dense_round(ow_env, monkeypatch):
+    """Full dfedavgm round on a ring: forcing the sparse mix threshold
+    down reproduces the dense round's parameters (kernel parity at the
+    strategy level)."""
+    from repro.kernels import ops
+
+    cfg, fl, train = ow_env
+    fl_ring = dataclasses.replace(
+        fl, comms=CommsConfig(topology="ring"),
+    )
+    dense, _, _ = _run_rounds(cfg, fl_ring, train, "dfedavgm", rounds=1)
+    monkeypatch.setattr(ops, "AUTO_MIN_SPARSE_MIX", {"cpu": 1, "gpu": 1})
+    sparse, _, _ = _run_rounds(cfg, fl_ring, train, "dfedavgm", rounds=1)
+    for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(sparse)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -43,6 +43,10 @@ def add_total_wall(tree):
     synthetic `total_wall_s` = first_s + steady_s × (TOTAL_ROUNDS − 1)
     leaf, so the compile+steady total is gated as one number. Scan
     entries already carry a measured total_s and are left alone."""
+    if isinstance(tree, list):
+        for v in tree:
+            add_total_wall(v)
+        return
     if not isinstance(tree, dict):
         return
     first, steady = tree.get("first_s"), tree.get("steady_s")
@@ -55,7 +59,19 @@ def add_total_wall(tree):
 
 def walk(old, new, path=""):
     """Yield (path, old_leaf, new_leaf) for numeric leaves present in
-    both trees; missing/extra branches are yielded with None."""
+    both trees; missing/extra branches are yielded with None. Lists are
+    walked by index (sweep arrays — BENCH_async/BENCH_robust); length
+    mismatches surface the unpaired tail as missing/extra."""
+    if isinstance(old, list) and isinstance(new, list):
+        for i in range(max(len(old), len(new))):
+            sub = f"{path}[{i}]"
+            if i >= len(old):
+                yield sub, None, new[i]
+            elif i >= len(new):
+                yield sub, old[i], None
+            else:
+                yield from walk(old[i], new[i], sub)
+        return
     if isinstance(old, dict) and isinstance(new, dict):
         for key in sorted(set(old) | set(new)):
             sub = f"{path}.{key}" if path else str(key)
