@@ -1,23 +1,34 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-fast test deps bench-comms bench-round \
-	bench-round-smoke bench-async bench-select bench-robust \
+.PHONY: verify verify-fast verify-large test coverage deps bench-comms \
+	bench-round bench-round-smoke bench-async bench-select bench-robust \
 	bench-robust-smoke docs-check trace-report
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
 
-# tier-1 gate (ROADMAP.md): the full CPU suite, fail-fast
+# tier-1 gate (ROADMAP.md): the full CPU suite, fail-fast. @large scale
+# tests (M=65536, minutes + GBs of RAM) run via their own verify-large.
 verify:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q -m "not large"
 
-# fast tier: skips the @pytest.mark.slow population-simulator tests
+# fast tier: also skips the @pytest.mark.slow population-simulator tests
 verify-fast:
-	$(PY) -m pytest -x -q -m "not slow"
+	$(PY) -m pytest -x -q -m "not slow and not large"
+
+# M=65536 sparse-fabric scale proof: one selection + one constant-degree
+# gossip round with an XLA peak-memory assertion (O(M·deg), not O(M²))
+verify-large:
+	$(PY) -m pytest -x -q -m large
 
 test:
-	$(PY) -m pytest -q
+	$(PY) -m pytest -q -m "not large"
+
+# fast tier with line coverage; the floor lives in .coveragerc
+coverage:
+	$(PY) -m pytest -q -m "not slow and not large" \
+		--cov=repro --cov-report=term-missing
 
 bench-comms:
 	$(PY) benchmarks/comms_cost.py

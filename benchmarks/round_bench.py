@@ -146,6 +146,99 @@ def bench_stages(name, cfg, fl, data, *, steady_rounds: int, seed: int = 0):
     return times.summary()
 
 
+def bench_sparse_round(m, *, k: int = 4, feat: int = 256,
+                       steady_rounds: int = 3, seed: int = 0):
+    """One fabric-level round at packed-population scale: event draw →
+    packed Eq. 7–9 selection → selection-derived mix weights → blocked
+    gossip mix → per-edge traffic accounting. This is the M ≥ 16k path
+    where the ENGINE round (whose context arrays are (M, M)) cannot
+    run; it exercises every per-round fabric component at O(M·deg).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.comms import make_fabric
+    from repro.configs.base import CommsConfig
+    from repro.core.scoring import score_topk_sparse
+    from repro.core.selection import NEG
+    from repro.kernels.gossip_mix import gossip_mix_blocked
+
+    fab = make_fabric(
+        CommsConfig(topology="hier_ring", hier_cluster=16,
+                    link_model="hetero", graph_seed=seed, sparse=True),
+        m,
+    )
+    d = int(fab.nbr_idx.shape[1])
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    headers = jax.random.normal(ks[0], (m, 64), jnp.float32)
+    last = jax.random.randint(ks[1], (m, d), -1, 8)
+    s_l = jax.random.uniform(ks[2], (m, d), maxval=3.0)
+    state = jax.random.normal(ks[3], (m, feat), jnp.float32)
+
+    def fabric_round(key, headers, last, s_l, state):
+        slot_mask, _, _ = fab.round_slots(key)
+        vals, idx, _ = score_topk_sparse(
+            headers, last, s_l, jnp.int32(7), nbr_idx=fab.nbr_idx,
+            nbr_valid=slot_mask, alpha=1.0, lam=0.5,
+            comm_cost=fab.slot_cost, k=k)
+        sel = vals > NEG / 2
+        # uniform mix over selected peers + self (the engine's
+        # selection_to_weights semantics, packed form)
+        inv = 1.0 / (jnp.sum(sel, axis=1) + 1.0)
+        idx_mix = jnp.concatenate(
+            [jnp.arange(m, dtype=idx.dtype)[:, None], idx], axis=1)
+        w_mix = jnp.concatenate(
+            [inv[:, None], jnp.where(sel, inv[:, None], 0.0)], axis=1)
+        return gossip_mix_blocked(state, idx_mix, w_mix), vals, idx, sel
+
+    fn = jax.jit(fabric_round)
+    key = jax.random.PRNGKey(1)
+    t0 = time.perf_counter()
+    out = fn(key, headers, last, s_l, state)
+    jax.block_until_ready(out)
+    first_s = time.perf_counter() - t0
+    steady = []
+    for r in range(steady_rounds):
+        t0 = time.perf_counter()
+        out = fn(jax.random.PRNGKey(2 + r), headers, last, s_l, state)
+        jax.block_until_ready(out)
+        steady.append(time.perf_counter() - t0)
+    steady_s = sum(steady) / len(steady)
+
+    # per-edge accounting on the selected pairs (host side, O(E))
+    _, vals, idx, sel = out
+    idx_np, sel_np = np.asarray(idx), np.asarray(sel)
+    topo = fab.topo
+    rows = np.repeat(np.arange(m), k)[sel_np.ravel()]
+    cols = idx_np.ravel()[sel_np.ravel()]
+    # vectorized edge-slot lookup: CSR indices ascend per row, so the
+    # row-major (row·M + col) key stream is globally sorted
+    key_edges = rows.astype(np.int64) * m + cols
+    all_keys = topo.edge_rows().astype(np.int64) * m + topo.indices
+    pos = np.searchsorted(all_keys, key_edges)
+    assert (all_keys[pos] == key_edges).all(), \
+        "selection produced a pair outside the sparse topology"
+    edge_active = np.zeros(topo.num_edges, bool)
+    edge_active[pos] = True
+    t0 = time.perf_counter()
+    stats = fab.account(edge_active, 1 << 20)
+    account_s = time.perf_counter() - t0
+
+    fabric_bytes = int(fab.nbr_idx.nbytes + fab.nbr_static.nbytes
+                       + fab.slot_cost.nbytes + fab.edge_cost.nbytes)
+    return {
+        "M": m, "k": k, "D": d, "feat": feat,
+        "first_s": round(first_s, 4),
+        "compile_s": round(max(first_s - steady_s, 0.0), 4),
+        "sparse_wall_s": round(steady_s, 4),
+        "account_wall_s": round(account_s, 4),
+        "messages": int(stats.messages),
+        "fabric_bytes": fabric_bytes,
+        "dense_equiv_bytes": m * m * 4 + m * m,
+        "steady_rounds": steady_rounds,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, nargs="*", default=[16, 64])
@@ -174,6 +267,11 @@ def main(argv=None):
                          "(repro.utils.compile_cache; default dir when "
                          "given bare) and add warm-start scan entries — "
                          "the total wall every run after the first pays")
+    ap.add_argument("--sparse-clients", type=int, nargs="*",
+                    default=[16384, 65536],
+                    help="population sizes for the packed-fabric round "
+                         "bench (selection + gossip mix + per-edge "
+                         "accounting at O(M·deg); no engine round)")
     ap.add_argument("--sample-ratio", type=float, default=0.25)
     ap.add_argument("--peers", type=int, default=2)
     ap.add_argument("--batch-size", type=int, default=8)
@@ -190,6 +288,7 @@ def main(argv=None):
         args.steady_rounds = 1
         args.scan_rounds = 4
         args.scan_chunk = 2
+        args.sparse_clients = [16384]
     if args.out is None:
         args.out = os.path.join(
             RESULTS,
@@ -271,6 +370,19 @@ def main(argv=None):
             for sname, s in r.get("stages", {}).items():
                 print(f"    stage {sname:18s} steady={s['steady_s']:7.3f}s "
                       f"compile={s['compile_s']:7.3f}s", flush=True)
+
+    out["sparse_rounds"] = {}
+    for m in args.sparse_clients:
+        r = bench_sparse_round(m, steady_rounds=args.steady_rounds,
+                               seed=args.seed)
+        out["sparse_rounds"][f"M{m}"] = r
+        print(f"{'sparse_fabric':16s} M={m:6d} D={r['D']} "
+              f"first={r['first_s']:7.3f}s "
+              f"steady={r['sparse_wall_s']:7.3f}s "
+              f"account={r['account_wall_s']:7.3f}s "
+              f"fabric={r['fabric_bytes'] / 2**20:.2f} MiB "
+              f"(dense-equiv {r['dense_equiv_bytes'] / 2**20:.0f} MiB)",
+              flush=True)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -159,6 +159,88 @@ def sweep_col_block(ms, blocks, *, k=10, repeats=5):
             "best": {str(m): r["col_block"] for m, r in best.items()}}
 
 
+def _sparse_inputs(m, seed=0, *, cluster=16):
+    """SparseFabric on clusters-of-rings + pre-gathered (M, D) context."""
+    from repro.comms import make_fabric
+    from repro.configs.base import CommsConfig
+
+    fab = make_fabric(
+        CommsConfig(topology="hier_ring", hier_cluster=cluster,
+                    link_model="hetero", graph_seed=seed, sparse=True),
+        m,
+    )
+    d = fab.nbr_idx.shape[1]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    last = jax.random.randint(ks[0], (m, d), -1, 8)
+    s_l = jax.random.uniform(ks[1], (m, d), maxval=3.0)
+    return fab, last, s_l
+
+
+def bench_sparse_case(m, k, repeats=5):
+    """score_topk_sparse on the packed fabric — the M ≥ 16k regime where
+    no (M, M) array fits. `fabric_bytes` is the actual resident packed
+    state; `dense_equiv_bytes` what the dense fabric's candidate + cost
+    matrices alone would take."""
+    from repro.core.scoring import score_topk_sparse
+
+    fab, last, s_l = _sparse_inputs(m)
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, P), jnp.float32)
+    valid = fab.nbr_static
+
+    def run(x, last, s_l, valid, k):
+        return score_topk_sparse(
+            x, last, s_l, jnp.int32(7), nbr_idx=fab.nbr_idx,
+            nbr_valid=valid, alpha=ALPHA, lam=LAM,
+            comm_cost=fab.slot_cost, k=k,
+        )
+
+    fn = jax.jit(run, static_argnames=("k",))
+    wall = _time(fn, x, last, s_l, valid, k, repeats=repeats)
+    fabric_bytes = int(fab.nbr_idx.nbytes + fab.nbr_static.nbytes
+                       + fab.slot_cost.nbytes + fab.edge_cost.nbytes)
+    return {
+        "M": m, "k": k, "D": int(fab.nbr_idx.shape[1]),
+        "backend": jax.default_backend(),
+        "sparse_wall_s": wall,
+        "fabric_bytes": fabric_bytes,
+        "dense_equiv_bytes": m * m * 4 + m * m,   # cost f32 + cand bool
+    }
+
+
+def sparse_parity(m=512, k=6):
+    """Small-M oracle: packed selection mask == dense fused mask under
+    the same fabric candidates (dense derived from the same CSR)."""
+    from repro.core.scoring import score_topk_sparse
+
+    fab, last_nbr, s_l_nbr = _sparse_inputs(m)
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, P), jnp.float32)
+    # scatter the packed context to dense so both paths score the same
+    # pairs — VALID slots only: padding repeats index 0, and a blanket
+    # fancy assignment would let pad slots overwrite real columns
+    nbr = np.asarray(fab.nbr_idx)
+    cand = np.asarray(fab.nbr_static)
+    r_idx = np.broadcast_to(np.arange(m)[:, None], nbr.shape)[cand]
+    c_idx = nbr[cand]
+    last = np.full((m, m), -1, np.int32)
+    last[r_idx, c_idx] = np.asarray(last_nbr)[cand]
+    s_l = np.zeros((m, m), np.float32)
+    s_l[r_idx, c_idx] = np.asarray(s_l_nbr)[cand]
+    cand_dense = np.zeros((m, m), bool)
+    cand_dense[r_idx, c_idx] = True
+    rv, ri, _ = select_topk_ref(
+        jnp.asarray(x), jnp.asarray(last), jnp.asarray(s_l), jnp.int32(7),
+        fab.cost, jnp.asarray(cand_dense), k=k, alpha=ALPHA, lam=LAM)
+    sv, si, _ = score_topk_sparse(
+        x, jnp.asarray(last_nbr), jnp.asarray(s_l_nbr), jnp.int32(7),
+        nbr_idx=fab.nbr_idx, nbr_valid=fab.nbr_static,
+        alpha=ALPHA, lam=LAM, comm_cost=fab.slot_cost, k=k)
+    md = np.asarray(topk_to_mask(ri, rv, m))
+    ms = np.asarray(topk_to_mask(si, sv, m))
+    np.testing.assert_array_equal(ms, md)
+    return {"kernel": "score_topk_sparse", "M": m, "k": k,
+            "mask_exact": True}
+
+
 def smoke_kernel_parity(m=64, k=10):
     """Interpret-mode fused Pallas kernel vs the dense oracle."""
     x, last, s_l, cand = _inputs(m, seed=1)
@@ -190,7 +272,13 @@ def main(argv=None):
     ms = [256] if args.smoke else [256, 1024, 4096]
     ks = [4, 10, 32]
     rows = [bench_case(m, k, repeats=args.repeats) for m in ms for k in ks]
-    result = {"cases": rows, "kernel_parity": smoke_kernel_parity()}
+    # packed-fabric selection at populations the dense path can't hold
+    sparse_ms = [16384] if args.smoke else [16384, 65536]
+    sparse_rows = [bench_sparse_case(m, 4, repeats=args.repeats)
+                   for m in sparse_ms]
+    result = {"cases": rows, "sparse_cases": sparse_rows,
+              "sparse_parity": sparse_parity(),
+              "kernel_parity": smoke_kernel_parity()}
     if args.sweep:
         result["col_block_sweep"] = sweep_col_block(
             ms, [128, 256, 512, 1024, 2048, 4096], repeats=args.repeats)
@@ -207,6 +295,11 @@ def main(argv=None):
               f"{r['fused_peak_bytes_est'] / 2**20:11.2f}  "
               f"{r['masks_agree']}")
     assert all(r["masks_agree"] for r in rows)
+    for r in sparse_rows:
+        print(f"{r['M']:6d}{r['k']:4d}  sparse D={r['D']:3d}"
+              f"  wall={r['sparse_wall_s']:9.5f}s"
+              f"  fabric={r['fabric_bytes'] / 2**20:8.2f} MiB"
+              f"  dense-equiv={r['dense_equiv_bytes'] / 2**20:9.1f} MiB")
     print("wrote", args.out)
     return result
 

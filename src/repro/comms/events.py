@@ -48,6 +48,69 @@ def staleness_rounds(key, m: int, p_stale: float,
     return jnp.where(stale, lag, 0).astype(jnp.int32)
 
 
+def edge_pair_uniform(key, rows, cols) -> jnp.ndarray:
+    """(E,) uniforms keyed by the CANONICAL endpoint pair: the key is
+    folded with (min, max), so the two directed slots of an undirected
+    edge draw the SAME value — symmetric dropout at O(E) fold-ins,
+    never an (M, M) grid. `drop_links_pairfold` is the dense oracle
+    drawing the identical value at every grid position."""
+    lo = jnp.minimum(rows, cols)
+    hi = jnp.maximum(rows, cols)
+
+    def one(a, b):
+        return jax.random.uniform(
+            jax.random.fold_in(jax.random.fold_in(key, a), b)
+        )
+
+    return jax.vmap(one)(lo, hi)
+
+
+def drop_edges(key, rows, cols, p_drop: float) -> jnp.ndarray:
+    """(E,) bool keep mask — the CSR form of `drop_links`' symmetric iid
+    edge dropout, pair-keyed (see `edge_pair_uniform`). Note the RNG
+    layout intentionally differs from the dense `drop_links` (which
+    draws an (M, M) grid): a given key produces different failures on
+    the two paths, but identical distributions — and with p_drop = 0
+    both are the identity."""
+    if p_drop <= 0.0:
+        return jnp.ones(rows.shape, bool)
+    return edge_pair_uniform(key, rows, cols) >= p_drop
+
+
+def drop_links_pairfold(key, adj, p_drop: float) -> jnp.ndarray:
+    """Dense oracle for `drop_edges`: the same pair-keyed uniforms drawn
+    at every (i, j) grid position — O(M²) fold-ins, parity tests only."""
+    if p_drop <= 0.0:
+        return adj
+    m = adj.shape[0]
+    i = jnp.arange(m)
+    u = edge_pair_uniform(key, jnp.repeat(i, m), jnp.tile(i, m))
+    return adj & (u.reshape(m, m) >= p_drop)
+
+
+def apply_events_sparse(key, rows, cols, m: int, cfg):
+    """Sparse analogue of `apply_events` on a CSR edge list:
+
+        edge_keep (E,), available (M,), staleness (M,)
+
+    Same 3-way key split and the same O(M) availability / staleness
+    draws as the dense path — those (M,) outputs are bitwise identical
+    for the same key. Edge dropout draws pair-keyed per-edge uniforms
+    (`drop_edges`) instead of the dense (M, M) grid. `edge_keep`
+    already folds in both endpoints' availability and (under
+    stale_mode="drop") the stale target columns, mirroring the dense
+    candidate-mask composition exactly.
+    """
+    k_drop, k_avail, k_stale = jax.random.split(key, 3)
+    keep = drop_edges(k_drop, rows, cols, cfg.p_link_drop)
+    avail = availability_mask(k_avail, m, cfg.availability)
+    stale = staleness_rounds(k_stale, m, cfg.p_stale, cfg.max_staleness)
+    keep = keep & avail[rows] & avail[cols]
+    if cfg.stale_mode != "serve":
+        keep = keep & (stale == 0)[cols]
+    return keep, avail, stale
+
+
 def apply_events(key, adj, cfg) -> tuple[jnp.ndarray, jnp.ndarray,
                                          jnp.ndarray]:
     """(candidate_mask, available, staleness) for one round.

@@ -24,16 +24,25 @@ import numpy as np
 from repro.comms import events as events_mod
 from repro.comms import topology as topo_mod
 from repro.comms.linkcost import (
+    EdgeLinkModel,
     LinkModel,
     cost_scores,
+    edge_cost_scores,
+    make_edge_link_model,
     make_link_model,
     scale_by_channel_rate,
 )
 from repro.comms.transport import (
     TrafficStats,
     simulate_exchange,
+    simulate_exchange_edges,
     star_exchange,
 )
+
+# largest M at which the sparse fabric will materialize a dense (M, M)
+# oracle view (cand_dense / cost): 8192² bools ≈ 64 MB. Above it the
+# dense views raise — by then every consumer must be on the packed path.
+DENSE_ORACLE_MAX = 8192
 
 
 class CommsFabric:
@@ -118,11 +127,179 @@ class CommsFabric:
         )
 
 
+class SparseFabric:
+    """Large-M comms fabric: CSR topology + per-edge links, O(M·deg)
+    memory end-to-end. The engine detects `round_slots` and threads the
+    packed neighbor view (`RoundContext.nbr`) into the sparse Eq. 9
+    selection path; dense (M, M) views (`cand_dense`, `cost`) exist as
+    small-M oracles only and refuse to materialize past
+    DENSE_ORACLE_MAX.
+
+    Deliberately NOT a drop-in for every CommsFabric use:
+      * dynamic topologies resample a dense jax graph per round — no
+        static CSR exists (ValueError at build);
+      * star accounting models a client↔server proxy over the all-pairs
+        mean link — an O(M²) statistic with no edge-set analogue, and
+        centralized baselines are not the scale-out workload (ValueError
+        at accounting time);
+      * device-profile channel_rate scaling perturbs the global t_min
+        normalizer non-monotonically — dense-fabric-only for now.
+
+    Parity contract (tests/test_sparse_fabric.py): topology, per-edge
+    link attributes, Eq. 9 cost columns, degree bounds, and the (M,)
+    availability/staleness event masks are BITWISE equal to the dense
+    fabric's; per-edge dropout is pair-keyed (same distribution,
+    different RNG layout — `events.drop_links_pairfold` is its dense
+    oracle), so cross-fabric round parity holds at p_link_drop = 0.
+    """
+
+    is_dynamic = False
+
+    def __init__(self, cfg, m: int, *, cost_scale: float = 1.0,
+                 channel_rate=None):
+        if channel_rate is not None:
+            raise NotImplementedError(
+                "SparseFabric does not support device-profile "
+                "channel_rate scaling; use the dense CommsFabric "
+                "(CommsConfig.sparse=False) with device profiles"
+            )
+        topo = topo_mod.make_sparse_topology(
+            cfg.topology, m, cfg=cfg, seed=cfg.graph_seed
+        )
+        if topo is None:
+            raise ValueError(
+                "dynamic topology has no static CSR (resampled per "
+                "round in jax); use the dense CommsFabric"
+            )
+        self.cfg = cfg
+        self.m = m
+        self.topo = topo
+        self.elink: EdgeLinkModel = make_edge_link_model(cfg, topo)
+        self.edge_cost = jnp.asarray(edge_cost_scores(self.elink,
+                                                      cost_scale))
+        nbr, valid = topo.padded()
+        self.nbr_idx = jnp.asarray(nbr)          # (M, D) int32 ascending
+        self.nbr_static = jnp.asarray(valid)     # (M, D) static slot mask
+        rows, slots = topo.edge_slots()
+        self._edge_rows = jnp.asarray(rows)
+        self._edge_cols = jnp.asarray(topo.indices)
+        self._edge_slot = (rows, slots)          # static numpy scatter map
+        slot_cost = np.zeros(valid.shape, np.float32)
+        slot_cost[rows, slots] = np.asarray(self.edge_cost)
+        self.slot_cost = jnp.asarray(slot_cost)  # (M, D) per-slot Eq. 9 c
+        self._cost_dense = None
+
+    @property
+    def degree_bound(self) -> int:
+        """Static max row degree — what topology_degree_bound returns."""
+        return self.topo.max_degree
+
+    # -- jit-side ------------------------------------------------------------
+    def round_slots(self, key):
+        """((M, D) slot mask, available (M,), staleness (M,)) — pure
+        jax, the packed analogue of `round_masks`. Consumes the key with
+        the same split layout as the dense fabric (the adjacency branch
+        of the split is unused: the graph is static)."""
+        _k_adj, k_ev = jax.random.split(key)
+        keep, avail, stale = events_mod.apply_events_sparse(
+            k_ev, self._edge_rows, self._edge_cols, self.m, self.cfg
+        )
+        rows, slots = self._edge_slot
+        slot_mask = jnp.zeros(self.nbr_static.shape, bool
+                              ).at[rows, slots].set(keep)
+        return slot_mask, avail, stale
+
+    def round_masks(self, key, *, affinity=None):
+        """CommsFabric-compatible DENSE view of `round_slots` — the
+        small-M oracle the engine's dense stages read."""
+        del affinity                             # static graph
+        slot_mask, avail, stale = self.round_slots(key)
+        return self.cand_dense(slot_mask), avail, stale
+
+    def cand_dense(self, slot_mask) -> jnp.ndarray:
+        """Scatter a per-slot round mask into the (M, M) candidate
+        matrix — small-M oracle only."""
+        self._check_dense("cand_dense")
+        rows, slots = self._edge_slot
+        keep = slot_mask[rows, slots]
+        return jnp.zeros((self.m, self.m), bool
+                         ).at[rows, np.asarray(self.topo.indices)].set(keep)
+
+    @property
+    def cost(self) -> jnp.ndarray:
+        """Dense Eq. 9 `c` oracle: per-edge costs scattered into (M, M),
+        zeros elsewhere. Off-edge zeros are safe because selection
+        always ANDs with the candidate mask — a subset of the edge set —
+        so non-edge cost entries are never read."""
+        self._check_dense("cost")
+        if self._cost_dense is None:
+            c = np.zeros((self.m, self.m), np.float32)
+            rows, cols = self.topo.edge_endpoints()
+            c[rows, cols] = np.asarray(self.edge_cost)
+            self._cost_dense = jnp.asarray(c)
+        return self._cost_dense
+
+    def _check_dense(self, what: str):
+        if self.m > DENSE_ORACLE_MAX:
+            raise RuntimeError(
+                f"SparseFabric.{what} would materialize an "
+                f"({self.m}, {self.m}) array (M > DENSE_ORACLE_MAX="
+                f"{DENSE_ORACLE_MAX}); large-M consumers must use the "
+                "packed views (nbr_idx / slot_cost / round_slots)"
+            )
+
+    # -- host-side accounting ------------------------------------------------
+    def account_round(self, pattern: str, metrics: dict,
+                      payload_bytes: int, *, name: str = "") -> TrafficStats:
+        """Price one round — p2p gossip only (see class docstring)."""
+        if pattern != "p2p":
+            raise ValueError(
+                f"SparseFabric prices p2p gossip only; strategy "
+                f"{name!r} has comm_pattern {pattern!r} — use the dense "
+                "CommsFabric (CommsConfig.sparse=False) for star "
+                "baselines"
+            )
+        edges = metrics.get("comm_edges", metrics.get("select_mask"))
+        if edges is None:
+            raise KeyError(
+                f"strategy {name!r} has comm_pattern {pattern!r} but "
+                "emitted neither 'comm_edges' nor 'select_mask' in its "
+                "round metrics"
+            )
+        return self.account(np.asarray(edges), payload_bytes)
+
+    def account(self, edges, payload_bytes: int) -> TrafficStats:
+        """Gossip exchange accounting. `edges` is either a per-edge (E,)
+        activity mask (the large-M path) or a dense (M, M) mask from the
+        engine's plan echo — gathered onto the edge set, with a check
+        that no priced edge falls outside the topology (the plan is
+        always cut to the candidate mask, a subset of the edge set)."""
+        edges = np.asarray(edges)
+        if edges.ndim == 1:
+            edge_active = edges.astype(bool)
+        else:
+            rows, cols = self.topo.edge_endpoints()
+            edge_active = edges[rows, cols].astype(bool)
+            if int(edge_active.sum()) != int(edges.sum()):
+                raise ValueError(
+                    "round edges contain pairs outside the sparse "
+                    "topology — the plan was not cut to the fabric's "
+                    "candidate mask"
+                )
+        return simulate_exchange_edges(self.elink, edge_active,
+                                       payload_bytes)
+
+
 def make_fabric(comms_cfg, m: int, *, cost_scale: float = 1.0,
                 channel_rate=None):
-    """CommsFabric from a CommsConfig, or None for the legacy scalar path."""
+    """Fabric from a CommsConfig — `CommsConfig.sparse` selects the
+    CSR/packed-edge SparseFabric; None keeps the legacy scalar path."""
     if comms_cfg is None:
         return None
+    if getattr(comms_cfg, "sparse", False):
+        return SparseFabric(
+            comms_cfg, m, cost_scale=cost_scale, channel_rate=channel_rate
+        )
     return CommsFabric(
         comms_cfg, m, cost_scale=cost_scale, channel_rate=channel_rate
     )

@@ -1,10 +1,19 @@
 """Communication-graph generators — who can talk to whom.
 
-Static generators return a symmetric, self-loop-free boolean (M, M)
-adjacency as a numpy array (sampled once at fabric build time with a fixed
-seed, so a run is reproducible and the graph is a jit-capturable constant).
-The score-driven `dynamic_topk` graph is pure jax and safe to call inside a
-jitted round with a per-round key.
+The CANONICAL static representation is the CSR `SparseTopology`
+(repro.comms.sparse): `make_sparse_topology` builds it by name, and the
+constant-degree families (ring/torus/hier_ring/geo_cell) construct CSR
+directly at O(M·deg) — the only path that scales to M ≥ 65k
+populations. `make_topology` derives the dense boolean (M, M) adjacency
+from CSR on demand — the small-M oracle every dense consumer (legacy
+fabric, tests) reads; the legacy dense generator functions below are
+kept as the parity oracles the property suite compares CSR against.
+
+The sampled families (erdos_renyi/small_world) keep their original
+dense rejection/rewiring samplers — identical RNG stream, identical
+graphs — and pack the result to CSR (an O(M²) build; at large M use the
+constant-degree families). The score-driven `dynamic_topk` graph is
+pure jax, resampled per round inside jit, and has no static CSR.
 
 Adjacency convention: adj[i, j] = True ⇔ client i can pull from peer j.
 All static graphs here are undirected (adj == adj.T).
@@ -16,9 +25,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.selection import select_peers
+from repro.comms.sparse import (
+    SparseTopology,
+    full_csr,
+    geo_cell_csr,
+    hier_ring_csr,
+    ring_csr,
+    torus_csr,
+)
 
 TOPOLOGIES = (
-    "full", "ring", "torus", "erdos_renyi", "small_world", "dynamic",
+    "full", "ring", "torus", "erdos_renyi", "small_world",
+    "hier_ring", "geo_cell", "dynamic",
 )
 
 
@@ -120,43 +138,71 @@ def dynamic_topk(
 
 
 def topology_degree_bound(cfg, m: int):
-    """Max row degree of a CommsConfig's STATIC adjacency, or None when
+    """Max row degree of a CommsConfig's STATIC topology, or None when
     no useful static bound exists (no comms model, dynamic topology).
 
-    Network events only REMOVE edges (repro.comms.events.apply_events:
-    link drops, offline rows/columns, stale-column drops all AND into
-    the adjacency), so the static graph's max degree bounds every
-    round's candidate row degree — the bound the packed gossip-mix
-    kernel needs to engage for undirected `mask | mask.T` plans
-    (kernels.gossip_mix.gossip_degree_bound). Ring/torus/small-world
-    graphs have small constant degree; ER's bound is the sampled graph's
-    actual max (static, seeded). "full" returns m − 1 — valid but
-    useless, and the 2·D ≤ M packing condition correctly rejects it.
+    Network events only REMOVE edges (repro.comms.events.apply_events /
+    apply_events_sparse: link drops, offline rows/columns, stale-column
+    drops all AND into the adjacency), so the static graph's max degree
+    bounds every round's candidate row degree — the bound the packed
+    gossip-mix kernel needs to engage for undirected `mask | mask.T`
+    plans (kernels.gossip_mix.gossip_degree_bound). Computed from the
+    CSR degree array — O(M·deg), no dense matrix. Ring/torus/hier_ring/
+    geo_cell have small constant degree; ER/small-world's bound is the
+    sampled graph's actual max (static, seeded). "full" returns m − 1 —
+    valid but useless, and the 2·D ≤ M packing condition rejects it.
+
+    CONTRACT: the bound covers candidate masks DERIVED FROM this static
+    graph only. The dynamic topology rewires per round (a row's
+    in-degree under `dynamic_topk` symmetrization is not bounded by
+    `dyn_degree`), so it returns None here — and a caller-supplied
+    candidate mask is likewise unbounded. The engine tracks this with
+    `RoundContext.cand_bounded`: stage_plan_gossip packs neighbor lists
+    only when the round's candidates provably came from a static fabric
+    graph, never merely because a candidate mask exists.
     """
     if cfg is None or m <= 0:
         return None
-    adj = make_topology(cfg.topology, m, cfg=cfg, seed=cfg.graph_seed)
-    if adj is None:          # dynamic: resampled per round, no static bound
+    topo = make_sparse_topology(cfg.topology, m, cfg=cfg,
+                                seed=cfg.graph_seed)
+    if topo is None:         # dynamic: resampled per round, no static bound
         return None
-    return int(adj.sum(axis=1).max(initial=0))
+    return topo.max_degree
 
 
-def make_topology(name: str, m: int, *, cfg=None, seed: int = 0) -> np.ndarray:
-    """Static adjacency by name. `dynamic` has no static graph (→ None);
-    callers resample it per round via `dynamic_topk`."""
+def make_sparse_topology(name: str, m: int, *, cfg=None, seed: int = 0):
+    """Canonical static topology by name, as CSR. `dynamic` has no
+    static graph (→ None); callers resample it per round via
+    `dynamic_topk`. Constant-degree families build CSR directly
+    (O(M·deg)); the sampled families run the legacy dense samplers
+    (identical RNG stream → identical graphs) and pack the result."""
     rng = np.random.default_rng(seed)
     if name == "full":
-        return fully_connected(m)
+        return full_csr(m)
     if name == "ring":
-        return ring(m, hops=cfg.ring_hops if cfg else 1)
+        return ring_csr(m, hops=cfg.ring_hops if cfg else 1)
     if name == "torus":
-        return torus(m)
+        return torus_csr(m)
+    if name == "hier_ring":
+        return hier_ring_csr(m, cfg.hier_cluster if cfg else 16)
+    if name == "geo_cell":
+        return geo_cell_csr(m, cfg.geo_cells if cfg else 4, rng)
     if name == "erdos_renyi":
-        return erdos_renyi(m, cfg.er_p if cfg else 0.3, rng)
-    if name == "small_world":
-        return small_world(
-            m, cfg.ws_k if cfg else 4, cfg.ws_beta if cfg else 0.2, rng
+        return SparseTopology.from_dense(
+            erdos_renyi(m, cfg.er_p if cfg else 0.3, rng)
         )
+    if name == "small_world":
+        return SparseTopology.from_dense(small_world(
+            m, cfg.ws_k if cfg else 4, cfg.ws_beta if cfg else 0.2, rng
+        ))
     if name == "dynamic":
         return None
     raise KeyError(f"unknown topology {name!r}; available: {TOPOLOGIES}")
+
+
+def make_topology(name: str, m: int, *, cfg=None, seed: int = 0):
+    """Dense (M, M) boolean adjacency by name — the small-M oracle view,
+    derived from the canonical CSR (`make_sparse_topology`). `dynamic`
+    has no static graph (→ None)."""
+    topo = make_sparse_topology(name, m, cfg=cfg, seed=seed)
+    return None if topo is None else topo.dense()

@@ -104,6 +104,39 @@ def simulate_exchange(link: LinkModel, edges: np.ndarray,
     )
 
 
+def simulate_exchange_edges(elink, edge_active,
+                            payload_bytes: int) -> TrafficStats:
+    """Per-edge gossip accounting on an `EdgeLinkModel` — the O(E) path
+    of `simulate_exchange` for the sparse fabric. `edge_active[e]` marks
+    edge slot e (row pulls col) as exercised this round.
+
+    Byte/message/energy totals are exact and equal to the dense path's;
+    per-client NIC times accumulate in CSR edge order instead of dense
+    row order, so `sim_time_s` matches at fp tolerance (allclose), not
+    bitwise.
+    """
+    act = np.asarray(edge_active, bool)
+    topo = elink.topo
+    m = topo.m
+    rows, cols = topo.edge_endpoints()
+    rows, cols = rows[act], cols[act]
+    n = int(rows.size)
+    recv = np.bincount(rows, minlength=m).astype(np.int64) * payload_bytes
+    sent = np.bincount(cols, minlength=m).astype(np.int64) * payload_bytes
+    if n == 0:
+        return TrafficStats(sent, recv, 0, 0.0, 0.0, 0)
+    t = elink.transfer_time(payload_bytes)[act]
+    inbound = np.bincount(rows, weights=t, minlength=m)
+    outbound = np.bincount(cols, weights=t, minlength=m)
+    sim_time = float(np.maximum(inbound, outbound).max())
+    energy = float(elink.transfer_energy(payload_bytes)[act].sum())
+    return TrafficStats(
+        bytes_sent=sent, bytes_recv=recv, messages=n,
+        sim_time_s=sim_time, energy_j=energy,
+        wire_bytes=n * payload_bytes,
+    )
+
+
 def star_exchange(link: LinkModel, active: np.ndarray, *,
                   up_bytes: int, down_bytes: int) -> TrafficStats:
     """Client↔server round for the centralized baselines.

@@ -229,14 +229,21 @@ class CommsConfig:
     """
     # --- topology -----------------------------------------------------------
     topology: str = "full"      # full | ring | torus | erdos_renyi |
-                                # small_world | dynamic
+                                # small_world | hier_ring | geo_cell |
+                                # dynamic
     ring_hops: int = 1          # ring: connect to ±1..hops neighbors
     er_p: float = 0.3           # erdos_renyi: iid edge probability
     ws_k: int = 4               # small_world: base lattice degree (even)
     ws_beta: float = 0.2        # small_world: rewiring probability
+    hier_cluster: int = 16      # hier_ring: clients per cluster ring
+    geo_cells: int = 4          # geo_cell: grid cells per unit-square side
     dyn_degree: int = 4         # dynamic: score-driven out-degree
     dyn_explore: int = 1        # dynamic: extra random exploration edges
     graph_seed: int = 0         # static graph sampling seed
+    sparse: bool = False        # route the fabric through the CSR
+                                # SparseFabric (O(M·deg) memory; static
+                                # topologies + p2p accounting only —
+                                # comms.fabric.SparseFabric docstring)
 
     # --- link model ---------------------------------------------------------
     link_model: str = "uniform"     # uniform | hetero | geometric
@@ -267,6 +274,11 @@ class CommsConfig:
             raise ValueError(
                 f"stale_mode must be 'drop' or 'serve', "
                 f"got {self.stale_mode!r}"
+            )
+        if self.sparse and self.topology == "dynamic":
+            raise ValueError(
+                "sparse=True requires a static topology (the dynamic "
+                "graph is resampled per round in jax and has no CSR)"
             )
 
 

@@ -40,6 +40,7 @@ from repro.core.scoring import (
     loss_disparity_rows,
     recency_scores,
     score_topk,
+    score_topk_sparse,
     selected_components,
 )
 from repro.core.selection import (
@@ -162,7 +163,32 @@ def make_pfeddst_stages(
         # select_peers returns the explicit empty mask for k = 0
         fused = (use_score_kernel and m > 1 and fl.peers_per_round > 0
                  and fl.selection not in ("threshold", "random"))
-        if fused:
+        # packed-neighbor scoring: the SparseFabric engine path (ctx.nbr
+        # carries the round's padded neighbor lists + per-slot Eq. 9
+        # cost). Pure-jnp O(M·D·P) — independent of use_score_kernel.
+        # Score-integrity adversaries spoof dense cost matrices, so the
+        # sparse branch requires an honest round; threat experiments on
+        # a sparse fabric fall back to the dense branches (which the
+        # engine only feeds at dense-oracle scale, M ≤ DENSE_ORACLE_MAX).
+        sparse = (ctx.nbr is not None and m > 1 and fl.peers_per_round > 0
+                  and fl.selection not in ("threshold", "random")
+                  and ctx.threat is None)
+        if sparse:
+            # ---- 1b/2. packed Eq. 7–9 + top-k (no (M, M) scoring) --------
+            vals, idx, sd_stats = score_topk_sparse(
+                flat, state.last_selected, s_l, state.round,
+                nbr_idx=ctx.nbr["idx"], nbr_valid=ctx.nbr["valid"],
+                alpha=fl.alpha, lam=fl.recency_lambda,
+                comm_cost=ctx.nbr["cost"],
+                k=min(fl.peers_per_round, m - 1),
+            )
+            mask = topk_to_mask(idx, vals, m)
+            ctx.aux.update(s_l=s_l, s_l_rows=s_l_rows,
+                           topk_vals=vals, topk_idx=idx,
+                           sd_stats=sd_stats)
+            fused = True   # downstream (metrics/context) reads the
+            #                fused aux channel — identical keys
+        elif fused:
             # ---- 1b/2. fused Eq. 7–9 + top-k (streaming pipeline) --------
             vals, idx, sd_stats = score_topk(
                 flat, state.last_selected, s_l,
@@ -359,7 +385,11 @@ def make_pfeddst_stages(
         else:
             # fused pipeline: the selected scores ARE the emitted top-k
             # values (mask = scatter of the valid indices ∧ active rows),
-            # and the s_d stats come from the kernel's row statistics
+            # and the s_d stats come from the kernel's row statistics.
+            # On the packed-neighbor branch the row sums cover the
+            # NEIGHBORHOOD only (score_topk_sparse docstring), so
+            # s_d_offdiag_mean reads lower there — same normalizer,
+            # fewer summed pairs — and is not comparable across fabrics.
             vals = ctx.aux["topk_vals"]
             sel = (vals > NEG / 2) & ctx.active[:, None]
             sel_sum = jnp.sum(jnp.where(sel, vals, 0.0))

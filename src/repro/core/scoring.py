@@ -20,6 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.selection import NEG
 from repro.kernels.peer_score import gram_to_cosine
 from repro.models import model as model_mod
 from repro.utils.pytree import tree_flatten_vector
@@ -146,6 +147,99 @@ def score_topk(headers_flat, last_selected, loss_matrix, round_t, *,
         jnp.asarray(round_t, jnp.int32), cost, candidate_mask,
         k=k, alpha=float(alpha), lam=float(lam), impl=impl,
     )
+
+
+def _gather_nbr_cols(arr, nbr_idx, m: int, what: str):
+    """(M, M) dense → (M, D) neighbor columns; (M, D) passes through.
+
+    The ambiguity at D == M resolves to "dense, gather" — packed fabrics
+    always have D < M (no self-loops), so a square input is a matrix.
+    """
+    d = nbr_idx.shape[1]
+    if arr.shape == (m, m):
+        return jnp.take_along_axis(arr, nbr_idx, axis=1)
+    if arr.shape == (m, d):
+        return arr
+    raise ValueError(
+        f"{what} must be ({m}, {m}) dense or ({m}, {d}) neighbor "
+        f"columns, got shape {arr.shape}"
+    )
+
+
+def score_topk_sparse(headers_flat, last_selected, loss_matrix, round_t, *,
+                      nbr_idx, nbr_valid, alpha: float, lam: float,
+                      comm_cost, k: int):
+    """Eq. 7–9 scoring + top-k over PACKED neighbor lists — O(M·D·P).
+
+    The sparse-fabric twin of `score_topk`: client i only ever scores its
+    D ≤ degree-bound neighbors `nbr_idx[i]` (int32, ascending, padding
+    arbitrary), with `nbr_valid[i]` marking the live slots this round
+    (static topology ∧ round events — `SparseFabric.round_slots`). No
+    (M, M) array is formed anywhere on this path.
+
+    last_selected / loss_matrix / comm_cost accept either the dense
+    (M, M) form (gathered here — the small-M parity configuration) or
+    pre-gathered (M, D) neighbor columns (the at-scale path, e.g.
+    `SparseFabric.slot_cost`); comm_cost may also be a scalar.
+
+    → (values (M, k), indices (M, k) GLOBAL client ids, s_d_stats (M, 2)).
+    Invalid slots score exactly NEG; when k exceeds D the tail is padded
+    with (NEG, row-self) entries — `selection.topk_to_mask` drops both,
+    so the resulting mask is identical to the dense pipeline's under the
+    same candidates. Values are elementwise-identical arithmetic to
+    `kernels.ref.select_score_ref` (same normalization, 1e-12 guard,
+    [-1, 1] clip); only the cosine contraction order differs, so value
+    parity vs dense is fp-tolerance, mask parity exact. Ascending
+    neighbor order preserves lax.top_k's lowest-column tie-break.
+
+    Telemetry caveat: s_d_stats[:, 0] sums cosine over the NEIGHBORHOOD
+    (valid slots) plus the diagonal — the dense stats sum all M columns.
+    s_d_stats[:, 1] (the diagonal) matches the dense Gram diagonal at
+    ~1 ulp (row reduction vs matmul accumulation order).
+    """
+    m, _ = headers_flat.shape
+    nbr_idx = jnp.asarray(nbr_idx, jnp.int32)
+    d = nbr_idx.shape[1]
+    xf = headers_flat.astype(jnp.float32)
+    inv = 1.0 / (jnp.sqrt(jnp.sum(xf * xf, axis=1)) + 1e-12)
+    raw = jnp.einsum("mp,mdp->md", xf, xf[nbr_idx])
+    cos = jnp.clip(raw * inv[:, None] * inv[nbr_idx], -1.0, 1.0)
+    last = _gather_nbr_cols(last_selected, nbr_idx, m, "last_selected")
+    dt = jnp.maximum(round_t - last, 0).astype(jnp.float32)
+    s_p = jnp.where(last < 0, 1.0, 1.0 - jnp.exp(-lam * dt))
+    s_l = _gather_nbr_cols(loss_matrix, nbr_idx, m,
+                           "loss_matrix").astype(jnp.float32)
+    c = jnp.asarray(comm_cost, jnp.float32)
+    if c.ndim == 0:
+        c = jnp.broadcast_to(c, (m, d))
+    else:
+        c = _gather_nbr_cols(c, nbr_idx, m, "comm_cost")
+    s = s_p * (alpha * s_l - cos + c)
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+    ok = jnp.asarray(nbr_valid, bool) & (nbr_idx != rows)
+    s = jnp.where(ok, s, NEG)
+    kk = min(k, d)
+    vals, pos = jax.lax.top_k(s, kk)
+    idx = jnp.take_along_axis(nbr_idx, pos, axis=1)
+    # Floor-valued picks come from padded slots whose nbr_idx is an
+    # arbitrary fill (0) — rewrite them to the row's own index so they
+    # can never collide with a real selection in topk_to_mask's
+    # duplicate-index scatter (the diagonal is always masked, so a
+    # False landing there is harmless). The dense path never duplicates
+    # (top_k over distinct columns), so only this path needs it.
+    idx = jnp.where(vals > NEG / 2, idx,
+                    jnp.broadcast_to(rows, vals.shape).astype(idx.dtype))
+    if kk < k:
+        pad = k - kk
+        vals = jnp.concatenate(
+            [vals, jnp.full((m, pad), NEG, vals.dtype)], axis=1)
+        idx = jnp.concatenate(
+            [idx, jnp.broadcast_to(rows, (m, pad)).astype(idx.dtype)],
+            axis=1)
+    diag = jnp.clip(jnp.sum(xf * xf, axis=1) * inv * inv, -1.0, 1.0)
+    nbr_sum = jnp.sum(jnp.where(ok, cos, 0.0), axis=1) + diag
+    stats = jnp.stack([nbr_sum, diag], axis=1)
+    return vals, idx, stats
 
 
 # ---------------------------------------------------------------------------

@@ -246,6 +246,19 @@ class RoundContext:
     active: Any                             # (M,) bool sampled ∧ online
     sampled_idx: Any                        # static-size sampled client ids
     cand: Any = None                        # (M,M) reachable-peer mask
+    # True only when `cand` is cut from a fabric's STATIC graph — the
+    # one case a build-time topology_degree_bound provably covers (events
+    # only remove edges). Caller-supplied masks and dynamic fabrics leave
+    # it False so stage_plan_gossip never packs against a bound the
+    # round's mask doesn't obey (weights_to_neighbors drops overflow
+    # neighbors SILENTLY — see tests/test_sparse_fabric.py regressions).
+    cand_bounded: bool = False
+    # packed neighbor view from a SparseFabric round (None on the dense
+    # path): {"idx": (M,D) int32 ascending neighbor ids, "valid": (M,D)
+    # bool live slots this round, "cost": (M,D) per-slot Eq. 9 c}.
+    # core.rounds.score_select routes scoring through
+    # score_topk_sparse when present.
+    nbr: Any = None
     cost: Any = None                        # (M,M) Eq. 9 c matrix (fabric)
     stale: Any = None                       # (M,) staleness lag
     alive: Any = None                       # (M,) bool membership (openworld)
@@ -368,18 +381,34 @@ def run_round(stages, state, data, key, *, m: int, ratio: float,
     """
     keys = named_streams(key, key_streams)
     cand, cost = candidate_mask, comm_cost
+    cand_bounded, nbr = False, None
     stale = jnp.zeros((m,), jnp.int32)
     if fabric is not None:
-        cand, avail, stale = fabric.round_masks(net_key(key),
-                                                affinity=affinity)
+        if hasattr(fabric, "round_slots"):
+            # packed-fabric path (comms.fabric.SparseFabric): draw the
+            # round's events on the CSR edge list, hand stages the
+            # padded neighbor view. The dense mask/cost oracles are
+            # still materialized for the (M, M) stage library — the
+            # engine round itself is dense-oracle scale (its context
+            # arrays are (M, M)); above DENSE_ORACLE_MAX use the fabric
+            # + score_topk_sparse + gossip kernels directly.
+            slot_mask, avail, stale = fabric.round_slots(net_key(key))
+            nbr = {"idx": fabric.nbr_idx, "valid": slot_mask,
+                   "cost": fabric.slot_cost}
+            cand = fabric.cand_dense(slot_mask)
+        else:
+            cand, avail, stale = fabric.round_masks(net_key(key),
+                                                    affinity=affinity)
         cost = fabric.cost
+        cand_bounded = not fabric.is_dynamic
         available = avail if available is None else available & avail
     idx, active = sample_participants(keys[sample_stream], m, ratio)
     if available is not None:
         active = active & available
     ctx = RoundContext(
         m=m, data=data, keys=keys, active=active, sampled_idx=idx,
-        cand=cand, cost=cost, stale=stale,
+        cand=cand, cand_bounded=cand_bounded, nbr=nbr, cost=cost,
+        stale=stale,
     )
     for stage in stages:
         # named_scope is pure XLA metadata (numerics untouched): device
@@ -508,9 +537,14 @@ def stage_plan_gossip(fl, *, directed: bool, stream: str = "nbr",
         nbr = nbr & ctx.active[:, None]
         weights = selection_to_weights(nbr, include_self=True)
         nbr_idx = nbr_w = None
-        # the topology bound holds only when the plan was actually cut
-        # to the fabric's candidates (cand ⊆ static adjacency)
-        topo = topo_degree if ctx.cand is not None else None
+        # the topology bound holds only when the round's candidates are
+        # provably a subset of the static graph the bound was computed
+        # from — i.e. the fabric cut them (events only remove edges).
+        # `ctx.cand is not None` is NOT sufficient: a caller-supplied
+        # candidate_mask or a dynamic fabric's resampled adjacency can
+        # exceed the build-time bound, and weights_to_neighbors would
+        # silently drop the overflow neighbors (wrong mix, no error).
+        topo = topo_degree if ctx.cand_bounded else None
         d_max = gossip_degree_bound(fl.peers_per_round, ctx.m,
                                     directed=directed, topo_degree=topo)
         if kernel_ops.resolve_mix_impl(ctx.m) != "dense" \
@@ -677,6 +711,35 @@ def constrain_clients(tree, m: int, axis: str = "data"):
         return x
 
     return jax.tree_util.tree_map(c, tree)
+
+
+def gather_neighbors(tree, nbr_idx, m: int, axis: str = "data"):
+    """Per-NEIGHBORHOOD view of a leading-M client pytree: every (M, ...)
+    leaf becomes (M, D, ...) with row i holding the D padded neighbors'
+    slices `leaf[nbr_idx[i]]` (pad slots carry whatever client the fill
+    index names — mask with the fabric's valid slots before reducing).
+
+    This is how a SparseFabric round reads peer state at O(M·D·state)
+    instead of all-to-all: the gather's output keeps the leading client
+    axis, so under the population mesh it stays sharded on `axis` —
+    XLA lowers the cross-shard reads of `tree[nbr_idx]` to point-to-point
+    collectives over the "data" mesh axis (the same axis
+    `place_population` shards the population on), never materializing an
+    (M, M, ...) exchange. Non-client leaves pass through untouched.
+    """
+    idx = jnp.asarray(nbr_idx, jnp.int32)
+
+    def g(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == m:
+            out = x[idx]
+            if axis is not None:
+                out = constrain(
+                    out, P(axis, *([None] * (out.ndim - 1)))
+                )
+            return out
+        return x
+
+    return jax.tree_util.tree_map(g, tree)
 
 
 def population_mesh() -> Optional[Mesh]:

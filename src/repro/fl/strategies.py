@@ -427,6 +427,14 @@ def make_strategy(name: str, cfg: ModelConfig, fl: FLConfig,
     fabric = make_fabric(fl.comms, fl.num_clients, cost_scale=fl.comm_cost,
                          channel_rate=rates)
     spec = make_spec(name, cfg, fl, steps_per_epoch)
+    if (fabric is not None and hasattr(fabric, "round_slots")
+            and spec.comm_pattern != "p2p"):
+        raise ValueError(
+            f"CommsConfig(sparse=True) models peer-to-peer links only; "
+            f"strategy {name!r} uses comm_pattern="
+            f"{spec.comm_pattern!r}. Centralized baselines need the "
+            "dense fabric (sparse=False) for star accounting."
+        )
     if not spec.versioned:
         import math
         import warnings

@@ -88,6 +88,26 @@ def select_score_ref(x, last_selected, s_l, t, cost, candidate_mask=None,
     return s, cos
 
 
+def select_score_nbr_ref(x, last_selected, s_l, t, cost, nbr_idx, nbr_valid,
+                         *, alpha: float, lam: float):
+    """(M, D) neighbor-column Eq. 9 scores GATHERED from the dense oracle
+    — the parity reference for `core.scoring.score_topk_sparse`. The
+    dense (M, M) score matrix is computed with the candidate mask set to
+    the scattered valid slots, then sampled at each packed position;
+    invalid slots read NEG directly. Small-M tests only (materializes
+    the dense matrix)."""
+    m = x.shape[0]
+    nbr_idx = jnp.asarray(nbr_idx, jnp.int32)
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+    ok = jnp.asarray(nbr_valid, bool) & (nbr_idx != rows)
+    cand = jnp.zeros((m, m), bool).at[
+        jnp.broadcast_to(rows, nbr_idx.shape), nbr_idx
+    ].max(ok)
+    s, _ = select_score_ref(x, last_selected, s_l, t, cost, cand,
+                            alpha=alpha, lam=lam)
+    return jnp.where(ok, jnp.take_along_axis(s, nbr_idx, axis=1), NEG)
+
+
 def select_topk_ref(x, last_selected, s_l, t, cost, candidate_mask=None,
                     *, k: int, alpha: float, lam: float):
     """→ (values (M, k), indices (M, k), stats (M, 2)) exactly as the

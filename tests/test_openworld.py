@@ -46,7 +46,10 @@ except ImportError:  # pragma: no cover
 
 
 def _ctx(m, key=None, active=None, cand=None):
-    """Minimal RoundContext for stage-level tests."""
+    """Minimal RoundContext for stage-level tests. A `cand` passed here
+    is always cut from a static topology, so mark it bounded the way
+    `run_round` does for a static fabric (stage_plan_gossip only packs
+    against the topology degree bound when the flag certifies it)."""
     if key is None:
         key = jax.random.PRNGKey(0)
     if active is None:
@@ -54,6 +57,7 @@ def _ctx(m, key=None, active=None, cand=None):
     return RoundContext(
         m=m, data={}, keys={"act": key, "nbr": jax.random.fold_in(key, 1)},
         active=active, sampled_idx=jnp.arange(m), cand=cand,
+        cand_bounded=cand is not None,
     )
 
 

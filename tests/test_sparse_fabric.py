@@ -1,0 +1,705 @@
+"""Sparse population fabric — CSR↔dense parity properties + regressions.
+
+The contract under test (docs/architecture.md, "sparse population
+fabric"): the packed CSR representation is CANONICAL and every fabric
+artifact it produces — topology, per-edge link attributes, Eq. 9 cost
+columns, event masks, degree bounds, traffic accounting — must be
+bitwise identical to the dense (M, M) oracle path wherever a dense
+oracle exists (M ≤ DENSE_ORACLE_MAX). Selection VALUES are exempt from
+the bitwise bar (the gathered cosine contraction orders differently);
+there the property is exact MASK equality + fp-tolerance values.
+
+Runs property-based when hypothesis is installed, a fixed deterministic
+grid otherwise (same checker functions — the fallback never weakens an
+assertion, only the sampling).
+"""
+import importlib.util
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms import (
+    DENSE_ORACLE_MAX,
+    CommsFabric,
+    SparseFabric,
+    SparseTopology,
+    apply_events_sparse,
+    cost_scores,
+    csr_from_edges,
+    drop_edges,
+    drop_links_pairfold,
+    edge_cost_scores,
+    make_edge_link_model,
+    make_fabric,
+    make_link_model,
+    make_sparse_topology,
+    make_topology,
+    simulate_exchange,
+    simulate_exchange_edges,
+    topology_degree_bound,
+)
+from repro.comms.events import availability_mask, staleness_rounds
+from repro.comms.linkcost import GEO_EXACT_MAX, REF_PAYLOAD_BYTES
+from repro.configs.base import CommsConfig, FLConfig
+from repro.core.scoring import score_topk_sparse
+from repro.core.selection import NEG, topk_to_mask
+from repro.kernels.gossip_mix import (
+    gossip_degree_bound,
+    weights_to_neighbors,
+)
+from repro.kernels.ref import select_score_nbr_ref, select_topk_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # degrade to a fixed-grid check, don't skip
+    HAS_HYPOTHESIS = False
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# every static generator; erdos_renyi/small_world keep their legacy dense
+# samplers (packed afterwards), so they need m ≥ 2 (the m=1 sampler is a
+# pre-existing dense-path limitation, not a CSR one)
+STATIC_TOPOS = ("full", "ring", "torus", "erdos_renyi", "small_world",
+                "hier_ring", "geo_cell")
+SAMPLED_MIN_M = {"erdos_renyi": 2, "small_world": 2}
+
+
+def _cfg(topo, m=None, **kw):
+    kw.setdefault("hier_cluster", 4)
+    kw.setdefault("geo_cells", 3)
+    return CommsConfig(topology=topo, **kw)
+
+
+def _load_module(path, name):
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# topology: CSR ↔ dense bitwise parity + structural invariants
+# ---------------------------------------------------------------------------
+
+def _check_topology_parity(topo_name, m, seed):
+    if m < SAMPLED_MIN_M.get(topo_name, 1):
+        return
+    cfg = _cfg(topo_name)
+    sparse = make_sparse_topology(topo_name, m, cfg=cfg, seed=seed)
+    dense = make_topology(topo_name, m, cfg=cfg, seed=seed)
+    np.testing.assert_array_equal(sparse.dense(), np.asarray(dense))
+    # structural invariants every generator must satisfy
+    assert sparse.is_symmetric()
+    rows, cols = sparse.edge_endpoints()
+    assert (rows != cols).all(), "self loop"
+    # roundtrip and degree bound
+    rt = SparseTopology.from_dense(sparse.dense())
+    np.testing.assert_array_equal(rt.indptr, sparse.indptr)
+    np.testing.assert_array_equal(rt.indices, sparse.indices)
+    assert sparse.max_degree == int(np.asarray(dense).sum(1).max(initial=0))
+    # padded() scatters back to the same dense adjacency
+    nbr, valid = sparse.padded()
+    back = np.zeros((m, m), bool)
+    r = np.broadcast_to(np.arange(m)[:, None], nbr.shape)[valid]
+    back[r, nbr[valid]] = True
+    np.testing.assert_array_equal(back, sparse.dense())
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(topo=st.sampled_from(STATIC_TOPOS), m=st.integers(1, 48),
+           seed=st.integers(0, 2**31 - 1))
+    def test_topology_csr_dense_parity(topo, m, seed):
+        _check_topology_parity(topo, m, seed)
+else:
+    @pytest.mark.parametrize("topo", STATIC_TOPOS)
+    @pytest.mark.parametrize("m,seed", [(1, 0), (2, 1), (5, 2), (12, 3),
+                                        (16, 4), (33, 5), (48, 6)])
+    def test_topology_csr_dense_parity(topo, m, seed):
+        _check_topology_parity(topo, m, seed)
+
+
+def test_new_generators_degree_bounds():
+    """hier_ring ≤ 4 and geo_cell ≤ 6 by construction, any m."""
+    for m in (1, 2, 3, 7, 16, 33, 128, 257):
+        h = make_sparse_topology("hier_ring", m,
+                                 cfg=_cfg("hier_ring"), seed=0)
+        assert h.max_degree <= 4
+        g = make_sparse_topology("geo_cell", m, cfg=_cfg("geo_cell"),
+                                 seed=0)
+        assert g.max_degree <= 6
+        assert h.is_symmetric() and g.is_symmetric()
+        # hier_ring guarantees connectivity (cluster rings + gateway
+        # ring); geo_cell intentionally does not (diagonally-occupied
+        # cells have no adjacent-cell gateway link) — degree bound and
+        # symmetry are its whole contract.
+        if m > 1:
+            seen = {0}
+            frontier = [0]
+            dense = h.dense()
+            while frontier:
+                i = frontier.pop()
+                for j in np.nonzero(dense[i])[0]:
+                    if j not in seen:
+                        seen.add(int(j))
+                        frontier.append(int(j))
+            assert len(seen) == m, f"hier_ring disconnected at m={m}"
+
+
+def test_csr_validation_rejects_malformed():
+    with pytest.raises(ValueError):
+        SparseTopology(2, np.array([0, 1, 1]), np.array([0]))  # self loop
+    with pytest.raises(ValueError):
+        SparseTopology(2, np.array([0, 2]), np.array([1]))  # bad indptr
+    with pytest.raises(ValueError):
+        SparseTopology(2, np.array([0, 1, 2]), np.array([5, 0]))  # range
+    t = csr_from_edges(3, np.array([0, 1]), np.array([1, 2]))
+    assert t.num_edges == 4  # symmetrized
+
+
+# ---------------------------------------------------------------------------
+# link cost: per-edge attributes bitwise == dense matrices at edges
+# ---------------------------------------------------------------------------
+
+def _check_linkcost_parity(topo_name, link_model, m, seed):
+    if m < max(2, SAMPLED_MIN_M.get(topo_name, 1)):
+        return  # t_min_ref needs one off-diagonal pair
+    cfg = _cfg(topo_name, link_model=link_model, graph_seed=seed)
+    topo = make_sparse_topology(topo_name, m, cfg=cfg, seed=seed)
+    dense_link = make_link_model(cfg, m)
+    elink = make_edge_link_model(cfg, topo)
+    rows, cols = topo.edge_endpoints()
+    for attr in ("bandwidth", "latency_s", "energy_j_per_byte"):
+        d = np.asarray(getattr(dense_link, attr))[rows, cols]
+        np.testing.assert_array_equal(np.asarray(getattr(elink, attr)), d)
+    # Eq. 9 cost columns: bitwise at every edge position
+    cd = np.asarray(cost_scores(dense_link, scale=1.7))[rows, cols]
+    np.testing.assert_array_equal(
+        np.asarray(edge_cost_scores(elink, scale=1.7)), cd)
+    # the global normalizer is the DENSE min — even for edges not in
+    # the sparse graph (exact for geometric up to GEO_EXACT_MAX)
+    if link_model != "geometric" or m <= GEO_EXACT_MAX:
+        t = np.asarray(dense_link.transfer_time(REF_PAYLOAD_BYTES))
+        assert elink.t_min_ref == t[~np.eye(m, dtype=bool)].min()
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(topo=st.sampled_from(STATIC_TOPOS),
+           link=st.sampled_from(["uniform", "hetero", "geometric"]),
+           m=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+    def test_linkcost_csr_dense_parity(topo, link, m, seed):
+        _check_linkcost_parity(topo, link, m, seed)
+else:
+    @pytest.mark.parametrize("topo", STATIC_TOPOS)
+    @pytest.mark.parametrize("link", ["uniform", "hetero", "geometric"])
+    @pytest.mark.parametrize("m,seed", [(2, 0), (9, 1), (16, 2), (40, 3)])
+    def test_linkcost_csr_dense_parity(topo, link, m, seed):
+        _check_linkcost_parity(topo, link, m, seed)
+
+
+# ---------------------------------------------------------------------------
+# events: sparse draws vs the pair-fold dense oracle
+# ---------------------------------------------------------------------------
+
+def _check_events_parity(m, p_drop, avail, p_stale, seed):
+    cfg = _cfg("torus", p_link_drop=p_drop, availability=avail,
+               p_stale=p_stale, max_staleness=3)
+    topo = make_sparse_topology("torus", m, cfg=cfg, seed=0)
+    rows, cols = topo.edge_endpoints()
+    key = jax.random.PRNGKey(seed)
+    keep, av_s, st_s = apply_events_sparse(
+        key, jnp.asarray(rows), jnp.asarray(cols), m, cfg)
+    # dense oracle: same key split, pair-fold dropout grid
+    k_drop, k_avail, k_stale = jax.random.split(key, 3)
+    cand = drop_links_pairfold(k_drop, jnp.asarray(topo.dense()), p_drop)
+    av_d = availability_mask(k_avail, m, avail)
+    st_d = staleness_rounds(k_stale, m, p_stale, 3)
+    cand = cand & av_d[:, None] & av_d[None, :]
+    cand = cand & (st_d == 0)[None, :]
+    np.testing.assert_array_equal(np.asarray(av_s), np.asarray(av_d))
+    np.testing.assert_array_equal(np.asarray(st_s), np.asarray(st_d))
+    np.testing.assert_array_equal(np.asarray(keep),
+                                  np.asarray(cand)[rows, cols])
+    # pair-keyed dropout + two-endpoint availability keep the edge set
+    # symmetric; staleness is DIRECTIONAL (it removes only the stale
+    # TARGET column), so symmetry is asserted without it
+    if p_stale == 0.0:
+        kept = np.zeros((m, m), bool)
+        kept[rows, cols] = np.asarray(keep)
+        np.testing.assert_array_equal(kept, kept.T)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(m=st.integers(2, 32), p_drop=st.floats(0.0, 0.9),
+           avail=st.floats(0.3, 1.0), p_stale=st.floats(0.0, 0.5),
+           seed=st.integers(0, 2**31 - 1))
+    def test_events_sparse_dense_parity(m, p_drop, avail, p_stale, seed):
+        _check_events_parity(m, p_drop, avail, p_stale, seed)
+else:
+    @pytest.mark.parametrize("m,p_drop,avail,p_stale,seed", [
+        (2, 0.0, 1.0, 0.0, 0), (8, 0.3, 0.8, 0.2, 1),
+        (16, 0.5, 0.5, 0.4, 2), (32, 0.9, 0.9, 0.1, 3),
+    ])
+    def test_events_sparse_dense_parity(m, p_drop, avail, p_stale, seed):
+        _check_events_parity(m, p_drop, avail, p_stale, seed)
+
+
+def test_drop_edges_zero_p_is_identity():
+    rows = jnp.arange(5)
+    cols = (rows + 1) % 6
+    assert np.asarray(
+        drop_edges(jax.random.PRNGKey(0), rows, cols, 0.0)).all()
+
+
+# ---------------------------------------------------------------------------
+# fabric: round masks, cost, accounting — dense twin at p_link_drop = 0
+# ---------------------------------------------------------------------------
+
+def _check_fabric_parity(topo_name, m, seed):
+    if m < max(2, SAMPLED_MIN_M.get(topo_name, 1)):
+        return
+    kw = dict(link_model="hetero", graph_seed=seed, availability=0.8,
+              p_stale=0.2, max_staleness=2, p_link_drop=0.0)
+    fd = make_fabric(_cfg(topo_name, **kw), m)
+    fs = make_fabric(_cfg(topo_name, **kw, sparse=True), m)
+    assert isinstance(fd, CommsFabric) and isinstance(fs, SparseFabric)
+    adj = np.asarray(fd.static_adj)
+    np.testing.assert_array_equal(np.asarray(fd.cost) * adj,
+                                  np.asarray(fs.cost))
+    assert fs.degree_bound == int(adj.sum(1).max(initial=0))
+    key = jax.random.PRNGKey(seed + 1)
+    cand_d, av_d, st_d = fd.round_masks(key)
+    cand_s, av_s, st_s = fs.round_masks(key)
+    np.testing.assert_array_equal(np.asarray(cand_d), np.asarray(cand_s))
+    np.testing.assert_array_equal(np.asarray(av_d), np.asarray(av_s))
+    np.testing.assert_array_equal(np.asarray(st_d), np.asarray(st_s))
+    # accounting: byte/message/energy exact; NIC time at fp tolerance
+    metrics = {"select_mask": np.asarray(cand_s)}
+    sd = fd.account_round("p2p", dict(metrics), 4096)
+    ss = fs.account_round("p2p", dict(metrics), 4096)
+    np.testing.assert_array_equal(sd.bytes_sent, ss.bytes_sent)
+    np.testing.assert_array_equal(sd.bytes_recv, ss.bytes_recv)
+    assert sd.messages == ss.messages and sd.wire_bytes == ss.wire_bytes
+    assert np.isclose(sd.energy_j, ss.energy_j, rtol=1e-12)
+    assert np.isclose(sd.sim_time_s, ss.sim_time_s, rtol=1e-9)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(topo=st.sampled_from(STATIC_TOPOS), m=st.integers(2, 40),
+           seed=st.integers(0, 2**31 - 1))
+    def test_fabric_sparse_dense_parity(topo, m, seed):
+        _check_fabric_parity(topo, m, seed)
+else:
+    @pytest.mark.parametrize("topo", STATIC_TOPOS)
+    @pytest.mark.parametrize("m,seed", [(2, 0), (12, 1), (40, 2)])
+    def test_fabric_sparse_dense_parity(topo, m, seed):
+        _check_fabric_parity(topo, m, seed)
+
+
+def test_sparse_fabric_rejects_unsupported():
+    with pytest.raises(ValueError):
+        CommsConfig(topology="dynamic", sparse=True)
+    fab = SparseFabric(CommsConfig(topology="ring", sparse=True), 8)
+    assert fab.degree_bound == 2
+    with pytest.raises(ValueError):
+        fab.account_round("star", {}, 10)
+
+
+def test_dense_oracle_guard():
+    fab = SparseFabric(CommsConfig(topology="ring", sparse=True),
+                       DENSE_ORACLE_MAX + 1)
+    with pytest.raises(RuntimeError):
+        _ = fab.cost
+    with pytest.raises(RuntimeError):
+        fab.round_masks(jax.random.PRNGKey(0))
+    # the packed path stays available
+    slot_mask, avail, stale = fab.round_slots(jax.random.PRNGKey(0))
+    assert slot_mask.shape == fab.nbr_idx.shape
+
+
+def test_account_rejects_offgraph_edges():
+    fab = SparseFabric(CommsConfig(topology="ring", sparse=True), 8)
+    edges = np.zeros((8, 8), bool)
+    edges[0, 4] = True  # not a ring edge
+    with pytest.raises(ValueError):
+        fab.account(edges, 100)
+
+
+# ---------------------------------------------------------------------------
+# selection: packed Eq. 7–9 + top-k vs the dense oracle
+# ---------------------------------------------------------------------------
+
+def _check_selection_parity(topo_name, m, k, seed):
+    if m < max(2, SAMPLED_MIN_M.get(topo_name, 1)):
+        return
+    k = max(1, min(k, m - 1))  # the engine's own clamp
+    kw = dict(link_model="hetero", graph_seed=seed, availability=0.85,
+              p_stale=0.1, max_staleness=2, p_link_drop=0.0)
+    fd = make_fabric(_cfg(topo_name, **kw), m)
+    fs = make_fabric(_cfg(topo_name, **kw, sparse=True), m)
+    key = jax.random.PRNGKey(seed)
+    cand_d, _, _ = fd.round_masks(key)
+    slot_mask, _, _ = fs.round_slots(key)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, 16)), jnp.float32)
+    last = jnp.asarray(rng.integers(-1, 6, (m, m)), jnp.int32)
+    loss = jnp.asarray(rng.standard_normal((m, m)) ** 2, jnp.float32)
+    vd, idxd, _ = select_topk_ref(x, last, loss, 7, fd.cost, cand_d,
+                                  k=k, alpha=1.0, lam=0.5)
+    vs, idxs, _ = score_topk_sparse(
+        x, last, loss, 7, nbr_idx=fs.nbr_idx, nbr_valid=slot_mask,
+        alpha=1.0, lam=0.5, comm_cost=fs.slot_cost, k=k)
+    # the acceptance bar: masks EXACTLY equal, values at fp tolerance
+    np.testing.assert_array_equal(np.asarray(topk_to_mask(idxs, vs, m)),
+                                  np.asarray(topk_to_mask(idxd, vd, m)))
+    valid_d = np.asarray(vd) > NEG / 2
+    valid_s = np.asarray(vs) > NEG / 2
+    np.testing.assert_array_equal(valid_s.sum(1), valid_d.sum(1))
+    for i in range(m):
+        np.testing.assert_allclose(
+            np.sort(np.asarray(vs)[i][valid_s[i]]),
+            np.sort(np.asarray(vd)[i][valid_d[i]]),
+            rtol=1e-5, atol=1e-5)
+    # per-column scores vs the gathered dense reference
+    col_ref = select_score_nbr_ref(x, last, loss, 7, fd.cost,
+                                   fs.nbr_idx, slot_mask,
+                                   alpha=1.0, lam=0.5)
+    d = fs.nbr_idx.shape[1]
+    vfull, _, _ = score_topk_sparse(
+        x, last, loss, 7, nbr_idx=fs.nbr_idx, nbr_valid=slot_mask,
+        alpha=1.0, lam=0.5, comm_cost=fs.slot_cost, k=d)
+    np.testing.assert_allclose(
+        np.asarray(vfull),
+        np.sort(np.asarray(col_ref), axis=1)[:, ::-1],
+        rtol=1e-5, atol=1e-5)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(topo=st.sampled_from(STATIC_TOPOS), m=st.integers(2, 48),
+           k=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+    def test_selection_sparse_dense_parity(topo, m, k, seed):
+        _check_selection_parity(topo, m, k, seed)
+else:
+    @pytest.mark.parametrize("topo", STATIC_TOPOS)
+    @pytest.mark.parametrize("m,k,seed", [(2, 1, 0), (16, 3, 1),
+                                          (48, 8, 2)])
+    def test_selection_sparse_dense_parity(topo, m, k, seed):
+        _check_selection_parity(topo, m, k, seed)
+
+
+def test_score_topk_sparse_input_forms_bitwise():
+    """Dense (M, M) context vs pre-gathered (M, D) columns: identical."""
+    m = 24
+    fs = make_fabric(_cfg("torus", sparse=True), m)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((m, 8)), jnp.float32)
+    last = jnp.asarray(rng.integers(-1, 6, (m, m)), jnp.int32)
+    loss = jnp.asarray(rng.standard_normal((m, m)) ** 2, jnp.float32)
+    a = score_topk_sparse(x, last, loss, 3, nbr_idx=fs.nbr_idx,
+                          nbr_valid=fs.nbr_static, alpha=1.0, lam=0.5,
+                          comm_cost=fs.slot_cost, k=3)
+    b = score_topk_sparse(
+        x, jnp.take_along_axis(last, fs.nbr_idx, axis=1),
+        jnp.take_along_axis(loss, fs.nbr_idx, axis=1), 3,
+        nbr_idx=fs.nbr_idx, nbr_valid=fs.nbr_static, alpha=1.0, lam=0.5,
+        comm_cost=fs.slot_cost, k=3)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_score_topk_sparse_pad_never_collides():
+    """Regression: padded slots carry fill index 0; a floor-valued pick
+    must not overwrite client 0's genuine selection in topk_to_mask's
+    duplicate-index scatter."""
+    m, d = 4, 3
+    nbr = jnp.asarray([[1, 0, 0],   # row 0: slots 1 real, pads → 0
+                       [0, 2, 0],
+                       [1, 3, 0],
+                       [2, 0, 0]], jnp.int32)
+    valid = jnp.asarray([[True, False, False],
+                         [True, True, False],
+                         [True, True, False],
+                         [True, False, False]])
+    x = jnp.ones((m, 4), jnp.float32)
+    last = jnp.full((m, d), -1, jnp.int32)
+    loss = jnp.ones((m, d), jnp.float32)
+    vals, idx, _ = score_topk_sparse(
+        x, last, loss, 0, nbr_idx=nbr, nbr_valid=valid,
+        alpha=1.0, lam=0.5, comm_cost=1.0, k=3)
+    mask = np.asarray(topk_to_mask(idx, vals, m))
+    assert mask[1, 0] and mask[1, 2]   # k=3 > 2 valid: both kept
+    # floor entries mapped to self — never to the fill index
+    floor = np.asarray(vals) <= NEG / 2
+    np.testing.assert_array_equal(np.asarray(idx)[floor],
+                                  np.repeat(np.arange(m), 3).reshape(
+                                      m, 3)[floor])
+
+
+# ---------------------------------------------------------------------------
+# degree-bound contract — the "events only remove edges" audit
+# ---------------------------------------------------------------------------
+
+def test_degree_bound_matches_dense_and_is_tight():
+    for topo in STATIC_TOPOS:
+        for m in (2, 9, 24):
+            cfg = _cfg(topo, graph_seed=1)
+            bound = topology_degree_bound(cfg, m)
+            adj = make_topology(topo, m, cfg=cfg, seed=cfg.graph_seed)
+            assert bound == int(np.asarray(adj).sum(1).max(initial=0))
+
+
+def test_degree_bound_dynamic_is_none():
+    assert topology_degree_bound(CommsConfig(topology="dynamic"), 16) \
+        is None
+
+
+def test_round_candidates_never_exceed_static_bound():
+    """Events only REMOVE edges: every round's candidate in-degree and
+    out-degree stay within the static bound — including under heavy
+    dropout/staleness. This is the invariant `RoundContext.cand_bounded`
+    certifies to stage_plan_gossip."""
+    for topo in ("hier_ring", "geo_cell", "torus"):
+        cfg = _cfg(topo, p_link_drop=0.4, availability=0.7, p_stale=0.3,
+                   max_staleness=2, graph_seed=3, sparse=True)
+        m = 32
+        fab = make_fabric(cfg, m)
+        bound = fab.degree_bound
+        for r in range(5):
+            cand, _, _ = fab.round_masks(jax.random.PRNGKey(r))
+            c = np.asarray(cand)
+            assert c.sum(1).max(initial=0) <= bound
+            assert c.sum(0).max(initial=0) <= bound
+
+
+def test_gossip_plan_not_packed_for_unbounded_candidates():
+    """Satellite-3 regression: an explicit candidate_mask (run_round's
+    direct hook, NOT fabric-derived) can be denser than the config's
+    static topology. The old gate `ctx.cand is not None` packed against
+    the stale topo_degree and weights_to_neighbors silently DROPPED the
+    overflow neighbors; the `cand_bounded` gate must refuse to pack.
+    """
+    from repro.fl.engine import RoundContext, stage_plan_gossip
+
+    m, k = 16, 12
+    fl = FLConfig(num_clients=m, peers_per_round=k)
+    # topo_degree=2 (a ring bound) while the candidates are ALL-PAIRS
+    stage = stage_plan_gossip(fl, directed=False, topo_degree=2)
+    cand = jnp.asarray(~np.eye(m, dtype=bool))
+    keys = {"nbr": jax.random.PRNGKey(0)}
+    ctx = RoundContext(
+        m=m, data=None, keys=keys, active=jnp.ones((m,), bool),
+        sampled_idx=jnp.arange(m), cand=cand, cand_bounded=False,
+    )
+    stage(None, ctx)
+    plan_unbounded = ctx.plan
+    # an undirected k=12 plan on M=16 can exceed in-degree 2·(k+1) — the
+    # bound path must NOT have been taken on an unbounded mask
+    if plan_unbounded.nbr_idx is not None:
+        # packing may still engage via the k-based bound — then it must
+        # REPRODUCE the dense weights, not truncate them
+        dense = np.zeros((m, m), np.float32)
+        rows = np.arange(m)[:, None]
+        np.add.at(dense, (np.broadcast_to(rows, plan_unbounded.nbr_idx.shape),
+                          np.asarray(plan_unbounded.nbr_idx)),
+                  np.asarray(plan_unbounded.nbr_w))
+        np.testing.assert_allclose(dense, np.asarray(plan_unbounded.weights),
+                                   atol=1e-7)
+
+    # same mask presented as fabric-bounded with a LYING bound of 2:
+    # this is the configuration the old code silently mangled. Assert
+    # the engine no longer creates it: a fabric-backed context gets
+    # cand_bounded=True only from run_round, and run_round only sets it
+    # when the mask really is fabric-cut. Here we show the mangling is
+    # real if the gate were bypassed — the documented hazard.
+    d_max = gossip_degree_bound(k, m, directed=False, topo_degree=2)
+    full_w = jnp.ones((m, m), jnp.float32) / m
+    idx, w = weights_to_neighbors(full_w, d_max)
+    assert idx.shape[1] < m  # truncation: weight mass silently lost
+    assert float(w.sum()) < float(full_w.sum()) - 0.5
+
+
+def test_run_round_sets_cand_bounded_only_for_static_fabric():
+    from repro.fl.engine import run_round
+
+    m = 8
+    seen = {}
+
+    def probe(state, ctx):
+        seen["bounded"] = ctx.cand_bounded
+        seen["nbr"] = ctx.nbr
+        from repro.fl.engine import ExchangePlan
+        ctx.plan = ExchangePlan("p2p", active=ctx.active)
+        return state
+
+    def run(fabric=None, **kw):
+        seen.clear()
+        run_round((probe,), {}, None, jax.random.PRNGKey(0), m=m,
+                  ratio=1.0, key_streams=("act", "nbr"), fabric=fabric,
+                  **kw)
+        return dict(seen)
+
+    # no fabric, explicit mask → unbounded, no packed view
+    got = run(candidate_mask=jnp.ones((m, m), bool))
+    assert got["bounded"] is False and got["nbr"] is None
+    # static dense fabric → bounded
+    got = run(fabric=make_fabric(_cfg("ring"), m))
+    assert got["bounded"] is True and got["nbr"] is None
+    # static sparse fabric → bounded + packed neighbor view
+    got = run(fabric=make_fabric(_cfg("ring", sparse=True), m))
+    assert got["bounded"] is True and got["nbr"] is not None
+    assert got["nbr"]["idx"].shape == got["nbr"]["valid"].shape
+    # dynamic fabric → NOT bounded (resampled adjacency each round)
+    got = run(fabric=make_fabric(CommsConfig(topology="dynamic"), m))
+    assert got["bounded"] is False
+
+
+def test_sparse_fabric_star_strategy_rejected(tiny_cnn):
+    from repro.fl import make_strategy
+
+    fl = FLConfig(num_clients=6, comms=_cfg("ring", sparse=True))
+    with pytest.raises(ValueError, match="sparse"):
+        make_strategy("fedavg", tiny_cnn, fl, 1)
+
+
+# ---------------------------------------------------------------------------
+# bench gating: new sparse BENCH leaves ride the *_s 15% gate
+# ---------------------------------------------------------------------------
+
+def test_bench_diff_gates_sparse_entries():
+    bd = _load_module(os.path.join(REPO, "tools", "bench_diff.py"),
+                      "bench_diff")
+    old = {"sparse_cases": [{"M": 16384, "k": 4,
+                             "sparse_wall_s": 0.01,
+                             "fabric_bytes": 700000}],
+           "sparse_rounds": {"M65536": {"sparse_wall_s": 0.2,
+                                        "account_wall_s": 0.004}}}
+    import json as _json
+    new = _json.loads(_json.dumps(old))
+    _, regressions = bd.diff(old, new, threshold=0.15)
+    assert regressions == []
+    new["sparse_cases"][0]["sparse_wall_s"] = 0.013     # +30%
+    new["sparse_rounds"]["M65536"]["account_wall_s"] = 0.006
+    _, regressions = bd.diff(old, new, threshold=0.15)
+    assert len(regressions) == 2
+
+
+# ---------------------------------------------------------------------------
+# engine round: sparse fabric vs dense fabric, bitwise population state
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_round_parity_sparse_vs_dense_fabric(tiny_cnn):
+    from repro.data.synthetic import client_datasets_cifar
+    from repro.fl import make_strategy
+
+    kw = dict(hier_cluster=4, link_model="hetero", graph_seed=4,
+              availability=0.9, p_stale=0.1, max_staleness=2,
+              p_link_drop=0.0)
+    m = 12
+    data = client_datasets_cifar(jax.random.PRNGKey(0), m, num_classes=10,
+                                 classes_per_client=2, samples_per_class=20,
+                                 image_size=16)
+    train = {"images": data["train_x"], "labels": data["train_y"]}
+
+    def run(sparse):
+        fl = FLConfig(num_clients=m, peers_per_round=3, batch_size=8,
+                      client_sample_ratio=0.5, epochs_extractor=1,
+                      epochs_header=1, probe_size=8,
+                      comms=_cfg("hier_ring", **kw, sparse=sparse))
+        strat = make_strategy("pfeddst", tiny_cnn, fl, 1)
+        state = strat.init(jax.random.PRNGKey(1))
+        for r in range(2):
+            state, metrics = strat.round(
+                state, train, jax.random.fold_in(jax.random.PRNGKey(2), r))
+        return jax.tree_util.tree_map(np.asarray, state), metrics
+
+    sd, md = run(False)
+    ss, ms = run(True)
+    for a, b in zip(jax.tree_util.tree_leaves(sd),
+                    jax.tree_util.tree_leaves(ss)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(np.asarray(md["select_mask"]),
+                                  np.asarray(ms["select_mask"]))
+
+
+# ---------------------------------------------------------------------------
+# large: M = 65536 — selection + gossip round at O(M·deg) memory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.large
+def test_large_population_round_memory_is_linear():
+    """One M=65536 selection + one constant-degree gossip mix round on
+    the packed fabric, with a COMPILED peak-memory assertion: XLA's
+    memory analysis for the jitted fabric round must stay orders of
+    magnitude under the dense fabric's 4·M² cost matrix alone — the
+    O(M·deg) acceptance bar. Blocked jnp impls only (no Pallas)."""
+    from repro.kernels.gossip_mix import gossip_mix_blocked
+
+    m, k, feat = 65536, 4, 64
+    fab = make_fabric(
+        CommsConfig(topology="hier_ring", hier_cluster=16,
+                    link_model="hetero", sparse=True), m)
+    d = int(fab.nbr_idx.shape[1])
+    assert d <= 4                      # constant-degree topology
+    # resident packed state is O(M·deg)
+    fabric_bytes = (fab.nbr_idx.nbytes + fab.nbr_static.nbytes
+                    + fab.slot_cost.nbytes + fab.edge_cost.nbytes)
+    assert fabric_bytes < 64 * m * d   # small constant per slot
+
+    def fabric_round(key, headers, last, s_l, state):
+        slot_mask, _, _ = fab.round_slots(key)
+        vals, idx, _ = score_topk_sparse(
+            headers, last, s_l, jnp.int32(7), nbr_idx=fab.nbr_idx,
+            nbr_valid=slot_mask, alpha=1.0, lam=0.5,
+            comm_cost=fab.slot_cost, k=k)
+        sel = vals > NEG / 2
+        inv = 1.0 / (jnp.sum(sel, axis=1) + 1.0)
+        idx_mix = jnp.concatenate(
+            [jnp.arange(m, dtype=idx.dtype)[:, None], idx], axis=1)
+        w_mix = jnp.concatenate(
+            [inv[:, None], jnp.where(sel, inv[:, None], 0.0)], axis=1)
+        return gossip_mix_blocked(state, idx_mix, w_mix), idx, sel
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    headers = jax.random.normal(ks[0], (m, 32), jnp.float32)
+    last = jax.random.randint(ks[1], (m, d), -1, 8)
+    s_l = jax.random.uniform(ks[2], (m, d), maxval=3.0)
+    state = jax.random.normal(ks[3], (m, feat), jnp.float32)
+
+    lowered = jax.jit(fabric_round).lower(
+        jax.random.PRNGKey(1), headers, last, s_l, state)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    peak = int(mem.temp_size_in_bytes + mem.output_size_in_bytes
+               + mem.argument_size_in_bytes)
+    dense_cost_bytes = 4 * m * m
+    # the whole round — inputs, outputs, temps — stays far below even
+    # ONE dense (M, M) f32 matrix
+    assert peak < dense_cost_bytes // 8, (peak, dense_cost_bytes)
+    assert peak < 1 << 30              # and under 1 GiB absolute
+
+    mixed, idx, sel = compiled(jax.random.PRNGKey(1), headers, last,
+                               s_l, state)
+    jax.block_until_ready(mixed)
+    assert mixed.shape == (m, feat)
+    # every selected peer is a true topology neighbor
+    idx_np, sel_np = np.asarray(idx), np.asarray(sel)
+    rows = np.repeat(np.arange(m), k)[sel_np.ravel()]
+    cols = idx_np.ravel()[sel_np.ravel()]
+    keys = rows.astype(np.int64) * m + cols
+    all_keys = fab.topo.edge_rows().astype(np.int64) * m + fab.topo.indices
+    pos = np.searchsorted(all_keys, keys)
+    assert (all_keys[np.clip(pos, 0, len(all_keys) - 1)] == keys).all()
+    # per-edge accounting round-trips on the selected pairs
+    edge_active = np.zeros(fab.topo.num_edges, bool)
+    edge_active[pos] = True
+    stats = fab.account(edge_active, 1 << 10)
+    assert stats.messages == len(rows)
